@@ -1,0 +1,52 @@
+"""Shared benchmark plumbing: CSV emission + per-model cost models."""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import CommModel, ComputeModel, knee_model, linear_model
+from repro.core.traffic import ROUTERS
+
+# Paper setup (§4.1): 8 GPUs, circuit-switched fabric, 10ns reconfiguration
+# (Sirius-class), RTX-PRO-6000-profiled knee compute model (250us floor).
+N_RANKS = 8
+LINK_GBPS = 400.0
+FLOOR_US = 250.0
+EFF_TFLOPS = 300.0  # effective expert-GEMM throughput on the linear tail
+
+COMM = CommModel.from_hardware(link_gbps=LINK_GBPS, d_model=6144, reconf_us=0.01)
+KNEE = knee_model(floor_us=FLOOR_US, knee_tokens=256)
+LINEAR = linear_model()
+
+
+def model_costs(model: str) -> tuple[CommModel, ComputeModel, ComputeModel]:
+    """(comm, knee-compute, linear-compute) parameterized by the model's
+    d_model (token bytes) and per-expert d_ff (GEMM slope)."""
+    r = ROUTERS[model]
+    comm = CommModel.from_hardware(
+        link_gbps=LINK_GBPS, d_model=r.d_model, reconf_us=0.01
+    )
+    slope = r.expert_us_per_token(eff_tflops=EFF_TFLOPS)
+    knee = ComputeModel(floor_us=FLOOR_US, per_token_us=slope, name=f"knee-{model}")
+    lin = ComputeModel(floor_us=0.0, per_token_us=slope, name=f"linear-{model}")
+    return comm, knee, lin
+
+ROWS: list[str] = []
+
+
+def emit(name: str, value: float, derived: str = "") -> None:
+    """Emit one CSV row: ``name,us_per_call,derived``."""
+    row = f"{name},{value:.3f},{derived}"
+    ROWS.append(row)
+    print(row)
+
+
+def timed(fn, *args, repeats: int = 3, **kwargs):
+    """Wall-time a host-side call (planning-cost benchmarks)."""
+    best = float("inf")
+    out = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kwargs)
+        best = min(best, (time.perf_counter() - t0) * 1e6)
+    return out, best

@@ -1,0 +1,58 @@
+"""Figure 2: decomposition structure — BvN fragments, MW stays dense.
+
+For Mixtral-8x22B-style inference traffic: number of matchings, token mass
+per matching, and BvN coefficient sizes; plus host-side planning cost
+(Jonker-Volgenant is O(n^3) per matching).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.core import decompose, gen_trace
+
+
+def run() -> None:
+    mats = gen_trace("mixtral-8x22b", "speed", iterations=16, seed=0)
+
+    stats = {s: {"phases": [], "min_tokens": [], "med_tokens": []} for s in
+             ("bvn", "maxweight", "bvn-bottleneck", "shift")}
+    bvn_coeffs = []
+    for m in mats:
+        for strat in stats:
+            d = decompose(m, strat)
+            per_phase = [p.tokens_sent for p in d.phases]
+            stats[strat]["phases"].append(d.num_phases)
+            stats[strat]["min_tokens"].append(min(per_phase))
+            stats[strat]["med_tokens"].append(float(np.median(per_phase)))
+            if strat == "bvn":
+                bvn_coeffs.extend(d.meta["coefficients"])
+
+    for strat, s in stats.items():
+        emit(f"fig2.{strat}.mean_matchings", float(np.mean(s["phases"])), "count")
+        emit(f"fig2.{strat}.max_matchings", float(np.max(s["phases"])), "count")
+        emit(
+            f"fig2.{strat}.median_tokens_per_matching",
+            float(np.mean(s["med_tokens"])),
+            "tokens",
+        )
+        emit(
+            f"fig2.{strat}.min_tokens_per_matching",
+            float(np.mean(s["min_tokens"])),
+            "tokens",
+        )
+
+    coeffs = np.array(bvn_coeffs)
+    emit("fig2.bvn.frac_coeffs_below_5pct", float((coeffs < 0.05).mean()), "fraction")
+    emit("fig2.bvn.min_coeff", float(coeffs.min()), "lambda")
+
+    # Planning cost (host side): one decomposition of one iteration.
+    _, us_mw = timed(decompose, mats[0], "maxweight")
+    _, us_bvn = timed(decompose, mats[0], "bvn")
+    emit("fig2.plan_cost.maxweight", us_mw, "us-host")
+    emit("fig2.plan_cost.bvn", us_bvn, "us-host")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,68 @@
+"""Figure 3: MoE forward makespan, MMLU-like small-prompt workload.
+
+Strategies x {overlap, no-overlap} x {knee, linear} compute models, for
+the three router configs the paper evaluates.  Expected qualitative
+ordering (paper §4.2): BvN+overlap worst; static ring competitive; the
+knee model punishes fragmentation while the linear model does not.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, model_costs
+from repro.core import (
+    decompose,
+    gen_trace,
+    simulate_decomposition,
+    simulate_ideal,
+    simulate_sequential,
+)
+
+MODELS = ("mixtral-8x7b", "mixtral-8x22b", "deepseek-moe-16b")
+STRATS = ("bvn", "maxweight")
+
+
+def makespans(model: str, workload: str, compute, comm, *, iterations: int = 24, seed: int = 0):
+    mats = gen_trace(model, workload, iterations=iterations, seed=seed)
+    rows: dict[str, list[float]] = {}
+
+    def add(key, val):
+        rows.setdefault(key, []).append(val)
+
+    for m in mats:
+        add("ring-seq", simulate_sequential(m, compute, comm).makespan_us)
+        add("ideal", simulate_ideal(m, compute, comm).makespan_us)
+        for strat in STRATS:
+            d = decompose(m, strat)
+            local = d.meta["local_tokens"]
+            for ovl in (True, False):
+                r = simulate_decomposition(
+                    d, compute, comm, overlap=ovl, local_tokens=local
+                )
+                add(f"{strat}{'+ovl' if ovl else ''}", r.makespan_us)
+    return {k: float(np.mean(v)) for k, v in rows.items()}
+
+
+def run(fig: str = "fig3", workload: str = "mmlu") -> None:
+    for model in MODELS:
+        comm, knee, lin = model_costs(model)
+        for cm_name, cm in (("knee", knee), ("linear", lin)):
+            res = makespans(model, workload, cm, comm)
+            for strat, us in sorted(res.items()):
+                emit(f"{fig}.{model}.{cm_name}.{strat}", us, "us-makespan")
+            # headline ratios
+            emit(
+                f"{fig}.{model}.{cm_name}.mw_vs_ideal",
+                res["maxweight+ovl"] / res["ideal"],
+                "ratio",
+            )
+            emit(
+                f"{fig}.{model}.{cm_name}.bvn_ovl_vs_ring",
+                res["bvn+ovl"] / res["ring-seq"],
+                "ratio",
+            )
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,37 @@
+"""Figure 4: MoE forward makespan, SPEED-bench-like large-prompt workload.
+
+Same grid as Figure 3 but with ~2k-token prompts: large expert batches
+amortize the knee, so MW+overlap should approach/beat the ideal baseline
+while BvN keeps paying fragmentation.  Also sweeps the beyond-paper
+ordering heuristics (§3.3 flow-shop) on top of MW.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, model_costs
+from benchmarks.fig3_small_batch import run as _run_grid
+from repro.core import decompose, gen_trace, order_phases, simulate_decomposition
+
+
+def run() -> None:
+    _run_grid(fig="fig4", workload="speed")
+
+    # Beyond-paper: matching-order heuristics on MW (knee model).
+    comm, knee, _ = model_costs("mixtral-8x22b")
+    mats = gen_trace("mixtral-8x22b", "speed", iterations=24, seed=7)
+    for how in ("asis", "lpt", "spt", "johnson3"):
+        vals = []
+        for m in mats:
+            d = order_phases(decompose(m, "maxweight"), how)
+            vals.append(
+                simulate_decomposition(
+                    d, knee, comm, local_tokens=d.meta["local_tokens"]
+                ).makespan_us
+            )
+        emit(f"fig4.order.{how}", float(np.mean(vals)), "us-makespan")
+
+
+if __name__ == "__main__":
+    run()

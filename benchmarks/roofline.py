@@ -1,0 +1,154 @@
+"""§Roofline: three-term roofline per (arch x shape x mesh) from dry-run
+artifacts (reports/dryrun/<mesh>/<arch>.<cell>[.<dispatch>].json).
+
+  compute    = HLO_FLOPs_per_device / peak_FLOPs        (197 TFLOP/s bf16)
+  memory     = HLO_bytes_per_device / HBM_bw            (819 GB/s)
+  collective = wire_bytes_per_device / link_bw          (~50 GB/s/link ICI)
+
+FLOPs/bytes are the loop-aware analyzer numbers (while-body x trip count —
+see repro.launch.hlo); collective wire bytes use the ring model with
+sparse-permute pair fractions.  MODEL_FLOPS = 6·N_active·D for train,
+2·N_active·D_new for serve cells (fwd only), so the ratio
+MODEL/HLO exposes remat + masked-attention + capacity-padding waste.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--mesh 16x16]
+Emits CSV rows + a markdown table at reports/roofline_<mesh>.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12  # bf16 / chip (v5e)
+HBM_BW = 819e9  # B/s
+LINK_BW = 50e9  # B/s per ICI link
+
+REPORTS = os.path.join(os.path.dirname(__file__), "..", "reports")
+
+
+def model_flops_per_device(rec: dict) -> float:
+    from repro.configs import get_config
+    from repro.launch.shapes import CELLS
+
+    cfg = get_config(rec["arch"])
+    cell = CELLS[rec["cell"]]
+    n_active = cfg.active_param_count()
+    n_dev = rec["n_devices"]
+    if cell.mode == "train":
+        tokens = cell.global_batch * cell.seq_len
+        return 6.0 * n_active * tokens / n_dev
+    if cell.mode == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        return 2.0 * n_active * tokens / n_dev
+    # decode: one token per sequence
+    return 2.0 * n_active * cell.global_batch / n_dev
+
+
+def analyze(rec: dict) -> dict:
+    t_comp = rec["flops_per_device"] / PEAK_FLOPS
+    t_mem = rec["bytes_per_device"] / HBM_BW
+    t_coll = rec["collectives"].get("wire_total", 0) / LINK_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dom = max(terms, key=terms.get)
+    mf = model_flops_per_device(rec)
+    useful = mf / rec["flops_per_device"] if rec["flops_per_device"] else float("nan")
+    bound = max(terms.values())
+    frac = t_comp / bound if bound > 0 else float("nan")
+    wire = rec["collectives"].get("wire", {})
+    top_coll = max(wire, key=wire.get) if wire else "-"
+    hints = {
+        "compute": (
+            f"compute-bound: raise MODEL/HLO ratio ({useful:.2f}) — remat "
+            "policy, causal-skip attention (Pallas flash), less capacity padding"
+        ),
+        "memory": (
+            "memory-bound: shrink HBM traffic — fuse/kernelize hot loops, "
+            "bf16 intermediates, bigger arithmetic intensity per pass"
+        ),
+        "collective": (
+            f"collective-bound (top: {top_coll}): cut wire bytes — scheduled "
+            "sparse dispatch, reduce-scatter instead of all-reduce, fewer "
+            "FSDP regathers, hierarchical pod-aware schedules"
+        ),
+    }
+    return {
+        "arch": rec["arch"],
+        "cell": rec["cell"],
+        "mesh": rec["mesh"],
+        "dispatch": rec.get("dispatch", "n/a"),
+        "compute_s": t_comp,
+        "memory_s": t_mem,
+        "collective_s": t_coll,
+        "dominant": dom,
+        "roofline_fraction": frac,
+        "model_flops": mf,
+        "hlo_flops": rec["flops_per_device"],
+        "useful_ratio": useful,
+        "hint": hints[dom],
+    }
+
+
+def run(mesh: str = "16x16", dispatch_suffix: str = "") -> list[dict]:
+    pat = os.path.join(REPORTS, "dryrun", mesh, f"*{dispatch_suffix}.json")
+    rows = []
+    for path in sorted(glob.glob(pat)):
+        with open(path) as f:
+            rec = json.load(f)
+        if not rec.get("ok"):
+            continue
+        # skip dispatch-suffixed files when scanning baselines (cell name
+        # is the last dot-component for baselines; arch names may contain
+        # dots, e.g. qwen2-1.5b)
+        base = os.path.basename(path)[: -len(".json")]
+        from repro.launch.shapes import CELLS
+
+        if not dispatch_suffix and not any(
+            base.endswith("." + c) for c in CELLS
+        ):
+            continue
+        rows.append(analyze(rec))
+    return rows
+
+
+def emit_markdown(rows: list[dict], mesh: str) -> str:
+    lines = [
+        f"### Roofline — mesh {mesh} (197 TF/s, 819 GB/s HBM, 50 GB/s/link)",
+        "",
+        "| arch | cell | compute s | memory s | collective s | dominant | "
+        "roofline frac | MODEL/HLO | note |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['cell']} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | {r['dominant']} | "
+            f"{r['roofline_fraction']:.2f} | {r['useful_ratio']:.2f} | "
+            f"{r['hint'][:60]}... |"
+        )
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--dispatch", default="", help="suffix, e.g. .scheduled")
+    args = ap.parse_args()
+    rows = run(args.mesh, args.dispatch)
+    for r in rows:
+        print(
+            f"roofline.{r['arch']}.{r['cell']},{max(r['compute_s'], r['memory_s'], r['collective_s'])*1e6:.0f},"
+            f"dom={r['dominant']};frac={r['roofline_fraction']:.2f};useful={r['useful_ratio']:.2f}"
+        )
+    md = emit_markdown(rows, args.mesh)
+    out = os.path.join(REPORTS, f"roofline_{args.mesh}{args.dispatch}.md")
+    os.makedirs(REPORTS, exist_ok=True)
+    with open(out, "w") as f:
+        f.write(md + "\n")
+    print(f"# wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,99 @@
+"""End-to-end driver: train a ~180M-param MoE transformer for a few
+hundred steps with the full production substrate — synthetic data
+pipeline, AdamW + cosine schedule, remat, async checkpointing, and
+fault-tolerant resume.
+
+    PYTHONPATH=src python examples/train_moe.py --steps 200
+
+On a multi-device host (XLA_FLAGS=--xla_force_host_platform_device_count=8)
+pass --mesh to exercise distributed EP with the paper's scheduled dispatch.
+"""
+
+import argparse
+import dataclasses
+import logging
+
+from repro.configs.base import ModelConfig, MoECfg
+from repro.data import DataConfig
+from repro.models import Model
+from repro.train import TrainLoopConfig, train_loop
+
+logging.basicConfig(level=logging.INFO, format="%(message)s")
+
+
+def small_moe(dispatch: str = "dense") -> ModelConfig:
+    """~180M params: mixtral-flavored, laptop-trainable."""
+    return ModelConfig(
+        name="moe-180m",
+        family="moe",
+        n_layers=12,
+        d_model=512,
+        n_heads=8,
+        n_kv_heads=2,
+        d_ff=1024,
+        vocab_size=32000,
+        moe=MoECfg(n_experts=8, top_k=2, d_ff_expert=1024, dispatch=dispatch),
+        remat="none",
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt", default="/tmp/repro_example_ckpt")
+    ap.add_argument("--mesh", action="store_true", help="use all local devices")
+    args = ap.parse_args()
+
+    cfg = small_moe()
+    model = Model(cfg)
+    print(f"{cfg.name}: {cfg.param_count()/1e6:.0f}M params "
+          f"({cfg.active_param_count()/1e6:.0f}M active)")
+
+    data_cfg = DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq, global_batch=args.batch
+    )
+    loop_cfg = TrainLoopConfig(
+        steps=args.steps,
+        ckpt_dir=args.ckpt,
+        ckpt_every=max(args.steps // 4, 10),
+        peak_lr=3e-4,
+        warmup=max(args.steps // 10, 10),
+        log_every=10,
+    )
+
+    if args.mesh:
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from repro.parallel import axis_rules
+
+        n = jax.device_count()
+        mesh = jax.make_mesh((max(n // 4, 1), min(n, 4)), ("data", "model"))
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, dispatch="a2a")
+        )
+        model = Model(cfg)
+
+        def shard_batch(b):
+            return {
+                k: jax.device_put(
+                    v, NamedSharding(mesh, P("data", *([None] * (v.ndim - 1))))
+                )
+                for k, v in b.items()
+            }
+
+        with axis_rules(mesh):
+            res = train_loop(model, data_cfg, loop_cfg, shard_batch=shard_batch)
+    else:
+        res = train_loop(model, data_cfg, loop_cfg)
+
+    first, last = res["history"][0]["loss"], res["history"][-1]["loss"]
+    print(f"\nloss {first:.3f} -> {last:.3f} over {res['final_step']} steps")
+    assert last < first, "training did not reduce loss"
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Architecture registry: importing this package registers all configs.
+
+``get_config(name)`` / ``ARCHS`` give access; ``smoke_config(cfg)``
+produces the reduced same-family variant used by CPU smoke tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import ARCHS, ModelConfig, MoECfg, get_config, register
+
+# registration side effects
+from repro.configs import (  # noqa: F401
+    dbrx_132b,
+    granite_3_8b,
+    granite_34b,
+    h2o_danube_3_4b,
+    internvl2_26b,
+    jamba_1_5_large,
+    mixtral_8x7b,
+    musicgen_large,
+    qwen2_1_5b,
+    qwen3_moe_235b,
+    rwkv6_7b,
+)
+
+# The ten assigned architectures (mixtral-8x7b is extra, for examples).
+ASSIGNED = (
+    "rwkv6-7b",
+    "h2o-danube-3-4b",
+    "granite-34b",
+    "granite-3-8b",
+    "qwen2-1.5b",
+    "jamba-1.5-large-398b",
+    "dbrx-132b",
+    "qwen3-moe-235b-a22b",
+    "internvl2-26b",
+    "musicgen-large",
+)
+
+
+def smoke_config(cfg: ModelConfig | str) -> ModelConfig:
+    """Reduced same-family config: tiny widths/depth, same layer pattern.
+
+    Keeps every structural feature (GQA ratio, SWA, MoE top-k, hybrid
+    interleave, frontend) so one CPU forward/train step exercises the same
+    code paths as the full model."""
+    if isinstance(cfg, str):
+        cfg = get_config(cfg)
+    kv = max(1, cfg.n_kv_heads * 4 // cfg.n_heads)
+    moe = cfg.moe
+    if moe is not None:
+        moe = dataclasses.replace(
+            moe,
+            n_experts=min(moe.n_experts, 8),
+            top_k=min(moe.top_k, 2),
+            d_ff_expert=64,
+        )
+    return dataclasses.replace(
+        cfg,
+        name=cfg.name + "-smoke",
+        n_layers=2 * cfg.period,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=kv,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=256,
+        sliding_window=8 if cfg.sliding_window else None,
+        moe=moe,
+        rwkv_head_dim=16,
+        frontend_tokens=4 if cfg.frontend != "none" else 0,
+        remat="none",
+    )
+
+
+__all__ = [
+    "ARCHS",
+    "ASSIGNED",
+    "ModelConfig",
+    "MoECfg",
+    "get_config",
+    "register",
+    "smoke_config",
+]

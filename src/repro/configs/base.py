@@ -1,0 +1,149 @@
+"""Model configuration dataclasses + the architecture registry."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+__all__ = ["MoECfg", "HybridCfg", "ModelConfig", "register", "get_config", "ARCHS"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoECfg:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    every: int = 1  # MoE FFN on layers where (idx % every == every-1); 1 = all
+    capacity_factor: float = 1.25
+    router_norm_topk: bool = True  # renormalize gates over the selected top-k
+    # dispatch mode: dense (einsum, replicated-EP), a2a (single all_to_all),
+    # scheduled (decomposition -> ppermute phases; the paper's technique)
+    dispatch: Literal["dense", "a2a", "scheduled"] = "dense"
+    schedule_strategy: Literal["maxweight", "shift"] = "maxweight"
+    # 2D expert sharding: expert FFN width sharded over 'data' (kills the
+    # per-microbatch ZeRO-3 expert-weight regathers; tokens are
+    # all-gathered/reduce-scattered around the expert GEMM instead).
+    expert_2d: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridCfg:
+    """Jamba-style interleave: one attention layer per ``period`` layers,
+    the rest Mamba."""
+
+    period: int = 8
+    attn_index: int = 0  # which layer within the period is attention
+    d_state: int = 16
+    conv_width: int = 4
+    expand: int = 2  # d_inner = expand * d_model
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: Literal["dense", "moe", "hybrid", "ssm", "vlm", "audio"]
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int | None = None  # default d_model // n_heads
+    # attention flavor
+    rope_theta: float = 10_000.0
+    qkv_bias: bool = False
+    sliding_window: int | None = None
+    pos_embedding: Literal["rope", "sinusoidal"] = "rope"
+    # block flavor
+    block: Literal["attn", "rwkv6"] = "attn"  # per-layer mixer for non-hybrid
+    moe: MoECfg | None = None
+    hybrid: HybridCfg | None = None
+    # modality frontend stub: inputs include precomputed embeddings
+    frontend: Literal["none", "patch", "frames"] = "none"
+    frontend_tokens: int = 0  # e.g. 256 vision patches prepended
+    ffn_gelu: bool = False  # 2-matrix GELU MLP (GPT-BigCode) vs SwiGLU
+    # numerics / misc
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    rwkv_head_dim: int = 64
+    # long-context policy: does the arch support 500k decode?
+    subquadratic: bool = False
+    # remat: 'none' | 'block' | 'full'
+    remat: str = "block"
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def layer_kind(self, idx: int) -> str:
+        """'attn' | 'mamba' | 'rwkv6' for layer idx."""
+        if self.hybrid is not None:
+            return "attn" if idx % self.hybrid.period == self.hybrid.attn_index else "mamba"
+        return self.block
+
+    def ffn_kind(self, idx: int) -> str:
+        """'dense' | 'moe' for layer idx (rwkv6 uses its own channel-mix)."""
+        if self.moe is not None and idx % self.moe.every == self.moe.every - 1:
+            return "moe"
+        return "dense"
+
+    @property
+    def period(self) -> int:
+        """Layers per scan step (see models/stack.py)."""
+        if self.hybrid is not None:
+            return self.hybrid.period
+        return self.moe.every if self.moe is not None else 1
+
+    @property
+    def n_periods(self) -> int:
+        assert self.n_layers % self.period == 0, (self.n_layers, self.period)
+        return self.n_layers // self.period
+
+    def param_count(self) -> int:
+        """Approximate parameter count (embeddings + blocks)."""
+        d, hd = self.d_model, self.resolved_head_dim
+        total = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        for i in range(self.n_layers):
+            kind = self.layer_kind(i)
+            if kind == "attn":
+                total += d * hd * (self.n_heads + 2 * self.n_kv_heads) + self.n_heads * hd * d
+            elif kind == "mamba":
+                di = self.hybrid.expand * d
+                total += d * 2 * di + di * self.hybrid.conv_width + 2 * di * self.hybrid.d_state + di * d + di
+            elif kind == "rwkv6":
+                total += 4 * d * d + d * self.rwkv_head_dim  # r,k,v,g,o approx
+            if kind == "rwkv6":
+                total += 2 * d * self.d_ff  # channel-mix (k, v)
+            elif self.ffn_kind(i) == "moe":
+                total += self.moe.n_experts * 3 * d * self.moe.d_ff_expert + d * self.moe.n_experts
+            else:
+                total += (2 if self.ffn_gelu else 3) * d * self.d_ff
+        return total
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE counts top_k experts)."""
+        if self.moe is None:
+            return self.param_count()
+        d = self.d_model
+        total = self.param_count()
+        for i in range(self.n_layers):
+            if self.ffn_kind(i) == "moe":
+                total -= (self.moe.n_experts - self.moe.top_k) * 3 * d * self.moe.d_ff_expert
+        return total
+
+
+ARCHS: dict[str, ModelConfig] = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    ARCHS[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    # populate the registry
+    import repro.configs  # noqa: F401
+
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(ARCHS)}")
+    return ARCHS[name]

@@ -1,0 +1,17 @@
+"""Granite-34B-Code — llama-arch with MQA (kv=1) [arXiv:2405.04324]."""
+
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="granite-34b",
+        family="dense",
+        n_layers=88,
+        d_model=6144,
+        n_heads=48,
+        n_kv_heads=1,  # MQA -> decode cache sequence-sharded
+        d_ff=24576,
+        vocab_size=49152,
+        ffn_gelu=True,  # GPT-BigCode 2-matrix GELU MLP (-> ~34B params)
+    )
+)

@@ -1,0 +1,22 @@
+"""InternVL2-26B — InternViT frontend (stub) + InternLM2 backbone
+[arXiv:2404.16821].
+
+The ViT is a modality stub per the assignment: ``input_specs()`` provides
+256 precomputed patch embeddings prepended to the text sequence."""
+
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="internvl2-26b",
+        family="vlm",
+        n_layers=48,
+        d_model=6144,
+        n_heads=48,
+        n_kv_heads=8,
+        d_ff=16384,
+        vocab_size=92553,  # padded for vocab TP
+        frontend="patch",
+        frontend_tokens=256,
+    )
+)

@@ -1,0 +1,23 @@
+"""Jamba-1.5-Large 398B — Mamba+attention 7:1 interleave, MoE 16e top-2
+[arXiv:2403.19887].
+
+Period of 8 layers: attention at period index 4 (1:7 ratio), MoE FFN on
+every second layer.  MoE expert width follows the assigned d_ff."""
+
+from repro.configs.base import HybridCfg, ModelConfig, MoECfg, register
+
+CONFIG = register(
+    ModelConfig(
+        name="jamba-1.5-large-398b",
+        family="hybrid",
+        n_layers=72,
+        d_model=8192,
+        n_heads=64,
+        n_kv_heads=8,
+        d_ff=24576,
+        vocab_size=65536,
+        hybrid=HybridCfg(period=8, attn_index=4, d_state=16, conv_width=4, expand=2),
+        moe=MoECfg(n_experts=16, top_k=2, d_ff_expert=24576, every=2),
+        subquadratic=True,  # mamba O(1) state + only 9 attention layers
+    )
+)

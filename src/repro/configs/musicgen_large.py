@@ -1,0 +1,24 @@
+"""MusicGen-Large — decoder-only over EnCodec tokens [arXiv:2306.05284].
+
+EnCodec is a modality stub: conditioning frames arrive as precomputed
+embeddings; the sequence itself is EnCodec codes (vocab 2048).  MusicGen
+uses absolute sinusoidal positions, full MHA (kv=32), and no RoPE.  Text
+cross-attention conditioning is out of scope (DESIGN.md §4)."""
+
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="musicgen-large",
+        family="audio",
+        n_layers=48,
+        d_model=2048,
+        n_heads=32,
+        n_kv_heads=32,
+        d_ff=8192,
+        vocab_size=2048,
+        pos_embedding="sinusoidal",
+        frontend="frames",
+        frontend_tokens=256,
+    )
+)

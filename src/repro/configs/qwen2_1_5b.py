@@ -1,0 +1,23 @@
+"""Qwen2-1.5B — GQA with QKV bias [arXiv:2407.10671].
+
+12 heads do not divide the 16-way model axis: attention falls back to
+replication under the divisibility rule; FFN (8960) and vocab (151936)
+still TP-shard (DESIGN.md §4)."""
+
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="qwen2-1.5b",
+        family="dense",
+        n_layers=28,
+        d_model=1536,
+        n_heads=12,
+        n_kv_heads=2,
+        head_dim=128,
+        d_ff=8960,
+        vocab_size=151936,
+        qkv_bias=True,
+        tie_embeddings=True,  # qwen2-1.5b ties embeddings
+    )
+)

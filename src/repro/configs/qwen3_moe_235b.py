@@ -1,0 +1,22 @@
+"""Qwen3-MoE-235B-A22B — 128 experts top-8 [arXiv:2505.09388].
+
+The paper's primary integration target: 8 experts per device on the
+16-way EP axis; scheduled (decomposition-based) dispatch is the default
+here (see DESIGN.md §2.2)."""
+
+from repro.configs.base import ModelConfig, MoECfg, register
+
+CONFIG = register(
+    ModelConfig(
+        name="qwen3-moe-235b-a22b",
+        family="moe",
+        n_layers=94,
+        d_model=4096,
+        n_heads=64,
+        n_kv_heads=4,
+        head_dim=128,  # qwen3 uses explicit head_dim 128 (q/k/v width 8192)
+        d_ff=1536,  # per-expert FFN width
+        vocab_size=151936,
+        moe=MoECfg(n_experts=128, top_k=8, d_ff_expert=1536, every=1),
+    )
+)

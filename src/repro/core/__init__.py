@@ -1,0 +1,75 @@
+"""Paper core: traffic-matrix decompositions, scheduling, and the
+dispatch-compute-combine simulator.
+
+Public API:
+    decompose(matrix, strategy)            -> Decomposition
+    order_phases(decomp, how)              -> Decomposition
+    plan_schedule(decomp, ...)             -> A2ASchedule (for the JAX runtime)
+    simulate_decomposition / _sequential / _ideal
+    gen_trace / traffic_matrix             (synthetic routing traces)
+    knee_model / linear_model / CommModel  (cost models)
+"""
+
+from repro.core.baselines import ideal_a2a_tokens, ring_a2a_tokens
+from repro.core.bvn import bvn_coefficients, bvn_decompose
+from repro.core.cost_models import (
+    CommModel,
+    ComputeModel,
+    fit_knee,
+    knee_model,
+    linear_model,
+)
+from repro.core.decompose import STRATEGIES, decompose
+from repro.core.hierarchical import (
+    hierarchical_decompose,
+    simulate_hierarchical,
+    split_traffic,
+)
+from repro.core.maxweight import maxweight_decompose
+from repro.core.schedule import A2ASchedule, order_phases, plan_schedule, ring_schedule
+from repro.core.selector import ScheduleEntry, ScheduleSelector
+from repro.core.simulator import (
+    SimResult,
+    simulate_decomposition,
+    simulate_ideal,
+    simulate_sequential,
+)
+from repro.core.sinkhorn import is_doubly_stochastic, sinkhorn
+from repro.core.traffic import ROUTERS, WORKLOADS, gen_trace, traffic_matrix
+from repro.core.types import Decomposition, Phase
+
+__all__ = [
+    "A2ASchedule",
+    "CommModel",
+    "ComputeModel",
+    "Decomposition",
+    "Phase",
+    "ROUTERS",
+    "STRATEGIES",
+    "ScheduleEntry",
+    "ScheduleSelector",
+    "SimResult",
+    "WORKLOADS",
+    "bvn_coefficients",
+    "bvn_decompose",
+    "decompose",
+    "fit_knee",
+    "gen_trace",
+    "hierarchical_decompose",
+    "ideal_a2a_tokens",
+    "is_doubly_stochastic",
+    "knee_model",
+    "linear_model",
+    "maxweight_decompose",
+    "order_phases",
+    "plan_schedule",
+    "ring_a2a_tokens",
+    "ring_schedule",
+    "simulate_decomposition",
+    "simulate_ideal",
+    "simulate_hierarchical",
+    "simulate_sequential",
+    "sinkhorn",
+    "split_traffic",
+    "traffic_matrix",
+]

@@ -1,0 +1,113 @@
+"""Compute/communication cost models for the simulator (paper §4.1, Fig 1).
+
+The paper profiles MoE expert execution on RTX PRO 6000 GPUs and observes
+a *knee*: execution time is ~linear beyond ~256 tokens, but below that a
+fixed ~250us overhead (kernel launch, synchronization, scheduling)
+dominates.  We model this as
+
+    T(b) = 0                                   if b == 0
+    T(b) = max(floor_us, per_token_us * b)     otherwise
+
+with ``floor_us = 250`` and ``per_token_us`` calibrated so that the knee
+sits at ``knee_tokens`` (i.e. per_token_us = floor_us / knee_tokens).
+A purely linear model (``floor_us = 0``) isolates decomposition effects
+from hardware overheads, mirroring the paper's "linear compute cost
+model".  The knee parameters are configurable and can be re-fit from a
+measured profile via ``fit_knee``.
+
+Communication time is ``bytes / bandwidth``; we work in token units and
+express bandwidth as tokens/us: ``token_bytes = d_model * dtype_bytes``
+(dispatch moves hidden-state vectors, not ids).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = ["ComputeModel", "knee_model", "linear_model", "fit_knee", "CommModel"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ComputeModel:
+    """Piecewise expert-compute model: max(floor, slope*b) for b > 0."""
+
+    floor_us: float
+    per_token_us: float
+    name: str = "knee"
+
+    def __call__(self, tokens) -> np.ndarray | float:
+        t = np.asarray(tokens, dtype=np.float64)
+        out = np.where(t > 0, np.maximum(self.floor_us, self.per_token_us * t), 0.0)
+        return float(out) if out.ndim == 0 else out
+
+
+def knee_model(
+    *, floor_us: float = 250.0, knee_tokens: int = 256, name: str = "profiled-knee"
+) -> ComputeModel:
+    """The paper's profiling-based model: 250us floor, knee at ~256 tokens."""
+    return ComputeModel(
+        floor_us=floor_us, per_token_us=floor_us / knee_tokens, name=name
+    )
+
+
+def linear_model(*, per_token_us: float | None = None) -> ComputeModel:
+    """Idealized linear scaling (no fixed overhead)."""
+    if per_token_us is None:
+        per_token_us = 250.0 / 256.0  # same slope as the default knee model
+    return ComputeModel(floor_us=0.0, per_token_us=per_token_us, name="linear")
+
+
+def fit_knee(batch_sizes: np.ndarray, times_us: np.ndarray) -> ComputeModel:
+    """Fit (floor, slope) to a measured profile by least squares on the
+    linear tail + median of the small-batch plateau."""
+    b = np.asarray(batch_sizes, dtype=np.float64)
+    t = np.asarray(times_us, dtype=np.float64)
+    order = np.argsort(b)
+    b, t = b[order], t[order]
+    # Tail slope: robust fit over the upper half of batch sizes.
+    half = len(b) // 2
+    slope = float(np.polyfit(b[half:], t[half:], 1)[0])
+    slope = max(slope, 1e-9)
+    # Floor: median time over points whose linear prediction is below it.
+    floor = float(np.median(t[: max(half, 1)]))
+    for _ in range(8):  # fixed-point: which points sit on the plateau?
+        plateau = t[slope * b < floor]
+        if plateau.size == 0:
+            break
+        new_floor = float(np.median(plateau))
+        if abs(new_floor - floor) < 1e-9:
+            break
+        floor = new_floor
+    return ComputeModel(floor_us=floor, per_token_us=slope, name="fitted-knee")
+
+
+@dataclasses.dataclass(frozen=True)
+class CommModel:
+    """Link/NIC bandwidth in tokens per microsecond + reconfiguration delay.
+
+    Default matches the paper's setup: tokens are d_model-sized bf16
+    activations; bandwidth is per-NIC (circuit) bandwidth; reconfiguration
+    delay defaults to 10ns (Sirius-class) = 0.01us.
+    """
+
+    tokens_per_us: float
+    reconf_us: float = 0.01
+
+    @staticmethod
+    def from_hardware(
+        *,
+        link_gbps: float = 400.0,
+        d_model: int = 4096,
+        dtype_bytes: int = 2,
+        reconf_us: float = 0.01,
+    ) -> "CommModel":
+        bytes_per_token = d_model * dtype_bytes
+        bytes_per_us = link_gbps * 1e9 / 8 / 1e6
+        return CommModel(
+            tokens_per_us=bytes_per_us / bytes_per_token, reconf_us=reconf_us
+        )
+
+    def comm_us(self, tokens: float) -> float:
+        return float(tokens) / self.tokens_per_us

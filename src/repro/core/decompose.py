@@ -1,0 +1,68 @@
+"""Unified decomposition API.
+
+``decompose(matrix, strategy)`` dispatches to the implementations and
+handles the local-traffic (diagonal) split: circuits never carry
+rank-local tokens, so the fabric sees the off-diagonal matrix and the
+diagonal is returned via ``meta["local_tokens"]`` for the simulator's
+compute queues.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.bvn import bvn_decompose
+from repro.core.maxweight import maxweight_decompose
+from repro.core.types import Decomposition, Phase
+
+__all__ = ["decompose", "STRATEGIES"]
+
+STRATEGIES = ("bvn", "bvn-bottleneck", "maxweight", "shift")
+
+
+def _shift_decompose(matrix: np.ndarray) -> Decomposition:
+    """Static shifted-ring unrolling: phase k sends i -> (i+k) mod n.
+
+    The uniform-traffic baseline every TPU/NCCL a2a effectively implements;
+    n-1 phases regardless of sparsity.
+    """
+    a = np.asarray(matrix, dtype=np.float64)
+    n = a.shape[0]
+    idx = np.arange(n)
+    phases = []
+    for k in range(1, n):
+        perm = (idx + k) % n
+        sent = a[idx, perm].copy()
+        phases.append(Phase(perm=perm, alloc=sent.copy(), sent=sent))
+    return Decomposition(matrix=a, phases=phases, strategy="shift", meta={})
+
+
+def decompose(
+    matrix: np.ndarray,
+    strategy: str,
+    *,
+    keep_diagonal: bool = False,
+    **kwargs,
+) -> Decomposition:
+    """Decompose a traffic matrix with the given strategy.
+
+    Unless ``keep_diagonal``, the diagonal (local tokens) is removed before
+    decomposition and stashed in ``meta["local_tokens"]``.
+    """
+    a = np.asarray(matrix, dtype=np.float64).copy()
+    local = np.zeros(a.shape[0])
+    if not keep_diagonal:
+        local = np.diag(a).copy()
+        np.fill_diagonal(a, 0.0)
+    if strategy == "bvn":
+        d = bvn_decompose(a, **kwargs)
+    elif strategy == "bvn-bottleneck":
+        d = bvn_decompose(a, bottleneck=True, **kwargs)
+    elif strategy == "maxweight":
+        d = maxweight_decompose(a, **kwargs)
+    elif strategy == "shift":
+        d = _shift_decompose(a)
+    else:
+        raise ValueError(f"unknown strategy {strategy!r}; one of {STRATEGIES}")
+    d.meta["local_tokens"] = local
+    return d

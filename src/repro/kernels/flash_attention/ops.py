@@ -1,0 +1,25 @@
+"""jit'd public wrapper for flash attention (interpret on CPU)."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+
+
+def flash_attention(
+    q, k, v, *, causal=True, window=None, block_q=256, block_k=256, interpret=None
+):
+    """q: [B, H, Sq, D]; k/v: [B, K, Skv, D] -> [B, H, Sq, D]."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return flash_attention_pallas(
+        q,
+        k,
+        v,
+        causal=causal,
+        window=window,
+        block_q=block_q,
+        block_k=block_k,
+        interpret=interpret,
+    )

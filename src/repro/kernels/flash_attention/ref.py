@@ -1,0 +1,32 @@
+"""Pure-jnp oracle: masked softmax attention with GQA + sliding window."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal=True, window=None):
+    """q: [B, H, Sq, D]; k/v: [B, K, Skv, D] -> [B, H, Sq, D].
+
+    Positions are aligned at the end: q position i corresponds to absolute
+    position (Skv - Sq + i), the standard training case is Sq == Skv.
+    """
+    b, h, sq, d = q.shape
+    kheads = k.shape[1]
+    g = h // kheads
+    qg = q.reshape(b, kheads, g, sq, d)
+    s = jnp.einsum("bkgsd,bktd->bkgst", qg, k).astype(jnp.float32)
+    s = s * (d**-0.5)
+    skv = k.shape[2]
+    qpos = jnp.arange(sq) + (skv - sq)
+    kpos = jnp.arange(skv)
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= qpos[:, None] - kpos[None, :] < window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bkgst,bktd->bkgsd", p.astype(v.dtype), v)
+    return out.reshape(b, h, sq, d)

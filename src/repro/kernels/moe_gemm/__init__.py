@@ -1,0 +1,4 @@
+from repro.kernels.moe_gemm.ops import moe_gemm
+from repro.kernels.moe_gemm.ref import moe_gemm_ref
+
+__all__ = ["moe_gemm", "moe_gemm_ref"]

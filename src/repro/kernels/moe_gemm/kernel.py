@@ -1,0 +1,78 @@
+"""Pallas TPU kernel: grouped expert SwiGLU GEMM — the MoE compute hot
+spot fed by the scheduled dispatch (DESIGN.md §2.2).
+
+Grid: (E, C/BC, F/BF) with the expert-FFN width F as the innermost
+(arbitrary/accumulation) axis.  Each step:
+
+    g   = x_blk @ w_gate_blk          [BC, BF]   (MXU)
+    u   = x_blk @ w_up_blk            [BC, BF]   (MXU)
+    h   = silu(g) * u                 (VPU, f32)
+    acc += h @ w_down_blk             [BC, d]    (MXU, f32 accumulator)
+
+VMEM working set (bf16, d=8192, BC=128, BF=128):
+    x 2MB + w_gate 2MB + w_up 2MB + w_down 2MB + acc(f32) 4MB = 12MB.
+All matmul dims are multiples of 128 (MXU-aligned).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, wg_ref, wu_ref, wd_ref, out_ref, acc_ref, *, n_fblocks):
+    fb = pl.program_id(2)
+
+    @pl.when(fb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[0]  # [BC, d]
+    g = jnp.dot(x, wg_ref[0], preferred_element_type=jnp.float32)
+    u = jnp.dot(x, wu_ref[0], preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(g) * u).astype(x.dtype)
+    acc_ref[...] += jnp.dot(h, wd_ref[0], preferred_element_type=jnp.float32)
+
+    @pl.when(fb == n_fblocks - 1)
+    def _flush():
+        out_ref[0] = acc_ref[...].astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_c", "block_f", "interpret")
+)
+def moe_gemm_pallas(
+    x,
+    w_gate,
+    w_up,
+    w_down,
+    *,
+    block_c: int = 128,
+    block_f: int = 128,
+    interpret: bool = True,
+):
+    e, c, d = x.shape
+    f = w_gate.shape[-1]
+    bc = min(block_c, c)
+    bf = min(block_f, f)
+    assert c % bc == 0 and f % bf == 0, (c, bc, f, bf)
+    n_fblocks = f // bf
+    grid = (e, c // bc, n_fblocks)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_fblocks=n_fblocks),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bc, d), lambda e, i, k: (e, i, 0)),
+            pl.BlockSpec((1, d, bf), lambda e, i, k: (e, 0, k)),
+            pl.BlockSpec((1, d, bf), lambda e, i, k: (e, 0, k)),
+            pl.BlockSpec((1, bf, d), lambda e, i, k: (e, k, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, d), lambda e, i, k: (e, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((e, c, d), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bc, d), jnp.float32)],
+        interpret=interpret,
+    )(x, w_gate, w_up, w_down)

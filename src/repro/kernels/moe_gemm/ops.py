@@ -1,0 +1,27 @@
+"""jit'd public wrapper for the grouped expert GEMM.
+
+On CPU (this container) the kernel body runs in ``interpret=True`` mode;
+on TPU pass ``interpret=False`` (the launcher does this automatically via
+``jax.default_backend()``).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.moe_gemm.kernel import moe_gemm_pallas
+
+
+def moe_gemm(x, w_gate, w_up, w_down, *, block_c=128, block_f=128, interpret=None):
+    """Grouped expert SwiGLU: x [E, C, d] -> [E, C, d]."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return moe_gemm_pallas(
+        x,
+        w_gate,
+        w_up,
+        w_down,
+        block_c=block_c,
+        block_f=block_f,
+        interpret=interpret,
+    )

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the grouped expert SwiGLU GEMM."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def moe_gemm_ref(x, w_gate, w_up, w_down):
+    """x: [E, C, d]; w_gate/w_up: [E, d, f]; w_down: [E, f, d] -> [E, C, d].
+
+    f32 accumulation, output in x.dtype — matches the kernel's numerics.
+    """
+    g = jnp.einsum("ecd,edf->ecf", x, w_gate, preferred_element_type=jnp.float32)
+    u = jnp.einsum("ecd,edf->ecf", x, w_up, preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(g) * u).astype(x.dtype)
+    out = jnp.einsum("ecf,efd->ecd", h, w_down, preferred_element_type=jnp.float32)
+    return out.astype(x.dtype)

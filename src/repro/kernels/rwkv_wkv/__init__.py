@@ -1,0 +1,4 @@
+from repro.kernels.rwkv_wkv.ops import wkv6
+from repro.kernels.rwkv_wkv.ref import wkv6_ref
+
+__all__ = ["wkv6", "wkv6_ref"]

@@ -1,0 +1,82 @@
+"""Pallas TPU kernel for the RWKV6 WKV recurrence.
+
+The recurrence is sequential in time, so the TPU adaptation blocks it:
+grid (B, H, T/BT) with the time axis as the arbitrary (sequential) axis
+and the per-head state S [D, D] living in VMEM scratch across time blocks
+— the state never round-trips to HBM between blocks, which is the entire
+point (HBM traffic drops from O(T·D²) to O(T·D + D²)).
+
+Inside a block the recurrence runs as a fori_loop over BT steps of rank-1
+updates; r/k/v/w block loads are [BT, D].  D = 64 (RWKV6 head size), so
+the S scratch is 16KB f32 — tiny; many heads pipeline in parallel grid
+cells.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, sfin_ref, s_ref, *, bt, nt):
+    it = pl.program_id(2)
+
+    @pl.when(it == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    u = u_ref[0].astype(jnp.float32)  # [D]
+
+    def step(t, _):
+        r_t = r_ref[0, 0, t].astype(jnp.float32)  # [D]
+        k_t = k_ref[0, 0, t].astype(jnp.float32)
+        v_t = v_ref[0, 0, t].astype(jnp.float32)
+        w_t = w_ref[0, 0, t].astype(jnp.float32)
+        s = s_ref[...]
+        kv = k_t[:, None] * v_t[None, :]  # [D, D]
+        y = ((s + u[:, None] * kv) * r_t[:, None]).sum(axis=0)  # [D]
+        y_ref[0, 0, t] = y.astype(y_ref.dtype)
+        s_ref[...] = w_t[:, None] * s + kv
+        return ()
+
+    jax.lax.fori_loop(0, bt, step, ())
+
+    @pl.when(it == nt - 1)
+    def _flush():
+        sfin_ref[0, 0] = s_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def wkv6_pallas(r, k, v, w, u, *, block_t: int = 64, interpret: bool = True):
+    b, h, t, d = r.shape
+    bt = min(block_t, t)
+    assert t % bt == 0, (t, bt)
+    nt = t // bt
+    grid = (b, h, nt)
+    spec = pl.BlockSpec((1, 1, bt, d), lambda b, h, it: (b, h, it, 0))
+    y, s_final = pl.pallas_call(
+        functools.partial(_kernel, bt=bt, nt=nt),
+        grid=grid,
+        in_specs=[
+            spec,
+            spec,
+            spec,
+            spec,
+            pl.BlockSpec((1, d), lambda b, h, it: (h, 0)),
+        ],
+        out_specs=[
+            spec,
+            pl.BlockSpec((1, 1, d, d), lambda b, h, it: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, t, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, d, d), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((d, d), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u)
+    return y, s_final

@@ -1,0 +1,14 @@
+"""jit'd public wrapper for the WKV6 kernel (interpret on CPU)."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.rwkv_wkv.kernel import wkv6_pallas
+
+
+def wkv6(r, k, v, w, u, *, block_t=64, interpret=None):
+    """r/k/v/w: [B, H, T, D]; u: [H, D] -> (y f32, final state f32)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return wkv6_pallas(r, k, v, w, u, block_t=block_t, interpret=interpret)

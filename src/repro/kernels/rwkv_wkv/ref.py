@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the WKV6 recurrence (scan form)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, w, u, s0=None):
+    """r/k/v/w: [B, H, T, D]; u: [H, D]; s0: [B, H, D, D] or None.
+
+        y_t = r_t . (S_{t-1} + diag(u) k_t v_t^T)
+        S_t = diag(w_t) S_{t-1} + k_t v_t^T
+
+    Returns (y [B, H, T, D] f32, S_final [B, H, D, D] f32)."""
+    b, h, t, d = r.shape
+    rf, kf, vf, wf = (x.astype(jnp.float32) for x in (r, k, v, w))
+    s = jnp.zeros((b, h, d, d), jnp.float32) if s0 is None else s0
+
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp  # [B, H, D]
+        kv = k_t[..., :, None] * v_t[..., None, :]
+        y = jnp.einsum("bhi,bhij->bhj", r_t, s + u[..., :, None] * kv)
+        s = w_t[..., :, None] * s + kv
+        return s, y
+
+    xs = tuple(x.transpose(2, 0, 1, 3) for x in (rf, kf, vf, wf))
+    s, ys = jax.lax.scan(step, s, xs)
+    return ys.transpose(1, 2, 0, 3), s

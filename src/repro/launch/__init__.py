@@ -1,0 +1,3 @@
+# Launch layer: production mesh, dry-run driver, roofline extraction,
+# train/serve entry points.  NOTE: importing this package must NOT touch
+# jax device state (dryrun.py sets XLA_FLAGS before any jax import).

@@ -1,0 +1,67 @@
+"""Per-mode sharding rule-sets and numerics policies (DESIGN.md §4/§5).
+
+TRAIN:
+  batch    -> (pod, data)           DP over pods and the data axis
+  fsdp     -> (data,)               ZeRO-3: weights/moments sharded over DP,
+                                    all-gathered at use (intra-pod only —
+                                    cross-pod traffic stays gradient-only)
+  seq_act  -> (model,)              Megatron-SP: the saved residual stream
+                                    is sequence-sharded, so remat+scan keep
+                                    per-device activation memory ~1/16
+  everything else: TP/EP over 'model' (DEFAULT_RULES)
+
+SERVE:
+  batch    -> (pod,)                decode batches replicate within a pod
+  fsdp     -> (data,)               + 'model' TP per tensor = 2D (data x
+                                    model) tensor parallelism: 398B bf16
+                                    weights fit at ~1.8 GB/chip
+  seq_act  -> (data,)               prefill activations sequence-sharded
+  seq_kv   -> (data, model)         32k/500k KV caches sharded on sequence
+
+Numerics: params/moments f32 below 100B parameters; bf16 params + bf16
+Adam moments at/above (2.4 TB optimizer+weights state for jamba-398B ->
+9.3 GB/chip over 256 chips).  Compute is bf16 everywhere, f32 reductions.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+BIG_PARAMS = 1e11
+
+
+def train_rules(*, expert_2d: bool = False) -> dict:
+    rules = {
+        "batch": ("pod", "data"),
+        "fsdp": ("data",),
+        "fsdp_moe": ("data",),
+        "seq_act": ("model",),
+    }
+    if expert_2d:
+        # 2D expert sharding: expert FFN width over 'data' (stationary —
+        # no ZeRO-3 regathers); the d-dim of expert weights stays local.
+        rules["fsdp_moe"] = None
+        rules["expert_mlp"] = ("data",)
+    return rules
+
+
+def serve_rules() -> dict:
+    return {
+        "batch": ("pod",),
+        "fsdp": ("data",),
+        "fsdp_moe": ("data",),
+        "seq_act": ("data",),
+        "seq_kv": ("data", "model"),
+    }
+
+
+def dtype_policy(cfg: ModelConfig) -> dict:
+    big = cfg.param_count() >= BIG_PARAMS
+    return {
+        "param_dtype": jnp.bfloat16 if big else jnp.float32,
+        "moment_dtype": jnp.bfloat16 if big else jnp.float32,
+        "serve_param_dtype": jnp.bfloat16,  # inference always serves bf16
+        "cache_dtype": jnp.bfloat16,
+    }

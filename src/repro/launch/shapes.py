@@ -1,0 +1,74 @@
+"""Assigned input-shape cells + ShapeDtypeStruct input specs.
+
+LM transformer shapes (per assignment):
+  train_4k     seq 4096,   global_batch 256   -> train_step
+  prefill_32k  seq 32768,  global_batch 32    -> serve prefill
+  decode_32k   seq 32768,  global_batch 128   -> serve_step (1 new token,
+                                                 KV cache of seq_len)
+  long_500k    seq 524288, global_batch 1     -> serve_step; sub-quadratic
+                                                 archs only (cfg.subquadratic)
+
+``input_specs`` returns ShapeDtypeStructs only — weak-type-correct,
+shardable, zero allocation.  Modality frontends contribute precomputed
+embedding stand-ins (``ext_embeds``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str  # train | prefill | decode
+
+
+CELLS = {
+    "train_4k": Cell("train_4k", 4096, 256, "train"),
+    "prefill_32k": Cell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": Cell("decode_32k", 32768, 128, "decode"),
+    "long_500k": Cell("long_500k", 524288, 1, "decode"),
+}
+
+
+def cell_applicable(cfg: ModelConfig, cell: Cell) -> tuple[bool, str]:
+    """(runnable?, reason-if-skipped)."""
+    if cell.name == "long_500k" and not cfg.subquadratic:
+        return False, (
+            "pure full-attention arch: 500k-token decode is the quadratic "
+            "regime the shape excludes (DESIGN.md §4)"
+        )
+    return True, ""
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, cell: Cell) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = cell.global_batch, cell.seq_len
+    s_tok = s - (cfg.frontend_tokens if cell.mode != "decode" else 0)
+    if cell.mode == "train":
+        out = {
+            "tokens": sds((b, s_tok), jnp.int32),
+            "targets": sds((b, s_tok), jnp.int32),
+        }
+        if cfg.frontend != "none":
+            out["ext_embeds"] = sds((b, cfg.frontend_tokens, cfg.d_model), jnp.bfloat16)
+        return out
+    if cell.mode == "prefill":
+        out = {"tokens": sds((b, s_tok), jnp.int32)}
+        if cfg.frontend != "none":
+            out["ext_embeds"] = sds((b, cfg.frontend_tokens, cfg.d_model), jnp.bfloat16)
+        return out
+    # decode: one new token against a seq_len cache
+    return {"token": sds((b,), jnp.int32), "step": sds((), jnp.int32)}

@@ -1,0 +1,291 @@
+"""Attention: GQA/MQA/MHA with RoPE or sinusoidal positions, optional
+sliding window (SWA), QKV bias, KV caches for decode, and a chunked
+(flash-style, online-softmax) path for long sequences.
+
+Cache sharding adapts to the mesh (see ``_cache_seq_axes``):
+* kv_heads divisible by the model axis -> shard heads (classic TP).
+* otherwise (MQA kv=1, small-kv GQA)  -> shard the cache *sequence* axis
+  over the model axis; the softmax reduction over the sharded axis lowers
+  to partial-max/sum collectives (flash-decode style) under GSPMD.
+* batch=1 long-context (500k) -> shard sequence over (data, model).
+
+The portable chunked path computes full (masked) blocks — a known 2x
+causal-FLOPs overhead vs the Pallas flash kernel (kernels/flash_attention)
+that is the TPU hot path.  See EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import cast, dense_apply, dense_init, rope
+from repro.parallel import current_rules, shard
+
+CHUNK = 512  # kv/q chunk for the scan path
+
+# Route full-sequence attention through the Pallas flash kernel
+# (kernels/flash_attention).  Forward-only (no VJP yet), so the launcher
+# enables it for prefill cells; interpret=True lowering on CPU keeps
+# block-local traffic, modeling TPU VMEM behavior (EXPERIMENTS.md §Perf).
+USE_PALLAS_FLASH = False
+
+
+def attn_init(key: jax.Array, cfg: ModelConfig) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "q": dense_init(kq, d, cfg.n_heads * hd, bias=cfg.qkv_bias),
+        "k": dense_init(kk, d, cfg.n_kv_heads * hd, bias=cfg.qkv_bias),
+        "v": dense_init(kv, d, cfg.n_kv_heads * hd, bias=cfg.qkv_bias),
+        "o": dense_init(ko, cfg.n_heads * hd, d),
+    }
+
+
+def _split_heads(x: jax.Array, n: int) -> jax.Array:
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, -1)
+
+
+def _cache_seq_axes(batch: int, n_kv: int) -> tuple:
+    """Pick logical sharding for a KV cache [B, S, K, D] (see module doc)."""
+    ar = current_rules()
+    if ar is None or ar.mesh is None:
+        return (None, None, None, None)
+    msize = ar.axis_size(("model",)) if "model" in ar.mesh.axis_names else 1
+    rule_b = ar.rules.get("batch") or ()
+    rule_b = (rule_b,) if isinstance(rule_b, str) else tuple(rule_b)
+    batch_axes = tuple(a for a in rule_b if a in ar.mesh.axis_names)
+    bsize = ar.axis_size(batch_axes) if batch_axes else 1
+    if n_kv % msize == 0 and msize > 1:
+        return ("batch", None, "kv_heads", None)
+    if batch % bsize == 0:
+        return ("batch", "seq_kv", None, None)
+    return (None, "longseq", None, None)
+
+
+def init_cache(
+    cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16
+) -> dict:
+    """Empty KV cache.  SWA archs allocate only the window (ring buffer)."""
+    hd = cfg.resolved_head_dim
+    window = cfg.sliding_window
+    slots = min(max_len, window) if window else max_len
+    k = jnp.zeros((batch, slots, cfg.n_kv_heads, hd), dtype)
+    axes = _cache_seq_axes(batch, cfg.n_kv_heads)
+    return {
+        "k": shard(k, *axes),
+        "v": shard(jnp.zeros_like(k), *axes),
+        # absolute position held in each slot; -1 = empty
+        "pos": jnp.full((batch, slots), -1, jnp.int32),
+    }
+
+
+def _positions(cfg, x, offset):
+    b, s, _ = x.shape
+    return jnp.arange(s, dtype=jnp.int32)[None, :] + offset  # [1, S]
+
+
+def _qkv(params, cfg: ModelConfig, x: jax.Array, positions: jax.Array):
+    hd = cfg.resolved_head_dim
+    q = _split_heads(dense_apply(params["q"], x), cfg.n_heads)
+    k = _split_heads(dense_apply(params["k"], x), cfg.n_kv_heads)
+    v = _split_heads(dense_apply(params["v"], x), cfg.n_kv_heads)
+    if cfg.pos_embedding == "rope":
+        q = rope(q, positions, theta=cfg.rope_theta)
+        k = rope(k, positions, theta=cfg.rope_theta)
+    q = shard(q, "batch", None, "heads", None)
+    k = shard(k, "batch", None, "kv_heads", None)
+    v = shard(v, "batch", None, "kv_heads", None)
+    return q * (hd**-0.5), k, v
+
+
+def _grouped_logits(q: jax.Array, k: jax.Array) -> jax.Array:
+    """q: [B,S,H,D], k: [B,T,K,D] -> logits [B, K, H/K, S, T] in f32."""
+    b, s, h, d = q.shape
+    kheads = k.shape[2]
+    qg = q.reshape(b, s, kheads, h // kheads, d)
+    return jnp.einsum(
+        "bskgd,btkd->bkgst", qg, k, preferred_element_type=jnp.float32
+    )
+
+
+def _apply_out(logits_weighted_v: jax.Array, params: dict) -> jax.Array:
+    b, k, g, s, d = logits_weighted_v.shape
+    y = logits_weighted_v.transpose(0, 3, 1, 2, 4).reshape(b, s, k * g * d)
+    return dense_apply(params["o"], cast(y))
+
+
+def _mask_full(cfg, qpos, kpos):
+    """[S, T] boolean mask: causal + optional sliding window."""
+    m = kpos[None, :] <= qpos[:, None]
+    if cfg.sliding_window:
+        m &= qpos[:, None] - kpos[None, :] < cfg.sliding_window
+    return m
+
+
+def attn_full(params: dict, cfg: ModelConfig, x: jax.Array, *, offset=0):
+    """Full (quadratic) masked attention — short sequences."""
+    positions = _positions(cfg, x, offset)
+    q, k, v = _qkv(params, cfg, x, positions)
+    logits = _grouped_logits(q, k)  # [B,K,G,S,T]
+    pos1 = positions[0]
+    mask = _mask_full(cfg, pos1, pos1)
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bkgsd", w.astype(v.dtype), v)
+    return _apply_out(out, params), (k, v, positions)
+
+
+def attn_chunked(params: dict, cfg: ModelConfig, x: jax.Array, *, offset=0):
+    """Flash-style chunked attention: scan over q chunks, inner scan over
+    kv chunks with online softmax.  Memory O(chunk^2), not O(S^2)."""
+    b, s, _ = x.shape
+    c = CHUNK
+    assert s % c == 0, (s, c)
+    positions = _positions(cfg, x, offset)
+    q, k, v = _qkv(params, cfg, x, positions)
+    kheads = cfg.n_kv_heads
+    g = cfg.n_heads // kheads
+    hd = cfg.resolved_head_dim
+    nq = s // c
+    pos1 = positions[0]
+
+    q_chunks = q.reshape(b, nq, c, cfg.n_heads, hd).transpose(1, 0, 2, 3, 4)
+    k_chunks = k.reshape(b, nq, c, kheads, hd).transpose(1, 0, 2, 3, 4)
+    v_chunks = v.reshape(b, nq, c, kheads, hd).transpose(1, 0, 2, 3, 4)
+    p_chunks = pos1.reshape(nq, c)
+
+    def q_step(_, qi):
+        qc, qpos = qi  # [B,c,H,D], [c]
+
+        def kv_step(carry, ki):
+            m_run, l_run, acc = carry
+            kc, vc, kpos = ki
+            logits = _grouped_logits(qc, kc)  # [B,K,G,c,c]
+            mask = _mask_full(cfg, qpos, kpos)
+            logits = jnp.where(mask[None, None, None], logits, -1e30)
+            m_new = jnp.maximum(m_run, logits.max(axis=-1))
+            p = jnp.exp(logits - m_new[..., None])
+            scale = jnp.exp(m_run - m_new)
+            l_new = l_run * scale + p.sum(axis=-1)
+            pv = jnp.einsum("bkgst,btkd->bkgsd", p.astype(vc.dtype), vc)
+            acc = acc * scale[..., None].astype(acc.dtype) + pv.astype(jnp.float32)
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, kheads, g, c), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, kheads, g, c), jnp.float32)
+        a0 = jnp.zeros((b, kheads, g, c, hd), jnp.float32)
+        # remat each kv block: bwd recomputes p instead of storing
+        # [B,K,G,c,c] f32 probabilities for every (q, kv) block pair
+        (m, l, acc), _ = jax.lax.scan(
+            jax.checkpoint(kv_step), (m0, l0, a0), (k_chunks, v_chunks, p_chunks)
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out
+
+    _, outs = jax.lax.scan(q_step, None, (q_chunks, p_chunks))
+    # outs: [nq, B, K, G, c, D] -> [B, K, G, S, D]
+    outs = outs.transpose(1, 2, 3, 0, 4, 5).reshape(b, kheads, g, s, hd)
+    return _apply_out(outs, params), (k, v, positions)
+
+
+def attn_train(params, cfg: ModelConfig, x: jax.Array):
+    if x.shape[1] > 2 * CHUNK:
+        y, _ = attn_chunked(params, cfg, x)
+    else:
+        y, _ = attn_full(params, cfg, x)
+    return y
+
+
+def attn_flash(params: dict, cfg: ModelConfig, x: jax.Array, *, offset=0):
+    """Pallas flash-attention path (forward only)."""
+    from repro.kernels.flash_attention import flash_attention
+
+    positions = _positions(cfg, x, offset)
+    q, k, v = _qkv(params, cfg, x, positions)
+    # kernel scales internally: undo the _qkv pre-scale
+    q = q * (cfg.resolved_head_dim**0.5)
+    out = flash_attention(
+        q.transpose(0, 2, 1, 3),
+        k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3),
+        causal=True,
+        window=cfg.sliding_window,
+    )  # [B, H, S, D]
+    b, h, s_len, hd = out.shape
+    kh = cfg.n_kv_heads
+    grouped = out.reshape(b, kh, h // kh, s_len, hd)
+    return _apply_out(grouped, params), (k, v, positions)
+
+
+def attn_prefill(params, cfg: ModelConfig, x: jax.Array, cache: dict):
+    """Forward over the prompt + fill the cache.  Returns (y, cache)."""
+    if USE_PALLAS_FLASH:
+        y, (k, v, positions) = attn_flash(params, cfg, x)
+    elif x.shape[1] > 2 * CHUNK:
+        y, (k, v, positions) = attn_chunked(params, cfg, x)
+    else:
+        y, (k, v, positions) = attn_full(params, cfg, x)
+    s = x.shape[1]
+    slots = cache["k"].shape[1]
+    axes = _cache_seq_axes(x.shape[0], cfg.n_kv_heads)
+    if s >= slots:  # keep the last ``slots`` positions (SWA window or max)
+        start = s - slots
+        cache = {
+            "k": shard(k[:, start:].astype(cache["k"].dtype), *axes),
+            "v": shard(v[:, start:].astype(cache["v"].dtype), *axes),
+            "pos": jnp.broadcast_to(positions[:, start:], (x.shape[0], slots)).astype(jnp.int32),
+        }
+    else:
+        cache = {
+            "k": shard(
+                jax.lax.dynamic_update_slice(
+                    cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0)
+                ),
+                *axes,
+            ),
+            "v": shard(
+                jax.lax.dynamic_update_slice(
+                    cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0)
+                ),
+                *axes,
+            ),
+            "pos": cache["pos"]
+            .at[:, :s]
+            .set(jnp.broadcast_to(positions, (x.shape[0], s)).astype(jnp.int32)),
+        }
+    return y, cache
+
+
+def attn_decode(params, cfg: ModelConfig, x: jax.Array, cache: dict, step: jax.Array):
+    """One-token decode against the cache.  x: [B, 1, d]; step: scalar
+    absolute position of the new token."""
+    b = x.shape[0]
+    positions = jnp.full((1, 1), step, jnp.int32)
+    q, k_new, v_new = _qkv(params, cfg, x, positions)
+    slots = cache["k"].shape[1]
+    slot = (step % slots).astype(jnp.int32) if cfg.sliding_window else step.astype(jnp.int32)
+    axes = _cache_seq_axes(b, cfg.n_kv_heads)
+    k_cache = jax.lax.dynamic_update_slice(
+        cache["k"], k_new.astype(cache["k"].dtype), (0, slot, 0, 0)
+    )
+    v_cache = jax.lax.dynamic_update_slice(
+        cache["v"], v_new.astype(cache["v"].dtype), (0, slot, 0, 0)
+    )
+    pos = jax.lax.dynamic_update_slice(
+        cache["pos"], jnp.full((b, 1), step, jnp.int32), (0, slot)
+    )
+    k_cache = shard(k_cache, *axes)
+    v_cache = shard(v_cache, *axes)
+
+    logits = _grouped_logits(q, k_cache)  # [B,K,G,1,T]
+    valid = pos >= 0
+    if cfg.sliding_window:
+        valid &= (step - pos) < cfg.sliding_window
+    logits = jnp.where(valid[:, None, None, None, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bkgsd", w.astype(v_cache.dtype), v_cache)
+    y = _apply_out(out, params)
+    return y, {"k": k_cache, "v": v_cache, "pos": pos}

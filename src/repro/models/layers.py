@@ -1,0 +1,176 @@
+"""Core layers: norms, embeddings, rotary, dense projections, SwiGLU FFN.
+
+Conventions:
+* params are float32 pytrees (dicts); compute runs in ``COMPUTE_DTYPE``
+  (bfloat16 by default — TPU-native), reductions/norms in float32.
+* every layer is a pair of pure functions ``<name>_init(key, ...)`` and
+  ``<name>_apply(params, x, ...)``.
+* ``shard(x, *logical)`` annotates activations; weight shardings are
+  applied by the launcher from the same logical names (see
+  ``repro.parallel`` and ``repro.train.train_step.param_logical_axes``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel import shard
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def cast(x: jax.Array) -> jax.Array:
+    return x.astype(COMPUTE_DTYPE)
+
+
+# ------------------------------------------------------------------ norms
+def rmsnorm_init(d: int) -> dict:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+@jax.custom_vjp
+def _rmsnorm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * scale
+    return y.astype(x.dtype)
+
+
+def _rmsnorm_fwd(x, scale, eps):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    r = jax.lax.rsqrt(var + eps)
+    return (xf * r * scale).astype(x.dtype), (x, r, scale)
+
+
+def _rmsnorm_bwd(res, g):
+    """Backward computes in f32 but hands back a cotangent in x.dtype —
+    without this the residual-stream gradient crossing every layer (and
+    its TP psum) is f32, doubling the dominant all-reduce wire bytes
+    (EXPERIMENTS.md §Perf)."""
+    x, r, scale = res
+    xf = x.astype(jnp.float32)
+    gf = g.astype(jnp.float32)
+    gs = gf * scale
+    d = x.shape[-1]
+    dot = jnp.sum(gs * xf, axis=-1, keepdims=True)
+    dx = r * gs - (r**3) * xf * dot / d
+    dscale = jnp.sum(gf * xf * r, axis=tuple(range(x.ndim - 1)))
+    return dx.astype(x.dtype), dscale.astype(scale.dtype), None
+
+
+_rmsnorm.defvjp(_rmsnorm_fwd, _rmsnorm_bwd)
+
+
+def rmsnorm_apply(params: dict, x: jax.Array, *, eps: float = 1e-5) -> jax.Array:
+    return _rmsnorm(x, params["scale"], eps)
+
+
+def groupnorm_init(d: int) -> dict:
+    return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def groupnorm_apply(
+    params: dict, x: jax.Array, *, groups: int, eps: float = 1e-5
+) -> jax.Array:
+    """GroupNorm over the channel dim (used by RWKV6 per-head norm)."""
+    *lead, d = x.shape
+    xf = x.astype(jnp.float32).reshape(*lead, groups, d // groups)
+    mean = xf.mean(axis=-1, keepdims=True)
+    var = xf.var(axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    y = y.reshape(*lead, d) * params["scale"] + params["bias"]
+    return y.astype(x.dtype)
+
+
+# ------------------------------------------------------------- projections
+def dense_init(
+    key: jax.Array, d_in: int, d_out: int, *, bias: bool = False, scale: float | None = None
+) -> dict:
+    scale = (d_in**-0.5) if scale is None else scale
+    p = {"w": jax.random.normal(key, (d_in, d_out), jnp.float32) * scale}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), jnp.float32)
+    return p
+
+
+def dense_apply(params: dict, x: jax.Array) -> jax.Array:
+    y = x @ cast(params["w"])
+    if "b" in params:
+        y = y + cast(params["b"])
+    return y
+
+
+# -------------------------------------------------------------- embeddings
+def embed_init(key: jax.Array, vocab: int, d: int) -> dict:
+    return {"table": jax.random.normal(key, (vocab, d), jnp.float32) * 0.02}
+
+
+def embed_apply(params: dict, ids: jax.Array) -> jax.Array:
+    return cast(params["table"])[ids]
+
+
+def unembed_apply(params: dict, x: jax.Array) -> jax.Array:
+    """Logits in float32 for numerics."""
+    return (x.astype(jnp.float32) @ params["table"].astype(jnp.float32).T)
+
+
+def sinusoidal_pos(seq: int, d: int, *, offset: int | jax.Array = 0) -> jax.Array:
+    """Classic transformer sinusoidal positional embedding [seq, d]."""
+    pos = jnp.arange(seq)[:, None] + offset
+    dim = jnp.arange(0, d, 2)[None, :]
+    angle = pos / jnp.power(10_000.0, dim / d)
+    pe = jnp.zeros((seq, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(angle))
+    pe = pe.at[:, 1::2].set(jnp.cos(angle))
+    return pe.astype(COMPUTE_DTYPE)
+
+
+# ------------------------------------------------------------------ rotary
+def rope(
+    x: jax.Array, positions: jax.Array, *, theta: float = 10_000.0
+) -> jax.Array:
+    """Apply rotary embedding.  x: [..., S, H, D]; positions: [..., S]."""
+    d = x.shape[-1]
+    freqs = 1.0 / (theta ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, D/2]
+    cos = jnp.cos(angles)[..., :, None, :]  # broadcast over heads
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------- FFN
+def swiglu_init(key: jax.Array, d: int, d_ff: int) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d, d_ff),
+        "w_up": dense_init(k2, d, d_ff),
+        "w_down": dense_init(k3, d_ff, d, scale=d_ff**-0.5),
+    }
+
+
+def swiglu_apply(params: dict, x: jax.Array) -> jax.Array:
+    g = dense_apply(params["w_gate"], x)
+    u = dense_apply(params["w_up"], x)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    h = shard(h, *(None,) * (h.ndim - 1), "mlp")
+    return dense_apply(params["w_down"], h)
+
+
+def gelu_mlp_init(key: jax.Array, d: int, d_ff: int) -> dict:
+    """2-matrix GELU MLP (GPT-BigCode / granite-34b style)."""
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_up": dense_init(k1, d, d_ff),
+        "w_down": dense_init(k2, d_ff, d, scale=d_ff**-0.5),
+    }
+
+
+def gelu_mlp_apply(params: dict, x: jax.Array) -> jax.Array:
+    h = dense_apply(params["w_up"], x)
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    h = shard(h, *(None,) * (h.ndim - 1), "mlp")
+    return dense_apply(params["w_down"], h)

@@ -1,0 +1,157 @@
+"""Mamba (S6) block for the Jamba hybrid architecture.
+
+Standard Mamba-1: in_proj -> causal depthwise conv1d -> SiLU -> selective
+SSM (data-dependent Δ, B, C; ZOH discretization) -> gate -> out_proj.
+Sequence processing uses ``lax.scan`` over time (exact recurrence; the
+portable path).  Decode keeps O(1) state per layer: the SSM state
+``h [B, d_inner, d_state]`` and the conv tail ``[B, conv_width-1, d_inner]``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import cast, dense_apply, dense_init
+from repro.parallel import shard
+
+
+def _dims(cfg: ModelConfig):
+    h = cfg.hybrid
+    d_inner = h.expand * cfg.d_model
+    dt_rank = -(-cfg.d_model // 16)  # ceil(d/16), Mamba default
+    return d_inner, h.d_state, h.conv_width, dt_rank
+
+
+def mamba_init(key: jax.Array, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di, ds, cw, dtr = _dims(cfg)
+    keys = jax.random.split(key, 6)
+    a = jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": dense_init(keys[0], d, 2 * di),
+        "conv_w": jax.random.normal(keys[1], (cw, di), jnp.float32) * cw**-0.5,
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "x_proj": dense_init(keys[2], di, dtr + 2 * ds),
+        "dt_proj": dense_init(keys[3], dtr, di, scale=dtr**-0.5),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((di,), 0.01))),  # softplus^-1
+        "a_log": jnp.log(a),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(keys[4], di, d, scale=di**-0.5),
+    }
+
+
+def _conv_seq(params, x):
+    """Causal depthwise conv over [B, S, di]."""
+    cw = params["conv_w"].shape[0]
+    pad = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    w = cast(params["conv_w"])
+    out = sum(pad[:, i : i + x.shape[1]] * w[i] for i in range(cw))
+    return out + cast(params["conv_b"])
+
+
+def _ssm_params(params, cfg, xc):
+    """xc: [..., di] -> (dt [..., di], B [..., ds], C [..., ds])."""
+    di, ds, _, dtr = _dims(cfg)
+    proj = dense_apply(params["x_proj"], xc)
+    dt_r, b, c = jnp.split(proj, [dtr, dtr + ds], axis=-1)
+    dt = jax.nn.softplus(
+        dense_apply(params["dt_proj"], dt_r).astype(jnp.float32)
+        + params["dt_bias"]
+    )
+    return dt, b.astype(jnp.float32), c.astype(jnp.float32)
+
+
+def _scan_ssm(params, cfg, xc, h0):
+    """Selective scan over time.  xc: [B, S, di]; h0: [B, di, ds]."""
+    a = -jnp.exp(params["a_log"])  # [di, ds]
+    dt, bmat, cmat = _ssm_params(params, cfg, xc)
+    xf = xc.astype(jnp.float32)
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp  # [B,di], [B,di], [B,ds], [B,ds]
+        # pin shardings: the recurrence is elementwise over the 'inner'
+        # (TP) axis — without these constraints GSPMD reshards the carry
+        # every step (millions of ~1MB all-reduces at 4k sequence length)
+        h = shard(h, "batch", "inner", None)
+        x_t = shard(x_t, "batch", "inner")
+        dt_t = shard(dt_t, "batch", "inner")
+        da = jnp.exp(dt_t[..., None] * a)  # [B, di, ds]
+        dbx = (dt_t * x_t)[..., None] * b_t[:, None, :]
+        h = da * h + dbx
+        y = (h * c_t[:, None, :]).sum(-1)  # [B, di]
+        return shard(h, "batch", "inner", None), shard(y, "batch", "inner")
+
+    xs = (
+        xf.transpose(1, 0, 2),
+        dt.transpose(1, 0, 2),
+        bmat.transpose(1, 0, 2),
+        cmat.transpose(1, 0, 2),
+    )
+    # Chunked + rematted recurrence: differentiating a plain length-S scan
+    # stores O(S) state residuals; chunking stores only per-chunk carries
+    # and recomputes inside each chunk.
+    s_len = xs[0].shape[0]
+    chunk = next(c for c in (64, 32, 16, 8, 4, 2, 1) if s_len % c == 0)
+
+    def chunk_fn(h, xs_c):
+        return jax.lax.scan(step, h, xs_c)
+
+    if chunk == 1:
+        h, ys = jax.lax.scan(step, h0, xs)
+    else:
+        xs_c = jax.tree.map(
+            lambda a: a.reshape(s_len // chunk, chunk, *a.shape[1:]), xs
+        )
+        h, ys = jax.lax.scan(jax.checkpoint(chunk_fn), h0, xs_c)
+        ys = ys.reshape(s_len, *ys.shape[2:])
+    y = ys.transpose(1, 0, 2) + params["d_skip"] * xf
+    return y, h
+
+
+def mamba_seq(params, cfg: ModelConfig, x: jax.Array, h0=None):
+    """Full-sequence forward.  Returns (y, (h_final, conv_tail))."""
+    b, s, _ = x.shape
+    di, ds, cw, _ = _dims(cfg)
+    xz = dense_apply(params["in_proj"], x)
+    xz = shard(xz, "batch", None, "inner")
+    x1, z = jnp.split(xz, 2, axis=-1)
+    xc = jax.nn.silu(_conv_seq(params, x1).astype(jnp.float32)).astype(x.dtype)
+    if h0 is None:
+        h0 = jnp.zeros((b, di, ds), jnp.float32)
+    y, h = _scan_ssm(params, cfg, xc, h0)
+    y = y.astype(x.dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = shard(y, "batch", None, "inner")
+    conv_tail = x1[:, -(cw - 1) :, :]  # inputs needed for the next step
+    return dense_apply(params["out_proj"], y), (h, conv_tail)
+
+
+def mamba_init_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> tuple:
+    di, ds, cw, _ = _dims(cfg)
+    h = jnp.zeros((batch, di, ds), jnp.float32)
+    tail = jnp.zeros((batch, cw - 1, di), dtype)
+    return (shard(h, "batch", "inner", None), shard(tail, "batch", None, "inner"))
+
+
+def mamba_step(params, cfg: ModelConfig, x: jax.Array, state: tuple):
+    """One-token decode.  x: [B, 1, d]; state = (h, conv_tail)."""
+    h, tail = state
+    di, ds, cw, _ = _dims(cfg)
+    xz = dense_apply(params["in_proj"], x)
+    x1, z = jnp.split(xz[:, 0], 2, axis=-1)  # [B, di]
+    window = jnp.concatenate([tail.astype(x1.dtype), x1[:, None, :]], axis=1)
+    w = cast(params["conv_w"])
+    xc = (window * w[None]).sum(axis=1) + cast(params["conv_b"])
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+    a = -jnp.exp(params["a_log"])
+    dt, bmat, cmat = _ssm_params(params, cfg, xc)
+    da = jnp.exp(dt[..., None] * a)
+    dbx = (dt * xc.astype(jnp.float32))[..., None] * bmat[:, None, :]
+    h_new = da * h + dbx
+    y = (h_new * cmat[:, None, :]).sum(-1) + params["d_skip"] * xc.astype(
+        jnp.float32
+    )
+    y = y.astype(x.dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = dense_apply(params["out_proj"], y[:, None, :])
+    return out, (h_new, window[:, 1:].astype(tail.dtype))

@@ -1,0 +1,145 @@
+"""Model facade: embeddings -> stack -> norm -> logits, plus loss and
+serving entry points.  Pure-functional; ``Model`` only carries the config
+and the (static) A2A schedule for scheduled MoE dispatch.
+
+Inputs are dicts so modality frontends stay stubs (DESIGN.md §4):
+  tokens      [B, S_tok] int32
+  ext_embeds  [B, P, d]  (optional; 'patch'/'frames' frontends, prepended)
+  targets     [B, S] int32 (training; -1 = no loss)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.schedule import A2ASchedule
+from repro.models import stack
+from repro.models.layers import (
+    cast,
+    dense_apply,
+    dense_init,
+    embed_apply,
+    embed_init,
+    rmsnorm_apply,
+    rmsnorm_init,
+    sinusoidal_pos,
+    unembed_apply,
+)
+from repro.parallel import shard
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig, schedule: A2ASchedule | None = None):
+        self.cfg = cfg
+        self.schedule = schedule
+
+    # ------------------------------------------------------------- params
+    def init(self, key: jax.Array) -> dict:
+        cfg = self.cfg
+        k_e, k_s, k_h = jax.random.split(key, 3)
+        params = {
+            "embed": embed_init(k_e, cfg.vocab_size, cfg.d_model),
+            "stack": stack.stack_init(k_s, cfg),
+            "ln_f": rmsnorm_init(cfg.d_model),
+        }
+        if not cfg.tie_embeddings:
+            params["head"] = dense_init(k_h, cfg.d_model, cfg.vocab_size)
+        return params
+
+    # ------------------------------------------------------------ forward
+    def _embed(self, params, tokens, ext_embeds=None, *, offset=0):
+        cfg = self.cfg
+        x = embed_apply(params["embed"], tokens)
+        if ext_embeds is not None:
+            x = jnp.concatenate([cast(ext_embeds), x], axis=1)
+        if cfg.pos_embedding == "sinusoidal":
+            x = x + sinusoidal_pos(x.shape[1], cfg.d_model, offset=offset)[None]
+        return shard(x, "batch", None, "embed")
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        x = rmsnorm_apply(params["ln_f"], x, eps=cfg.norm_eps)
+        if cfg.tie_embeddings:
+            logits = unembed_apply(params["embed"], x)
+        else:
+            logits = dense_apply(params["head"], x).astype(jnp.float32)
+        return shard(logits, "batch", None, "vocab")
+
+    def forward(self, params, tokens, ext_embeds=None):
+        """Training/eval forward: full-sequence logits [B, S, V] (f32)."""
+        x = self._embed(params, tokens, ext_embeds)
+        x = stack.stack_train(params["stack"], self.cfg, x, self.schedule)
+        return self._logits(params, x)
+
+    def _hidden(self, params, tokens, ext_embeds=None):
+        x = self._embed(params, tokens, ext_embeds)
+        return stack.stack_train(params["stack"], self.cfg, x, self.schedule)
+
+    def loss(self, params, batch: dict) -> jax.Array:
+        """Mean next-token CE over positions with targets >= 0.
+
+        The [B, S, V] logits are never materialized: CE runs over sequence
+        chunks with rematerialization (bwd recomputes each chunk's logits),
+        bounding loss memory at [B, S/nc, V/tp] — essential for 150k-vocab
+        models at 4k sequence lengths."""
+        hidden = self._hidden(params, batch["tokens"], batch.get("ext_embeds"))
+        targets = batch["targets"]
+        if hidden.shape[1] != targets.shape[1]:  # frontend prefix: no loss
+            pad = hidden.shape[1] - targets.shape[1]
+            targets = jnp.concatenate(
+                [jnp.full((targets.shape[0], pad), -1, targets.dtype), targets],
+                axis=1,
+            )
+        s = hidden.shape[1]
+        nc = 8 if s % 8 == 0 else 1
+
+        def chunk_terms(h_c, t_c):
+            logits = self._logits(params, h_c)
+            mask = (t_c >= 0).astype(jnp.float32)
+            safe = jnp.maximum(t_c, 0)
+            logz = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+            return ((logz - gold) * mask).sum(), mask.sum()
+
+        if nc == 1:
+            nll, cnt = chunk_terms(hidden, targets)
+            return nll / jnp.maximum(cnt, 1.0)
+        b, _, d = hidden.shape
+        h_c = hidden.reshape(b, nc, s // nc, d).transpose(1, 0, 2, 3)
+        t_c = targets.reshape(b, nc, s // nc).transpose(1, 0, 2)
+
+        def step(carry, xs):
+            nll, cnt = jax.checkpoint(chunk_terms)(*xs)
+            return (carry[0] + nll, carry[1] + cnt), None
+
+        (nll, cnt), _ = jax.lax.scan(step, (0.0, 0.0), (h_c, t_c))
+        return nll / jnp.maximum(cnt, 1.0)
+
+    # ------------------------------------------------------------ serving
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
+        return stack.stack_cache(self.cfg, batch, max_len, dtype)
+
+    def prefill(self, params, tokens, caches, ext_embeds=None):
+        """Process the prompt, fill caches.  Returns (last-token logits,
+        caches, prompt_len)."""
+        x = self._embed(params, tokens, ext_embeds)
+        x, caches = stack.stack_prefill(
+            params["stack"], self.cfg, x, caches, self.schedule
+        )
+        logits = self._logits(params, x[:, -1:, :])
+        return logits[:, 0], caches
+
+    def decode_step(self, params, token, caches, step):
+        """One decode step.  token: [B] int32; step: scalar position."""
+        cfg = self.cfg
+        x = embed_apply(params["embed"], token[:, None])
+        if cfg.pos_embedding == "sinusoidal":
+            x = x + sinusoidal_pos(1, cfg.d_model, offset=step)[None]
+        x = shard(x, "batch", None, "embed")
+        x, caches = stack.stack_decode(
+            params["stack"], cfg, x, caches, step, self.schedule
+        )
+        logits = self._logits(params, x)
+        return logits[:, 0], caches

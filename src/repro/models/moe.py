@@ -1,0 +1,327 @@
+"""Mixture-of-Experts FFN with three dispatch modes.
+
+* ``dense`` — no-A2A EP: tokens stay put (replicated over the model axis),
+  are locally grouped by expert into ``[E, C, d]``, experts (sharded over
+  the model axis) compute their groups, and a psum combines.  Comm = one
+  all-reduce of ``[T, d]``.  This is the strongest *non-decomposition*
+  baseline and the default for single-device smoke tests.
+
+* ``a2a`` — token-sharded EP (the paper's baseline): tokens sharded over
+  the EP axis, one dense ``all_to_all`` dispatch + one combine.
+
+* ``scheduled`` — the paper's technique on TPU: the all-to-all is
+  decomposed host-side (max-weight / shift) into K ppermute phases with
+  per-phase capacities; each phase's block can enter expert compute while
+  the next phase's DMA flies (XLA overlap).  Skewed traffic ⇒ fewer,
+  denser phases ⇒ fewer collective bytes than ``a2a`` + larger expert
+  batches — exactly the paper's §3.2 argument, restated in ICI terms.
+
+Routing: top-k softmax gating with capacity-factor token dropping
+(GShard-style), gates optionally renormalized over the selected k.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.schedule import A2ASchedule
+from repro.parallel import current_rules, shard
+from repro.parallel.collectives import (
+    a2a_combine,
+    a2a_dispatch,
+    scheduled_combine,
+    scheduled_dispatch,
+)
+from repro.models.layers import cast, dense_init
+
+EP_AXIS = "model"
+
+
+def moe_init(key: jax.Array, cfg: ModelConfig) -> dict:
+    m = cfg.moe
+    d, f, e = cfg.d_model, m.d_ff_expert, m.n_experts
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    return {
+        "router": dense_init(kr, d, e, scale=0.02),
+        "w_gate": jax.random.normal(kg, (e, d, f), jnp.float32) * d**-0.5,
+        "w_up": jax.random.normal(ku, (e, d, f), jnp.float32) * d**-0.5,
+        "w_down": jax.random.normal(kd, (e, f, d), jnp.float32) * f**-0.5,
+    }
+
+
+def _round8(x: int) -> int:
+    return max(8, -(-x // 8) * 8)
+
+
+def _router(params: dict, cfg: ModelConfig, x: jax.Array):
+    """x: [T, d] -> (expert ids [T, k], gates [T, k] f32)."""
+    m = cfg.moe
+    logits = (x.astype(jnp.float32) @ params["router"]["w"].astype(jnp.float32))
+    vals, idx = jax.lax.top_k(logits, m.top_k)
+    if m.router_norm_topk:
+        gates = jax.nn.softmax(vals, axis=-1)
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+        gates = jnp.take_along_axis(probs, idx, axis=-1)
+    return idx.astype(jnp.int32), gates
+
+
+def _group(x, key, gates, n_buckets: int, cap: int):
+    """Pack tokens into per-bucket slots.
+
+    x: [T, d]; key: [T*k] bucket id per (token, choice); gates: [T*k].
+    Returns (buf [n_buckets, cap, d], pos [n_buckets, cap] int32 (-1 pad),
+    gate [n_buckets, cap]).  Tokens beyond a bucket's capacity are dropped
+    (standard capacity-factor semantics).
+    """
+    tk = key.shape[0]
+    t = x.shape[0]
+    token_of = jnp.arange(tk, dtype=jnp.int32) // (tk // t)
+    order = jnp.argsort(key)
+    skey = key[order]
+    counts = jnp.bincount(key, length=n_buckets)
+    starts = jnp.concatenate(
+        [jnp.zeros(1, counts.dtype), jnp.cumsum(counts)[:-1]]
+    )
+    rank = jnp.arange(tk) - starts[skey]
+    valid = rank < cap
+    slot = jnp.where(valid, skey * cap + rank, n_buckets * cap)
+    buf = jnp.zeros((n_buckets * cap + 1, x.shape[1]), x.dtype)
+    buf = buf.at[slot].set(x[token_of[order]])
+    pos = jnp.full((n_buckets * cap + 1,), -1, jnp.int32)
+    pos = pos.at[slot].set(token_of[order])
+    gat = jnp.zeros((n_buckets * cap + 1,), jnp.float32)
+    gat = gat.at[slot].set(gates[order])
+    return (
+        buf[:-1].reshape(n_buckets, cap, -1),
+        pos[:-1].reshape(n_buckets, cap),
+        gat[:-1].reshape(n_buckets, cap),
+    )
+
+
+def _ungroup(y, pos, gate, t: int):
+    """Weighted scatter-add of processed slots back to [T, d] (f32)."""
+    yf = y.reshape(-1, y.shape[-1]).astype(jnp.float32)
+    pf = pos.reshape(-1)
+    gf = gate.reshape(-1)
+    safe = jnp.where(pf >= 0, pf, t)
+    out = jnp.zeros((t + 1, y.shape[-1]), jnp.float32)
+    out = out.at[safe].add(yf * gf[:, None])
+    return out[:t]
+
+
+def _expert_ffn(params: dict, x: jax.Array, e_slice=None) -> jax.Array:
+    """Batched SwiGLU over expert groups.  x: [E, C, d] -> [E, C, d].
+
+    On TPU this is the ``kernels/moe_gemm`` Pallas hot spot; this einsum
+    form is the portable/XLA path (also its correctness oracle).
+    """
+    if e_slice is not None:  # already-local expert slices (inside shard_map)
+        wg, wu, wd = e_slice
+    else:
+        wg, wu, wd = params["w_gate"], params["w_up"], params["w_down"]
+    g = jnp.einsum("ecd,edf->ecf", x, cast(wg))
+    u = jnp.einsum("ecd,edf->ecf", x, cast(wu))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("ecf,efd->ecd", h, cast(wd))
+
+
+def _ep_size() -> int:
+    ar = current_rules()
+    if ar is None or ar.mesh is None:
+        return 1
+    return ar.axis_size((EP_AXIS,))
+
+
+# --------------------------------------------------------------- dense mode
+def _moe_dense(params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    m = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+    idx, gates = _router(params, cfg, xf)
+    key = idx.reshape(-1)
+    cap = _round8(math.ceil(t * m.top_k / m.n_experts * m.capacity_factor))
+    buf, pos, gate = _group(xf, key, gates.reshape(-1), m.n_experts, cap)
+    # capacity dim sharded over the DP axis ('fsdp'->data) so expert work
+    # splits across data shards too, not just the expert axis
+    buf = shard(buf, "expert", "fsdp", None)
+    y = _expert_ffn(params, buf)
+    y = shard(y, "expert", "fsdp", None)
+    out = _ungroup(y, pos, gate, t)
+    return out.astype(x.dtype).reshape(b, s, d)
+
+
+# ----------------------------------------------------------- EP (A2A) modes
+def _moe_ep(params, cfg: ModelConfig, x: jax.Array, schedule: A2ASchedule | None):
+    """Token-sharded EP under shard_map over the model axis."""
+    m = cfg.moe
+    ar = current_rules()
+    mesh = ar.mesh
+    n = _ep_size()
+    e_local = m.n_experts // n
+    b, s, d = x.shape
+
+    rule_b = ar.rules.get("batch") or ()
+    rule_b = (rule_b,) if isinstance(rule_b, str) else tuple(rule_b)
+    batch_axes = tuple(a for a in rule_b if a in mesh.axis_names)
+    from jax.sharding import PartitionSpec as P
+
+    # 2D expert sharding: the expert FFN width lives sharded over 'data'
+    # inside the shard_map (no ZeRO-3 regather of expert weights); the
+    # received token block is all-gathered over 'data' before the GEMM and
+    # its output reduce-scattered back (tokens are far smaller than expert
+    # weights at microbatch granularity — EXPERIMENTS.md §Perf Cell C).
+    two_d = bool(m.expert_2d) and "data" in mesh.axis_names
+    w_f_spec = (
+        P(EP_AXIS, None, "data") if two_d else P(EP_AXIS, None, None)
+    )
+    w_d_spec = (
+        P(EP_AXIS, "data", None) if two_d else P(EP_AXIS, None, None)
+    )
+    in_specs = (
+        P(batch_axes, EP_AXIS, None),  # x sequence-sharded over the EP axis
+        P(None, None),  # router w
+        w_f_spec,  # w_gate [E, d, f]
+        w_f_spec,  # w_up
+        w_d_spec,  # w_down [E, f, d]
+    )
+    out_specs = P(batch_axes, EP_AXIS, None)
+
+    def body(xb, wr, wg, wu, wd):
+        bl, s_loc, _ = xb.shape
+        t_ep = bl * s_loc
+        x_loc = xb.reshape(t_ep, d)
+        idx, gates = _router({"router": {"w": wr}}, cfg, x_loc)
+        dest = idx // e_local
+        le = idx % e_local
+        key = (dest * e_local + le).reshape(-1)
+        # Capacities: uniform for a2a; per-phase (pair tokens / E_local)
+        # for scheduled.  The local bucket always gets the uniform cap.
+        cap_uni = _round8(
+            math.ceil(t_ep * m.top_k / (n * e_local) * m.capacity_factor)
+        )
+        if schedule is None:
+            c_max = cap_uni
+            phase_caps = None
+        else:
+            phase_caps = [
+                _round8(math.ceil(int(c) / e_local)) for c in schedule.caps
+            ]
+            if schedule.offsets is not None:
+                # multi-phase pairs (BvN): the bucket must hold each pair's
+                # TOTAL allocation across phases
+                import numpy as _np
+
+                per_pair = _np.zeros((n, n), dtype=_np.int64)
+                for k in range(schedule.num_phases):
+                    sel = schedule.valid[k]
+                    per_pair[_np.arange(n)[sel], schedule.perms[k][sel]] += phase_caps[k]
+                c_max = max(cap_uni, int(per_pair.max()))
+            else:
+                c_max = max([cap_uni] + phase_caps)
+        buf, pos, gate = _group(
+            x_loc, key, gates.reshape(-1), n * e_local, c_max
+        )
+        buf = buf.reshape(n, e_local, c_max, d)
+
+        def expert_compute(grouped):
+            """[E_local, R, d] -> [E_local, R, d]; under 2D sharding the
+            tokens gather over 'data', GEMM against the local f-shard, and
+            the partial outputs reduce-scatter back."""
+            if not two_d:
+                return _expert_ffn(None, grouped, e_slice=(wg, wu, wd))
+            gathered = jax.lax.all_gather(grouped, "data", axis=1, tiled=True)
+            y_part = _expert_ffn(None, gathered, e_slice=(wg, wu, wd))
+            return jax.lax.psum_scatter(
+                y_part, "data", scatter_dimension=1, tiled=True
+            )
+
+        if schedule is None:  # plain all-to-all
+            recv = a2a_dispatch(buf, EP_AXIS)  # [n, e_local, C, d]
+            grouped = recv.transpose(1, 0, 2, 3).reshape(e_local, n * c_max, d)
+            y = expert_compute(grouped)
+            y = y.reshape(e_local, n, c_max, d).transpose(1, 0, 2, 3)
+            back = a2a_combine(y, EP_AXIS)
+        else:  # scheduled ppermute phases (capacities in per-expert units)
+            import numpy as _np
+
+            offsets = None
+            if schedule.offsets is not None:  # recompute in per-expert units
+                offsets = _np.zeros_like(schedule.offsets)
+                cursor = _np.zeros((n, n), dtype=_np.int64)
+                for k in range(schedule.num_phases):
+                    for i in range(n):
+                        if schedule.valid[k, i]:
+                            d2 = int(schedule.perms[k, i])
+                            offsets[k, i] = cursor[i, d2]
+                            cursor[i, d2] += phase_caps[k]
+            sched = A2ASchedule(
+                perms=schedule.perms,
+                caps=_np.asarray(phase_caps, dtype=_np.int32),
+                valid=schedule.valid,
+                offsets=offsets,
+            )
+            blocks = scheduled_dispatch(buf, sched, EP_AXIS)
+            # Per-phase expert compute: each received block enters the GEMM
+            # independently — the paper's overlap structure made explicit
+            # (phase k's compute can run while phase k+1's ppermute flies),
+            # and under 2D sharding the token gather is per-phase (bounded
+            # memory instead of gathering the whole concatenated buffer).
+            parts = [expert_compute(blk) for blk in blocks]
+            back = scheduled_combine(parts, sched, EP_AXIS, c_max)
+
+        y_loc = _ungroup(back, pos, gate, t_ep)  # [t_ep, d] f32
+        return y_loc.astype(xb.dtype).reshape(bl, s_loc, d)
+
+    fn = jax.shard_map(
+        body, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False
+    )
+    return fn(
+        x,
+        params["router"]["w"],
+        params["w_gate"],
+        params["w_up"],
+        params["w_down"],
+    )
+
+
+def _ep_feasible(cfg: ModelConfig, x: jax.Array) -> bool:
+    """Token-sharded EP enters the shard_map sequence-sharded over the EP
+    axis (Megatron-SP style: no replication, no bwd all-reduce), so the
+    sequence must split evenly; decode steps (S=1) fall back to dense
+    (no-A2A) EP."""
+    ar = current_rules()
+    if ar is None or ar.mesh is None:
+        return False
+    n = _ep_size()
+    rule_b = ar.rules.get("batch") or ()
+    rule_b = (rule_b,) if isinstance(rule_b, str) else tuple(rule_b)
+    batch_axes = tuple(a for a in rule_b if a in ar.mesh.axis_names)
+    bs = ar.axis_size(batch_axes) if batch_axes else 1
+    b, s, _ = x.shape
+    return b % bs == 0 and s % n == 0
+
+
+def moe_apply(
+    params: dict,
+    cfg: ModelConfig,
+    x: jax.Array,
+    *,
+    schedule: A2ASchedule | None = None,
+) -> jax.Array:
+    m = cfg.moe
+    mode = m.dispatch
+    if _ep_size() == 1 or mode == "dense" or not _ep_feasible(cfg, x):
+        return _moe_dense(params, cfg, x)
+    if mode == "a2a":
+        return _moe_ep(params, cfg, x, None)
+    if mode == "scheduled":
+        if schedule is None:
+            raise ValueError("scheduled dispatch needs an A2ASchedule")
+        return _moe_ep(params, cfg, x, schedule)
+    raise ValueError(f"unknown dispatch mode {mode!r}")

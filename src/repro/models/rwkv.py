@@ -1,0 +1,183 @@
+"""RWKV6 ("Finch") block: data-dependent token-shift + decay (the
+assignment's headline feature) and the WKV linear-attention recurrence.
+
+Time-mix (per layer):
+  * ddlerp token-shift: the mix between x_t and x_{t-1} for each of the
+    r/k/v/w/g streams is ``mu_i + LoRA_i(x)`` — data dependent.
+  * per-channel decay ``w_t = exp(-exp(w0 + LoRA_w(x_t)))`` — the
+    data-dependent decay of RWKV6.
+  * WKV recurrence over heads of size 64:
+      y_t = r_t · (S_{t-1} + diag(u) k_t v_tᵀ)
+      S_t = diag(w_t) S_{t-1} + k_t v_tᵀ
+  * GroupNorm over heads, SiLU gate, output projection.
+
+Channel-mix: r = σ(x_r W_r); k = ReLU(x_k W_k)²; out = r · (k W_v).
+
+Decode state per layer is O(1): (last token, WKV state [B,H,D,D], last
+channel-mix token).  This is why rwkv6-7b runs the 500k-context decode
+shape.  The sequential scan here is the exact/portable path; the blocked
+TPU hot path is ``kernels/rwkv_wkv``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import (
+    cast,
+    dense_apply,
+    dense_init,
+    groupnorm_apply,
+    groupnorm_init,
+)
+from repro.parallel import shard
+
+LORA_MIX = 32
+LORA_DECAY = 64
+STREAMS = ("w", "k", "v", "r", "g")
+
+
+def rwkv_init(key: jax.Array, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    keys = jax.random.split(key, 12)
+    p = {
+        "mu": jnp.full((len(STREAMS), d), 0.5, jnp.float32),
+        "mix_w1": jax.random.normal(keys[0], (d, len(STREAMS) * LORA_MIX), jnp.float32) * 0.01,
+        "mix_w2": jax.random.normal(keys[1], (len(STREAMS), LORA_MIX, d), jnp.float32) * 0.01,
+        "w0": jnp.full((d,), -2.0, jnp.float32),
+        "decay_w1": jax.random.normal(keys[2], (d, LORA_DECAY), jnp.float32) * 0.01,
+        "decay_w2": jax.random.normal(keys[3], (LORA_DECAY, d), jnp.float32) * 0.01,
+        "u": jax.random.normal(keys[4], (h, hd), jnp.float32) * 0.1,
+        "wr": dense_init(keys[5], d, d),
+        "wk": dense_init(keys[6], d, d),
+        "wv": dense_init(keys[7], d, d),
+        "wg": dense_init(keys[8], d, d),
+        "wo": dense_init(keys[9], d, d),
+        "ln_x": groupnorm_init(d),
+        # channel mix
+        "cm_mu_k": jnp.full((d,), 0.5, jnp.float32),
+        "cm_mu_r": jnp.full((d,), 0.5, jnp.float32),
+        "cm_k": dense_init(keys[10], d, cfg.d_ff),
+        "cm_v": dense_init(keys[11], cfg.d_ff, d, scale=cfg.d_ff**-0.5),
+        "cm_r": dense_init(jax.random.fold_in(key, 99), d, d),
+    }
+    return p
+
+
+def _ddlerp(params, x, x_prev):
+    """Data-dependent token-shift for the 5 streams.
+
+    x, x_prev: [B, S, d] -> dict stream -> mixed [B, S, d]."""
+    sx = (x_prev - x).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    base = xf + sx * params["mu"][STREAMS.index("w")]  # shared probe stream
+    lora = jnp.tanh(base @ params["mix_w1"])
+    lora = lora.reshape(*lora.shape[:-1], len(STREAMS), LORA_MIX)
+    deltas = jnp.einsum("...sl,sld->...sd", lora, params["mix_w2"])
+    out = {}
+    for i, name in enumerate(STREAMS):
+        mix = params["mu"][i] + deltas[..., i, :]
+        out[name] = (xf + sx * mix).astype(x.dtype)
+    return out
+
+
+def _decay(params, xw):
+    """Data-dependent per-channel decay in (0, 1).  xw: [B, S, d]."""
+    lora = jnp.tanh(xw.astype(jnp.float32) @ params["decay_w1"]) @ params["decay_w2"]
+    return jnp.exp(-jnp.exp(params["w0"] + lora))
+
+
+def _heads(x, hd):
+    *lead, d = x.shape
+    return x.reshape(*lead, d // hd, hd)
+
+
+def _wkv_scan(r, k, v, w, u, s0):
+    """WKV6 recurrence.  r/k/v/w: [B, S, H, D] (w in f32); s0: [B, H, D, D].
+
+    Returns (y [B, S, H, D] f32, s_final)."""
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp  # [B, H, D]
+        kv = k_t[..., :, None] * v_t[..., None, :]  # [B,H,D,D]
+        y = jnp.einsum("bhi,bhij->bhj", r_t, s + u[..., :, None] * kv)
+        s = w_t[..., :, None] * s + kv
+        return s, y
+
+    xs = tuple(t.transpose(1, 0, 2, 3) for t in (rf, kf, vf, w))
+    # chunked + rematted (see mamba._scan_ssm): O(S/C) stored carries
+    s_len = xs[0].shape[0]
+    chunk = next(c for c in (64, 32, 16, 8, 4, 2, 1) if s_len % c == 0)
+
+    def chunk_fn(state, xs_c):
+        return jax.lax.scan(step, state, xs_c)
+
+    if chunk == 1:
+        s, ys = jax.lax.scan(step, s0, xs)
+    else:
+        xs_c = jax.tree.map(
+            lambda a: a.reshape(s_len // chunk, chunk, *a.shape[1:]), xs
+        )
+        s, ys = jax.lax.scan(jax.checkpoint(chunk_fn), s0, xs_c)
+        ys = ys.reshape(s_len, *ys.shape[2:])
+    return ys.transpose(1, 0, 2, 3), s
+
+
+def rwkv_time_mix(params, cfg: ModelConfig, x, state=None):
+    """x: [B, S, d].  state = (x_last [B,d], S [B,H,D,D]) or None.
+
+    Returns (y, new_state)."""
+    b, s, d = x.shape
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    x_last = jnp.zeros((b, d), x.dtype) if state is None else state[0]
+    s0 = (
+        jnp.zeros((b, h, hd, hd), jnp.float32) if state is None else state[1]
+    )
+    x_prev = jnp.concatenate([x_last[:, None, :], x[:, :-1]], axis=1)
+    mixed = _ddlerp(params, x, x_prev)
+    r = _heads(dense_apply(params["wr"], mixed["r"]), hd)
+    k = _heads(dense_apply(params["wk"], mixed["k"]), hd)
+    v = _heads(dense_apply(params["wv"], mixed["v"]), hd)
+    g = dense_apply(params["wg"], mixed["g"])
+    w = _heads(_decay(params, mixed["w"]), hd)  # f32 [B,S,H,D]
+    r = shard(r, "batch", None, "heads", None)
+    k = shard(k, "batch", None, "heads", None)
+    v = shard(v, "batch", None, "heads", None)
+    y, s_new = _wkv_scan(r, k, v, w, params["u"], s0)
+    y = groupnorm_apply(params["ln_x"], y.reshape(b, s, d), groups=h)
+    y = y * jax.nn.silu(g.astype(jnp.float32)).astype(y.dtype)
+    out = dense_apply(params["wo"], cast(y))
+    return out, (x[:, -1, :], s_new)
+
+
+def rwkv_channel_mix(params, x, state=None):
+    """x: [B, S, d].  state = x_last [B, d] or None."""
+    b, s, d = x.shape
+    x_last = jnp.zeros((b, d), x.dtype) if state is None else state
+    x_prev = jnp.concatenate([x_last[:, None, :], x[:, :-1]], axis=1)
+    sx = (x_prev - x).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    xk = (xf + sx * params["cm_mu_k"]).astype(x.dtype)
+    xr = (xf + sx * params["cm_mu_r"]).astype(x.dtype)
+    k = dense_apply(params["cm_k"], xk)
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(x.dtype)
+    k = shard(k, "batch", None, "mlp")
+    r = jax.nn.sigmoid(dense_apply(params["cm_r"], xr).astype(jnp.float32))
+    out = r.astype(x.dtype) * dense_apply(params["cm_v"], k)
+    return out, x[:, -1, :]
+
+
+def rwkv_init_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> tuple:
+    d, hd = cfg.d_model, cfg.rwkv_head_dim
+    h = d // hd
+    return (
+        jnp.zeros((batch, d), dtype),
+        shard(jnp.zeros((batch, h, hd, hd), jnp.float32), "batch", "heads", None, None),
+        jnp.zeros((batch, d), dtype),
+    )

@@ -1,0 +1,221 @@
+"""Layer stack: scan-over-periods so HLO size is O(period), not O(depth).
+
+A *period* is the repeating layer pattern (1 for uniform models; 8 for
+Jamba's 1-attention-per-7-mamba interleave with alternating MoE).  Params
+for period-position ``j`` are stacked over ``n_periods`` and consumed by
+``lax.scan``; caches/states are stacked the same way and scanned as
+xs/ys.  Remat ('block') checkpoints each period.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import mamba as mb
+from repro.models import rwkv as rk
+from repro.models.layers import (
+    gelu_mlp_apply,
+    gelu_mlp_init,
+    rmsnorm_apply,
+    rmsnorm_init,
+    swiglu_apply,
+    swiglu_init,
+)
+from repro.models.moe import moe_apply, moe_init
+
+
+# ----------------------------------------------------------- single block
+def block_init(key: jax.Array, cfg: ModelConfig, j: int) -> dict:
+    kind = cfg.layer_kind(j)
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"ln1": rmsnorm_init(cfg.d_model)}
+    if kind == "attn":
+        p["mixer"] = attn.attn_init(k1, cfg)
+    elif kind == "mamba":
+        p["mixer"] = mb.mamba_init(k1, cfg)
+    elif kind == "rwkv6":
+        p["mixer"] = rk.rwkv_init(k1, cfg)
+        p["ln2"] = rmsnorm_init(cfg.d_model)
+        return p  # rwkv channel-mix lives inside mixer params
+    else:
+        raise ValueError(kind)
+    p["ln2"] = rmsnorm_init(cfg.d_model)
+    if cfg.ffn_kind(j) == "moe":
+        p["ffn"] = moe_init(k2, cfg)
+    elif cfg.ffn_gelu:
+        p["ffn"] = gelu_mlp_init(k3, cfg.d_model, cfg.d_ff)
+    else:
+        p["ffn"] = swiglu_init(k3, cfg.d_model, cfg.d_ff)
+    return p
+
+
+def _ffn_apply(p, cfg, j, x, schedule):
+    if cfg.ffn_kind(j) == "moe":
+        return moe_apply(p["ffn"], cfg, x, schedule=schedule)
+    if cfg.ffn_gelu:
+        return gelu_mlp_apply(p["ffn"], x)
+    return swiglu_apply(p["ffn"], x)
+
+
+def block_train(p, cfg: ModelConfig, j: int, x, schedule):
+    """One layer in Megatron-SP form: the residual stream x stays
+    sequence-sharded ('seq_act' rule); mixers that need cross-token access
+    gather a bf16 copy and their output is constrained back to
+    sequence-sharded so the out-proj psum lowers to a reduce-scatter.
+    MoE FFNs consume the sequence-sharded stream directly (the EP
+    shard_map is sequence-sharded over the same axis — zero extra comm).
+    All constraints are no-ops without a mesh."""
+    from repro.parallel import shard
+
+    def seq_sharded(t):
+        return shard(t, "batch", "seq_act", "embed")
+
+    kind = cfg.layer_kind(j)
+    h = rmsnorm_apply(p["ln1"], x, eps=cfg.norm_eps)
+    if kind == "attn":
+        x = seq_sharded(x + attn.attn_train(p["mixer"], cfg, h))
+    elif kind == "mamba":
+        y, _ = mb.mamba_seq(p["mixer"], cfg, h)
+        x = seq_sharded(x + y)
+    else:  # rwkv6
+        y, _ = rk.rwkv_time_mix(p["mixer"], cfg, h)
+        x = seq_sharded(x + y)
+        h2 = rmsnorm_apply(p["ln2"], x, eps=cfg.norm_eps)
+        y2, _ = rk.rwkv_channel_mix(p["mixer"], h2)
+        return seq_sharded(x + y2)
+    h = rmsnorm_apply(p["ln2"], x, eps=cfg.norm_eps)
+    return seq_sharded(x + _ffn_apply(p, cfg, j, h, schedule))
+
+
+def block_cache(cfg: ModelConfig, j: int, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Zeroed cache/state for one block (no leading period dim)."""
+    kind = cfg.layer_kind(j)
+    if kind == "attn":
+        return attn.init_cache(cfg, batch, max_len, dtype)
+    if kind == "mamba":
+        return mb.mamba_init_state(cfg, batch, dtype)
+    return rk.rwkv_init_state(cfg, batch, dtype)
+
+
+def block_prefill(p, cfg, j, x, cache, schedule):
+    kind = cfg.layer_kind(j)
+    h = rmsnorm_apply(p["ln1"], x, eps=cfg.norm_eps)
+    if kind == "attn":
+        y, cache = attn.attn_prefill(p["mixer"], cfg, h, cache)
+        x = x + y
+    elif kind == "mamba":
+        y, (hs, tail) = mb.mamba_seq(p["mixer"], cfg, h)
+        cache = (hs, tail.astype(cache[1].dtype))
+        x = x + y
+    else:  # rwkv6
+        y, (x_tm, s) = rk.rwkv_time_mix(p["mixer"], cfg, h)
+        x = x + y
+        h2 = rmsnorm_apply(p["ln2"], x, eps=cfg.norm_eps)
+        y2, x_cm = rk.rwkv_channel_mix(p["mixer"], h2)
+        x = x + y2
+        return x, (x_tm.astype(cache[0].dtype), s, x_cm.astype(cache[2].dtype))
+    h = rmsnorm_apply(p["ln2"], x, eps=cfg.norm_eps)
+    x = x + _ffn_apply(p, cfg, j, h, schedule)
+    return x, cache
+
+
+def block_decode(p, cfg, j, x, cache, step, schedule):
+    kind = cfg.layer_kind(j)
+    h = rmsnorm_apply(p["ln1"], x, eps=cfg.norm_eps)
+    if kind == "attn":
+        y, cache = attn.attn_decode(p["mixer"], cfg, h, cache, step)
+        x = x + y
+    elif kind == "mamba":
+        y, cache = mb.mamba_step(p["mixer"], cfg, h, cache)
+        x = x + y
+    else:  # rwkv6
+        x_tm, s, x_cm = cache
+        y, (x_tm2, s2) = rk.rwkv_time_mix(
+            p["mixer"], cfg, h, state=(x_tm.astype(h.dtype), s)
+        )
+        x = x + y
+        h2 = rmsnorm_apply(p["ln2"], x, eps=cfg.norm_eps)
+        y2, x_cm2 = rk.rwkv_channel_mix(
+            p["mixer"], h2, state=x_cm.astype(h2.dtype)
+        )
+        x = x + y2
+        return x, (x_tm2.astype(x_tm.dtype), s2, x_cm2.astype(x_cm.dtype))
+    h = rmsnorm_apply(p["ln2"], x, eps=cfg.norm_eps)
+    x = x + _ffn_apply(p, cfg, j, h, schedule)
+    return x, cache
+
+
+# ------------------------------------------------------------------ stack
+def stack_init(key: jax.Array, cfg: ModelConfig) -> dict:
+    period, n_p = cfg.period, cfg.n_periods
+    out = {}
+    for j in range(period):
+        keys = jax.random.split(jax.random.fold_in(key, j), n_p)
+        out[f"pos{j}"] = jax.vmap(lambda k: block_init(k, cfg, j))(keys)
+    return out
+
+
+def stack_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
+    """Caches stacked over periods: leaf shapes [n_periods, ...]."""
+    out = {}
+    for j in range(cfg.period):
+        one = block_cache(cfg, j, batch, max_len, dtype)
+        out[f"pos{j}"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_periods, *a.shape)), one
+        )
+    return out
+
+
+def stack_train(params: dict, cfg: ModelConfig, x: jax.Array, schedule) -> jax.Array:
+    def period_fn(x, pparams):
+        for j in range(cfg.period):
+            x = block_train(pparams[f"pos{j}"], cfg, j, x, schedule)
+        return x
+
+    if cfg.remat == "block":
+        period_fn = jax.checkpoint(period_fn)
+
+    from repro.parallel import shard
+
+    def scan_fn(carry, pparams):
+        # the scan carry is the saved (checkpointed) residual: keep it
+        # sequence-sharded under the 'seq_act' rule (no-op by default)
+        out = shard(period_fn(carry, pparams), "batch", "seq_act", "embed")
+        return out, None
+
+    x = shard(x, "batch", "seq_act", "embed")
+    x, _ = jax.lax.scan(scan_fn, x, params)
+    return x
+
+
+def stack_prefill(params, cfg: ModelConfig, x, caches, schedule):
+    def scan_fn(carry, inp):
+        pparams, pcache = inp
+        new = {}
+        for j in range(cfg.period):
+            carry, c = block_prefill(
+                pparams[f"pos{j}"], cfg, j, carry, pcache[f"pos{j}"], schedule
+            )
+            new[f"pos{j}"] = c
+        return carry, new
+
+    x, caches = jax.lax.scan(scan_fn, x, (params, caches))
+    return x, caches
+
+
+def stack_decode(params, cfg: ModelConfig, x, caches, step, schedule):
+    def scan_fn(carry, inp):
+        pparams, pcache = inp
+        new = {}
+        for j in range(cfg.period):
+            carry, c = block_decode(
+                pparams[f"pos{j}"], cfg, j, carry, pcache[f"pos{j}"], step, schedule
+            )
+            new[f"pos{j}"] = c
+        return carry, new
+
+    x, caches = jax.lax.scan(scan_fn, x, (params, caches))
+    return x, caches

@@ -1,0 +1,4 @@
+from repro.optim.adamw import AdamW, cosine_schedule
+from repro.optim.compression import ef_int8_compress, ef_int8_init
+
+__all__ = ["AdamW", "cosine_schedule", "ef_int8_compress", "ef_int8_init"]

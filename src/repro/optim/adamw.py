@@ -1,0 +1,91 @@
+"""AdamW with global-norm clipping and LR schedules (no optax offline).
+
+Functional optax-style API:
+    opt = AdamW(lr=cosine_schedule(...), weight_decay=0.1, clip_norm=1.0)
+    state = opt.init(params)
+    params, state, stats = opt.update(grads, state, params)
+
+Moments are stored float32 and mirror the parameter sharding (the
+launcher applies the same PartitionSpecs to ``state.mu/nu``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def cosine_schedule(
+    peak_lr: float, warmup_steps: int, total_steps: int, final_frac: float = 0.1
+) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+        prog = jnp.clip(
+            (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1),
+            0.0,
+            1.0,
+        )
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup_steps, warm, peak_lr * cos)
+
+    return lr
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.asarray(sum(leaves)))
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float | None = 1.0
+    # bfloat16 moments halve optimizer HBM for >=100B models (DESIGN.md);
+    # updates still compute in f32.
+    moment_dtype: object = jnp.float32
+
+    def init(self, params) -> dict:
+        zeros = lambda p: jnp.zeros(p.shape, self.moment_dtype)
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+        }
+
+    def update(self, grads, state, params):
+        step = state["step"] + 1
+        gnorm = global_norm(grads)
+        if self.clip_norm is not None:
+            scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        lr = self.lr(step) if callable(self.lr) else self.lr
+        b1, b2 = self.b1, self.b2
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, mu, nu):
+            gf = g.astype(jnp.float32)
+            mu_f = b1 * mu.astype(jnp.float32) + (1 - b1) * gf
+            nu_f = b2 * nu.astype(jnp.float32) + (1 - b2) * gf * gf
+            mhat = mu_f / bc1
+            vhat = nu_f / bc2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            if p.ndim >= 2:  # decay matrices only (norms/bias exempt)
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+            return new_p, mu_f.astype(self.moment_dtype), nu_f.astype(self.moment_dtype)
+
+        out = jax.tree.map(upd, params, grads, state["mu"], state["nu"])
+        params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+        mu = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        nu = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_state = {"step": step, "mu": mu, "nu": nu}
+        return params, new_state, {"grad_norm": gnorm, "lr": lr}

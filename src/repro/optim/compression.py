@@ -1,0 +1,53 @@
+"""Error-feedback int8 gradient compression (distributed-optimization
+trick for slow cross-pod links).
+
+Per-tensor symmetric int8 quantization with an error-feedback accumulator:
+the quantization residual is carried into the next step, so the scheme is
+unbiased over time and provably converges at the uncompressed rate for
+smooth objectives (Karimireddy et al., 2019 style).
+
+Two integration points:
+* optimizer-level (default): ``grads`` are compressed+decompressed with EF
+  before the Adam update — semantically what the wire would deliver.
+* wire-level (cross-pod): ``train_step(grad_compress='pod')`` reduces
+  gradients across the pod axis as int8 inside a shard_map (4x fewer DCI
+  bytes; see EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ef_int8_init(params):
+    """Zero error-feedback accumulators mirroring the parameter tree."""
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _quantize(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_int8_compress(grads, ef_state):
+    """Compress grads with error feedback.
+
+    Returns (decompressed grads — what the wire delivers, new ef_state).
+    """
+
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        q, scale = _quantize(gf)
+        deq = _dequantize(q, scale)
+        return deq.astype(g.dtype), gf - deq
+
+    out = jax.tree.map(one, grads, ef_state)
+    deq = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    ef = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    return deq, ef

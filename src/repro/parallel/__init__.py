@@ -1,0 +1,17 @@
+from repro.parallel.sharding import (
+    AxisRules,
+    DEFAULT_RULES,
+    axis_rules,
+    current_rules,
+    logical_to_spec,
+    shard,
+)
+
+__all__ = [
+    "AxisRules",
+    "DEFAULT_RULES",
+    "axis_rules",
+    "current_rules",
+    "logical_to_spec",
+    "shard",
+]

@@ -1,0 +1,132 @@
+"""EP collectives: dense (no-A2A), single all_to_all, and the paper's
+scheduled (decomposition -> ppermute phase sequence) dispatch.
+
+A *matching* from a traffic-matrix decomposition is a (partial)
+permutation over EP ranks; on TPU each matching is one
+``jax.lax.ppermute`` — the ICI analogue of holding an optical circuit
+(DESIGN.md §2.2).  A schedule is a static sequence of (permutation,
+capacity, valid-mask) phases planned host-side by
+``repro.core.plan_schedule``; phase k moves ``[E_local, C_k, d]`` per
+participating rank, idle pairs are dropped from the source-target list
+(the circuit stays dark), and a received block can enter expert compute
+while phase k+1's DMA is in flight (XLA overlaps ppermute with compute).
+
+All functions here run *inside* ``shard_map`` over the EP ('model') axis.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.schedule import A2ASchedule
+
+__all__ = ["scheduled_dispatch", "scheduled_combine", "a2a_dispatch", "a2a_combine"]
+
+
+def _phase_pairs(perm: np.ndarray, valid: np.ndarray) -> list[tuple[int, int]]:
+    """ppermute source-target pairs, idle pairs dropped."""
+    return [(int(i), int(perm[i])) for i in range(perm.shape[0]) if valid[i]]
+
+
+def scheduled_dispatch(
+    buckets: jax.Array, schedule: A2ASchedule, axis: str
+) -> list[jax.Array]:
+    """Execute the dispatch phases.
+
+    buckets: [n, E_local, C_max, d] — tokens grouped by destination rank
+      (dim 0) and destination-local expert, padded to the largest phase
+      capacity.
+    Returns received blocks: element 0 is the local (self) block with
+    capacity C_max; element k >= 1 is phase k's block [E_local, C_k, d]
+    (zeros on ranks the phase does not serve).
+    """
+    me = jax.lax.axis_index(axis)
+    received = []
+    # Local tokens never cross the fabric.
+    local = jax.lax.dynamic_index_in_dim(buckets, me, axis=0, keepdims=False)
+    received.append(local)
+    for k in range(schedule.num_phases):
+        perm = schedule.perms[k]
+        cap = int(schedule.caps[k])
+        dst = jnp.asarray(perm, jnp.int32)[me]
+        send = jax.lax.dynamic_index_in_dim(buckets, dst, axis=0, keepdims=False)
+        if schedule.offsets is not None:
+            # multi-phase pair (BvN): ship the next slice of the bucket
+            off = jnp.asarray(schedule.offsets, jnp.int32)[k][me]
+            send = jax.lax.dynamic_slice_in_dim(send, off, cap, axis=1)
+        else:
+            send = send[:, :cap]  # [E_local, C_k, d]
+        got = jax.lax.ppermute(
+            send, axis, perm=_phase_pairs(perm, schedule.valid[k])
+        )
+        received.append(got)
+    return received
+
+
+def scheduled_combine(
+    processed: list[jax.Array],
+    schedule: A2ASchedule,
+    axis: str,
+    c_max: int,
+) -> jax.Array:
+    """Reverse path: return each phase's processed block to its sender.
+
+    processed: list as produced by scheduled_dispatch (local first), each
+      [E_local, C_k, d] *after* expert compute.
+    Returns [n, E_local, C_max, d] aligned with the original send buckets
+    (zeros where a phase capacity < C_max or a pair was idle).
+    """
+    n = schedule.n
+    me = jax.lax.axis_index(axis)
+    e_local, _, d = processed[0].shape
+    out = jnp.zeros((n, e_local, c_max, d), processed[0].dtype)
+    # Local block back into our own slot.
+    out = jax.lax.dynamic_update_index_in_dim(
+        out, _pad_cap(processed[0], c_max), me, axis=0
+    )
+    for k in range(schedule.num_phases):
+        perm = schedule.perms[k]
+        back = [(d2, s) for (s, d2) in _phase_pairs(perm, schedule.valid[k])]
+        got = jax.lax.ppermute(processed[k + 1], axis, perm=back)
+        # ``got`` holds OUR tokens processed remotely by rank perm[me]; in
+        # our send buckets they lived in slot dst = perm[me] (at the
+        # phase's slice offset for multi-phase/BvN pairs).  Only write if
+        # we participated in this phase (valid[me]).
+        dst = jnp.asarray(perm, jnp.int32)[me]
+        mine = jnp.asarray(schedule.valid[k], jnp.bool_)[me]
+        cur = jax.lax.dynamic_index_in_dim(out, dst, axis=0, keepdims=False)
+        if schedule.offsets is not None:
+            off = jnp.asarray(schedule.offsets, jnp.int32)[k][me]
+            region = jax.lax.dynamic_slice_in_dim(
+                cur, off, got.shape[1], axis=1
+            )
+            blk = jnp.where(mine, got, region)
+            cur = jax.lax.dynamic_update_slice_in_dim(cur, blk, off, axis=1)
+        else:
+            blk = jnp.where(mine, _pad_cap(got, c_max), cur)
+            cur = blk
+        out = jax.lax.dynamic_update_index_in_dim(out, cur, dst, axis=0)
+    return out
+
+
+def _pad_cap(block: jax.Array, c_max: int) -> jax.Array:
+    pad = c_max - block.shape[1]
+    if pad == 0:
+        return block
+    return jnp.pad(block, ((0, 0), (0, pad), (0, 0)))
+
+
+def a2a_dispatch(buckets: jax.Array, axis: str) -> jax.Array:
+    """Baseline: single dense all-to-all (uniform capacity).
+
+    buckets: [n, E_local, C, d] by destination -> returns [n, E_local, C, d]
+    by source.
+    """
+    return jax.lax.all_to_all(buckets, axis, split_axis=0, concat_axis=0, tiled=True)
+
+
+def a2a_combine(processed: jax.Array, axis: str) -> jax.Array:
+    """Reverse all-to-all: [n(src), E_local, C, d] -> [n(dst), ...]."""
+    return jax.lax.all_to_all(processed, axis, split_axis=0, concat_axis=0, tiled=True)

@@ -1,0 +1,10 @@
+from repro.train.train_step import make_train_step, param_logical_axes, param_specs
+from repro.train.loop import TrainLoopConfig, train_loop
+
+__all__ = [
+    "TrainLoopConfig",
+    "make_train_step",
+    "param_logical_axes",
+    "param_specs",
+    "train_loop",
+]

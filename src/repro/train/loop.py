@@ -1,0 +1,141 @@
+"""Fault-tolerant training loop.
+
+Production behaviors exercised here (and tested in multidev_train.py):
+* resume-from-latest on start (elastic: restore works across mesh shapes
+  because checkpoints are stored unsharded; the new mesh's shardings are
+  applied at device_put),
+* periodic async checkpointing off the critical path,
+* retry-on-failure: a step that raises (injected in tests; an XLA/ICI
+  error in production) rolls back to the last checkpoint and continues,
+* deterministic data: batch(step) is pure, so replayed steps see
+  identical data,
+* straggler note: SPMD steps are globally synchronous, so per-step
+  stragglers surface as slow steps, not divergence; mitigation at this
+  layer = checkpoint + restart excluding the slow host (elastic restore),
+  plus the async checkpointer never blocking the step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.data import DataConfig, SyntheticStream
+from repro.optim import AdamW, cosine_schedule, ef_int8_init
+from repro.train.train_step import make_train_step
+
+log = logging.getLogger("repro.train")
+
+
+@dataclasses.dataclass
+class TrainLoopConfig:
+    steps: int = 100
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_every: int = 50
+    keep: int = 3
+    microbatches: int = 1
+    peak_lr: float = 3e-4
+    warmup: int = 20
+    grad_compress: str | None = None
+    max_failures: int = 3
+    log_every: int = 10
+
+
+def train_loop(
+    model,
+    data_cfg: DataConfig,
+    loop_cfg: TrainLoopConfig,
+    *,
+    shard_batch: Callable | None = None,
+    failure_hook: Callable[[int], None] | None = None,
+) -> dict:
+    """Run (or resume) training.  Returns final metrics/history.
+
+    shard_batch: optional fn(dict of np arrays) -> device arrays with the
+      mesh's batch sharding (identity when single-device).
+    failure_hook: test hook called before each step; may raise to inject
+      a failure.
+    """
+    stream = SyntheticStream(data_cfg)
+    opt = AdamW(
+        lr=cosine_schedule(loop_cfg.peak_lr, loop_cfg.warmup, loop_cfg.steps)
+    )
+    step_fn = jax.jit(
+        make_train_step(
+            model,
+            opt,
+            microbatches=loop_cfg.microbatches,
+            grad_compress=loop_cfg.grad_compress,
+        ),
+        donate_argnums=(0, 1, 2),
+    )
+    manager = CheckpointManager(loop_cfg.ckpt_dir, keep=loop_cfg.keep)
+
+    def fresh_state():
+        params = model.init(jax.random.PRNGKey(0))
+        opt_state = opt.init(params)
+        ef_state = (
+            ef_int8_init(params) if loop_cfg.grad_compress == "ef8" else {}
+        )
+        return {"params": params, "opt": opt_state, "ef": ef_state}
+
+    state = fresh_state()
+    start_step, restored = manager.restore_latest(state)
+    if restored is not None:
+        state = restored
+        log.info("resumed from step %d", start_step)
+    else:
+        start_step = 0
+
+    if shard_batch is None:
+        shard_batch = lambda b: b
+
+    history = []
+    failures = 0
+    step = start_step
+    t_last = time.perf_counter()
+    while step < loop_cfg.steps:
+        try:
+            if failure_hook is not None:
+                failure_hook(step)
+            batch = shard_batch(stream.batch(step))
+            params, opt_state, ef_state, metrics = step_fn(
+                state["params"], state["opt"], state["ef"], batch
+            )
+            state = {"params": params, "opt": opt_state, "ef": ef_state}
+        except Exception as err:  # roll back to last checkpoint, retry
+            failures += 1
+            if failures > loop_cfg.max_failures:
+                raise
+            log.warning("step %d failed (%s); restoring last checkpoint", step, err)
+            manager.wait()
+            template = fresh_state()
+            ck_step, restored = manager.restore_latest(template)
+            if restored is not None:
+                state, step = restored, ck_step
+            else:
+                state, step = template, 0
+            continue
+
+        if step % loop_cfg.log_every == 0 or step == loop_cfg.steps - 1:
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t_last
+            t_last = time.perf_counter()
+            history.append({"step": step, "loss": loss, "dt_s": dt})
+            log.info("step %d loss %.4f (%.2fs)", step, loss, dt)
+        step += 1
+        if step % loop_cfg.ckpt_every == 0 or step == loop_cfg.steps:
+            manager.save_async(step, state)
+    manager.wait()
+    return {
+        "history": history,
+        "final_step": step,
+        "failures": failures,
+        "final_loss": history[-1]["loss"] if history else float("nan"),
+    }

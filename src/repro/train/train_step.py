@@ -1,0 +1,167 @@
+"""Train step factory: value_and_grad + microbatch accumulation + AdamW,
+and the parameter sharding-rule table.
+
+``param_logical_axes`` maps every parameter (by its tree path) to logical
+axis names; ``param_specs`` turns those into PartitionSpecs under the
+active mesh rules (divisibility fallback included).  The same specs apply
+to optimizer moments.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import ef_int8_compress
+from repro.parallel.sharding import logical_to_spec
+
+# last-two-path-components -> logical axes (no leading period axis).
+# "fsdp" is the ZeRO-3 axis: None by default (CPU tests, small models),
+# ('data',) for big-model training (weights/moments sharded over DP and
+# all-gathered at use), and ('data',) again at serving time where combined
+# with the 'model' TP dim it yields 2D (data x model) tensor parallelism.
+_RULES: list[tuple[tuple[str, ...], tuple]] = [
+    (("embed", "table"), ("vocab", "fsdp")),
+    (("head", "w"), ("fsdp", "vocab")),
+    # attention
+    (("q", "w"), ("fsdp", "heads_flat")),
+    (("k", "w"), ("fsdp", "heads_flat")),
+    (("v", "w"), ("fsdp", "heads_flat")),
+    (("q", "b"), ("heads_flat",)),
+    (("k", "b"), ("heads_flat",)),
+    (("v", "b"), ("heads_flat",)),
+    (("o", "w"), ("heads_flat", "fsdp")),
+    # dense FFN
+    (("w_gate", "w"), ("fsdp", "mlp")),
+    (("w_up", "w"), ("fsdp", "mlp")),
+    (("w_down", "w"), ("mlp", "fsdp")),
+    # MoE (3D expert weights; router replicated)
+    (("ffn", "w_gate"), ("expert", "fsdp_moe", "expert_mlp")),
+    (("ffn", "w_up"), ("expert", "fsdp_moe", "expert_mlp")),
+    (("ffn", "w_down"), ("expert", "expert_mlp", "fsdp_moe")),
+    (("router", "w"), (None, None)),
+    # mamba
+    (("in_proj", "w"), ("fsdp", "inner")),
+    (("out_proj", "w"), ("inner", "fsdp")),
+    (("mixer", "conv_w"), (None, "inner")),
+    (("mixer", "conv_b"), ("inner",)),
+    (("x_proj", "w"), ("inner", "fsdp")),
+    (("dt_proj", "w"), ("fsdp", "inner")),
+    (("mixer", "dt_bias"), ("inner",)),
+    (("mixer", "a_log"), ("inner", None)),
+    (("mixer", "d_skip"), ("inner",)),
+    # rwkv6
+    (("wr", "w"), ("fsdp", "heads_flat")),
+    (("wk", "w"), ("fsdp", "heads_flat")),
+    (("wv", "w"), ("fsdp", "heads_flat")),
+    (("wg", "w"), ("fsdp", "heads_flat")),
+    (("wo", "w"), ("heads_flat", "fsdp")),
+    (("cm_k", "w"), ("fsdp", "mlp")),
+    (("cm_v", "w"), ("mlp", "fsdp")),
+    (("cm_r", "w"), ("fsdp", None)),
+    (("mixer", "u"), ("heads", None)),
+]
+
+# extra rule mapping for the flattened head projection width
+HEADS_FLAT_RULE = {"heads_flat": ("model",), "expert_mlp": None}
+
+
+def _path_keys(path) -> list[str]:
+    return [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+
+
+def param_logical_axes(params) -> "jax.tree_util.PyTreeDef":
+    """Tree of logical-axis tuples matching ``params``."""
+
+    def assign(path, leaf):
+        keys = _path_keys(path)
+        in_stack = "stack" in keys
+        ndim = leaf.ndim - (1 if in_stack else 0)  # strip period axis
+        logical: tuple = (None,) * ndim
+        for (k1, k2), axes in _RULES:
+            if len(keys) >= 2 and keys[-2] == k1 and keys[-1] == k2:
+                logical = axes
+                break
+            if len(keys) >= 2 and keys[-1] == k2 and k1 in keys:
+                logical = axes
+                break
+        if len(logical) != ndim:  # rank mismatch (e.g. scalars): replicate
+            logical = (None,) * ndim
+        if in_stack:
+            logical = (None, *logical)
+        return logical
+
+    paths = jax.tree_util.tree_flatten_with_path(params)
+    leaves = [assign(p, l) for p, l in paths[0]]
+    return jax.tree_util.tree_unflatten(paths[1], leaves)
+
+
+def param_specs(params):
+    """PartitionSpecs for params under the active rules."""
+    import repro.parallel.sharding as sh
+    from jax.sharding import PartitionSpec as P
+
+    ar = sh.current_rules()
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    axes_tree = param_logical_axes(params)
+    axes_flat = jax.tree_util.tree_flatten(
+        axes_tree, is_leaf=lambda x: isinstance(x, tuple)
+    )[0]
+    specs = []
+    for (_, leaf), logical in zip(flat, axes_flat):
+        if ar is None or ar.mesh is None:
+            specs.append(P())
+            continue
+        merged = dict(ar.rules)
+        merged.update(HEADS_FLAT_RULE)
+        with sh.axis_rules(ar.mesh, merged):
+            specs.append(logical_to_spec(logical, leaf.shape))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def make_train_step(model, optimizer, *, microbatches: int = 1, grad_compress: str | None = None):
+    """Returns train_step(params, opt_state, ef_state, batch) ->
+    (params, opt_state, ef_state, metrics).
+
+    microbatches > 1 splits the batch dim and accumulates grads via scan
+    (memory ~ 1/microbatches of activations on top of remat).
+    grad_compress='ef8' applies int8 error-feedback compression to grads
+    before the optimizer (see repro.optim.compression).
+    """
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    def grads_of(params, batch):
+        if microbatches == 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+        b = batch["tokens"].shape[0]
+        assert b % microbatches == 0, (b, microbatches)
+        mb = {
+            k: v.reshape(microbatches, b // microbatches, *v.shape[1:])
+            for k, v in batch.items()
+        }
+
+        def step(carry, mbatch):
+            loss_acc, g_acc = carry
+            loss, g = jax.value_and_grad(loss_fn)(params, mbatch)
+            g_acc = jax.tree.map(jnp.add, g_acc, g)
+            return (loss_acc + loss, g_acc), None
+
+        # accumulate in the param dtype: f32 for <100B policies, bf16 for
+        # the >=100B ones (halves the largest training buffer; the Adam
+        # update still computes in f32)
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype), params)
+        (loss, grads), _ = jax.lax.scan(step, (0.0, zero), mb)
+        scale = 1.0 / microbatches
+        return loss * scale, jax.tree.map(lambda g: g * scale, grads)
+
+    def train_step(params, opt_state, ef_state, batch):
+        loss, grads = grads_of(params, batch)
+        if grad_compress == "ef8":
+            grads, ef_state = ef_int8_compress(grads, ef_state)
+        params, opt_state, stats = optimizer.update(grads, opt_state, params)
+        metrics = {"loss": loss, **stats}
+        return params, opt_state, ef_state, metrics
+
+    return train_step

@@ -1,0 +1,90 @@
+"""Unit tests for the loop-aware HLO analyzer (launch/hlo.py)."""
+
+import textwrap
+
+from repro.launch.hlo import analyze_module, parse_module, _multipliers
+
+HLO = textwrap.dedent("""\
+    HloModule jit_f, num_partitions=4
+
+    %body.1 (p.1: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+      %p.1 = (s32[], f32[8,16]{1,0}) parameter(0)
+      %gte.1 = s32[] get-tuple-element(%p.1), index=0
+      %gte.2 = f32[8,16]{1,0} get-tuple-element(%p.1), index=1
+      %c1 = s32[] constant(1)
+      %add.1 = s32[] add(%gte.1, %c1)
+      %w = f32[16,16]{1,0} constant({...})
+      %dot.1 = f32[8,16]{1,0} dot(%gte.2, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %ar.1 = f32[8,16]{1,0} all-reduce(%dot.1), replica_groups=[1,4]<=[4], to_apply=%sum.1
+      ROOT %tup.1 = (s32[], f32[8,16]{1,0}) tuple(%add.1, %ar.1)
+    }
+
+    %cond.1 (p.2: (s32[], f32[8,16])) -> pred[] {
+      %p.2 = (s32[], f32[8,16]{1,0}) parameter(0)
+      %gte.3 = s32[] get-tuple-element(%p.2), index=0
+      %c10 = s32[] constant(10)
+      ROOT %lt.1 = pred[] compare(%gte.3, %c10), direction=LT
+    }
+
+    %sum.1 (a.1: f32[], b.1: f32[]) -> f32[] {
+      %a.1 = f32[] parameter(0)
+      %b.1 = f32[] parameter(1)
+      ROOT %s.1 = f32[] add(%a.1, %b.1)
+    }
+
+    ENTRY %main.1 (arg.1: f32[8,16]) -> f32[8,16] {
+      %arg.1 = f32[8,16]{1,0} parameter(0)
+      %c0 = s32[] constant(0)
+      %tup.0 = (s32[], f32[8,16]{1,0}) tuple(%c0, %arg.1)
+      %while.1 = (s32[], f32[8,16]{1,0}) while(%tup.0), condition=%cond.1, body=%body.1, backend_config={"known_trip_count":{"n":"10"}}
+      ROOT %out.1 = f32[8,16]{1,0} get-tuple-element(%while.1), index=1
+    }
+""")
+
+
+class TestParsing:
+    def test_computations_found(self):
+        comps = parse_module(HLO)
+        assert set(comps) == {"body.1", "cond.1", "sum.1", "main.1"}
+        assert comps["main.1"].is_entry
+
+    def test_multipliers_use_trip_count(self):
+        comps = parse_module(HLO)
+        mult = _multipliers(comps)
+        assert mult["main.1"] == 1.0
+        assert mult["body.1"] == 10.0
+        assert mult["cond.1"] == 11.0
+
+
+class TestCosts:
+    def test_dot_flops_scaled_by_loop(self):
+        a = analyze_module(HLO, n_devices=4)
+        # dot [8,16]x[16,16]: 2*8*16*16 = 4096 flops, x10 iterations
+        assert a["flops"] == 4096 * 10
+
+    def test_allreduce_bytes_scaled(self):
+        a = analyze_module(HLO, n_devices=4)
+        # result 8*16*4 = 512 B, 10 iterations
+        assert a["collectives"]["all-reduce"] == 512 * 10
+        # ring wire model: 2*size*(S-1)/S with S=4
+        assert a["wire"]["all-reduce"] == int(2 * 512 * 3 / 4) * 10
+
+    def test_counts(self):
+        a = analyze_module(HLO, n_devices=4)
+        assert a["collective_counts"]["all-reduce"] == 10.0
+
+
+class TestPermutePairs:
+    def test_sparse_permute_fraction(self):
+        hlo = textwrap.dedent("""\
+            HloModule jit_g, num_partitions=4
+
+            ENTRY %main.2 (x.1: bf16[128]) -> bf16[128] {
+              %x.1 = bf16[128]{0} parameter(0)
+              ROOT %cp.1 = bf16[128]{0} collective-permute(%x.1), source_target_pairs={{0,1},{1,0}}
+            }
+        """)
+        a = analyze_module(hlo, n_devices=4)
+        assert a["permute_pair_fraction"] == 0.5
+        # wire bytes scaled by the pair fraction (idle pairs stay dark)
+        assert a["wire"]["collective-permute"] == int(128 * 2 * 0.5)

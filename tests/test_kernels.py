@@ -1,0 +1,133 @@
+"""Pallas kernels vs pure-jnp oracles (interpret=True on CPU).
+
+Sweeps shapes/dtypes per kernel; tolerances depend on dtype (bf16 matmul
+accumulates f32 in both kernel and ref, so errors stay small).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import attention_ref, flash_attention
+from repro.kernels.moe_gemm import moe_gemm, moe_gemm_ref
+from repro.kernels.rwkv_wkv import wkv6, wkv6_ref
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=2e-5, atol=2e-5)
+
+
+# ------------------------------------------------------------------ moe_gemm
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "e,c,d,f,bc,bf",
+    [
+        (2, 128, 64, 128, 128, 128),
+        (4, 256, 128, 256, 128, 128),
+        (1, 64, 32, 64, 64, 64),
+        (3, 384, 128, 384, 128, 128),  # non-pow2 expert count / blocks
+    ],
+)
+def test_moe_gemm_matches_ref(e, c, d, f, bc, bf, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    x = (jax.random.normal(ks[0], (e, c, d)) * 0.5).astype(dtype)
+    wg = (jax.random.normal(ks[1], (e, d, f)) * 0.05).astype(dtype)
+    wu = (jax.random.normal(ks[2], (e, d, f)) * 0.05).astype(dtype)
+    wd = (jax.random.normal(ks[3], (e, f, d)) * 0.05).astype(dtype)
+    out = moe_gemm(x, wg, wu, wd, block_c=bc, block_f=bf, interpret=True)
+    ref = moe_gemm_ref(x, wg, wu, wd)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **_tol(dtype)
+    )
+
+
+def test_moe_gemm_zero_padding_rows():
+    """Capacity padding rows (zeros) must produce zeros, not NaNs."""
+    e, c, d, f = 2, 128, 64, 128
+    x = jnp.zeros((e, c, d))
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    wg = jax.random.normal(ks[0], (e, d, f)) * 0.1
+    wu = jax.random.normal(ks[1], (e, d, f)) * 0.1
+    wd = jax.random.normal(ks[2], (e, f, d)) * 0.1
+    out = moe_gemm(x, wg, wu, wd, interpret=True)
+    assert float(jnp.abs(out).max()) == 0.0
+
+
+# ----------------------------------------------------------- flash attention
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,h,kv,sq,skv,d,window",
+    [
+        (1, 4, 4, 256, 256, 64, None),  # MHA causal
+        (2, 8, 2, 256, 256, 64, None),  # GQA 4:1
+        (1, 4, 1, 128, 128, 64, None),  # MQA
+        (1, 4, 4, 256, 256, 64, 96),  # sliding window
+        (1, 2, 2, 128, 512, 64, None),  # decode-ish: kv longer than q
+    ],
+)
+def test_flash_matches_ref(b, h, kv, sq, skv, d, window, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = (jax.random.normal(ks[0], (b, h, sq, d))).astype(dtype)
+    k = (jax.random.normal(ks[1], (b, kv, skv, d))).astype(dtype)
+    v = (jax.random.normal(ks[2], (b, kv, skv, d))).astype(dtype)
+    out = flash_attention(
+        q, k, v, window=window, block_q=128, block_k=128, interpret=True
+    )
+    ref = attention_ref(q, k, v, window=window)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **_tol(dtype)
+    )
+
+
+def test_flash_block_shape_independent():
+    """Output must not depend on the block decomposition."""
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (1, 2, 256, 64))
+    k = jax.random.normal(ks[1], (1, 2, 256, 64))
+    v = jax.random.normal(ks[2], (1, 2, 256, 64))
+    a = flash_attention(q, k, v, block_q=256, block_k=256, interpret=True)
+    b = flash_attention(q, k, v, block_q=64, block_k=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------------------- wkv6
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,h,t,d,bt",
+    [
+        (1, 2, 64, 32, 32),
+        (2, 4, 128, 64, 64),
+        (1, 1, 96, 16, 32),  # t not multiple of 64
+    ],
+)
+def test_wkv6_matches_ref(b, h, t, d, bt, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    r = (jax.random.normal(ks[0], (b, h, t, d)) * 0.5).astype(dtype)
+    k = (jax.random.normal(ks[1], (b, h, t, d)) * 0.5).astype(dtype)
+    v = (jax.random.normal(ks[2], (b, h, t, d)) * 0.5).astype(dtype)
+    # decay in (0,1), realistic RWKV6 range
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (b, h, t, d))) * 0.5 + 0.45
+    w = w.astype(jnp.float32)
+    u = (jax.random.normal(ks[4], (h, d)) * 0.1).astype(jnp.float32)
+    y, s = wkv6(r, k, v, w, u, block_t=bt, interpret=True)
+    y_ref, s_ref = wkv6_ref(r, k, v, w, u)
+    tol = dict(rtol=5e-2, atol=5e-2) if dtype == jnp.bfloat16 else dict(rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), **tol)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref), **tol)
+
+
+def test_wkv6_state_carries_across_blocks():
+    """Splitting T into more blocks must not change the result (state
+    persists in scratch across sequential grid steps)."""
+    ks = jax.random.split(jax.random.PRNGKey(1), 5)
+    b, h, t, d = 1, 2, 128, 32
+    r = jax.random.normal(ks[0], (b, h, t, d)) * 0.5
+    k = jax.random.normal(ks[1], (b, h, t, d)) * 0.5
+    v = jax.random.normal(ks[2], (b, h, t, d)) * 0.5
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (b, h, t, d))) * 0.5 + 0.45
+    u = jax.random.normal(ks[4], (h, d)) * 0.1
+    y1, s1 = wkv6(r, k, v, w, u, block_t=128, interpret=True)
+    y2, s2 = wkv6(r, k, v, w, u, block_t=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-5, atol=1e-5)

@@ -1,0 +1,52 @@
+"""Online schedule selection under routing drift (core/selector.py)."""
+
+import numpy as np
+
+from repro.core.selector import ScheduleSelector
+from repro.core.traffic import RouterConfig, traffic_matrix
+
+
+def _traffic(seed, alpha=0.3, n=8, tpr=2048):
+    rng = np.random.default_rng(seed)
+    r = RouterConfig("t", 16, 2)
+    return traffic_matrix(rng, r, np.full(n, tpr), n_ranks=n, skew_alpha=alpha)
+
+
+class TestScheduleSelector:
+    def test_first_observation_plans(self):
+        sel = ScheduleSelector(8)
+        entry, changed = sel.observe(_traffic(0))
+        assert changed and sel.replans == 1
+        assert entry.schedule.num_phases >= 1
+
+    def test_stable_traffic_keeps_schedule(self):
+        sel = ScheduleSelector(8)
+        sel.observe(_traffic(0))
+        for seed in range(1, 6):  # same distributional regime
+            _, changed = sel.observe(_traffic(0) * (1 + 0.02 * seed))
+            assert not changed
+        assert sel.replans == 1 and sel.switches == 0
+
+    def test_drift_triggers_replan(self):
+        sel = ScheduleSelector(8, ema=1.0)  # react immediately (test)
+        sel.observe(_traffic(0))
+        # a very different regime: rotate the heavy pairs
+        drifted = np.roll(_traffic(0), 3, axis=1)
+        np.fill_diagonal(drifted, 0.0)
+        entry, changed = sel.observe(drifted)
+        assert changed
+        assert sel.replans == 2
+        # and the new schedule serves the drifted traffic losslessly-ish
+        assert entry.drop_fraction(drifted) <= sel.drop_tolerance + 1e-9
+
+    def test_returning_regime_reuses_library(self):
+        sel = ScheduleSelector(8, ema=1.0)
+        a = _traffic(0)
+        b = np.roll(a, 3, axis=1)
+        np.fill_diagonal(b, 0.0)
+        sel.observe(a)
+        sel.observe(b)
+        replans = sel.replans
+        entry, changed = sel.observe(a)  # regime A returns
+        assert changed
+        assert sel.replans == replans, "should reuse the library, not replan"
