@@ -19,7 +19,7 @@ def main() -> None:
         fig4_large_batch,
     )
 
-    from benchmarks import a2a_hlo, overlap_model
+    from benchmarks import a2a_hlo, bench_scheduler, overlap_model
 
     modules = [
         ("fig1", fig1_compute_knee.run),
@@ -28,6 +28,7 @@ def main() -> None:
         ("fig4", fig4_large_batch.run),
         ("overlap_model", overlap_model.run),
         ("a2a_hlo", a2a_hlo.run),
+        ("bench_scheduler", bench_scheduler.run),
     ]
 
     failed = []

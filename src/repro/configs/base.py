@@ -24,6 +24,11 @@ class MoECfg:
     # per-microbatch ZeRO-3 expert-weight regathers; tokens are
     # all-gathered/reduce-scattered around the expert GEMM instead).
     expert_2d: bool = False
+    # Run the expert SwiGLU through the Pallas moe_gemm kernel (TPU hot
+    # path; interpret mode elsewhere).  Block sizes come from the kernel's
+    # autotune table keyed on (C, d, f); shapes the kernel can't tile fall
+    # back to the einsum oracle.
+    use_pallas: bool = False
 
 
 @dataclasses.dataclass(frozen=True)

@@ -11,7 +11,7 @@ Public API:
 """
 
 from repro.core.baselines import ideal_a2a_tokens, ring_a2a_tokens
-from repro.core.bvn import bvn_coefficients, bvn_decompose
+from repro.core.bvn import bvn_coefficients, bvn_decompose, bvn_decompose_batch
 from repro.core.cost_models import (
     CommModel,
     ComputeModel,
@@ -19,13 +19,18 @@ from repro.core.cost_models import (
     knee_model,
     linear_model,
 )
-from repro.core.decompose import STRATEGIES, decompose
+from repro.core.decompose import STRATEGIES, decompose, decompose_batch
 from repro.core.hierarchical import (
     hierarchical_decompose,
     simulate_hierarchical,
     split_traffic,
 )
-from repro.core.maxweight import maxweight_decompose
+from repro.core.maxweight import (
+    WarmState,
+    maxweight_decompose,
+    maxweight_decompose_batch,
+    warm_state_of,
+)
 from repro.core.schedule import A2ASchedule, order_phases, plan_schedule, ring_schedule
 from repro.core.selector import ScheduleEntry, ScheduleSelector
 from repro.core.simulator import (
@@ -36,7 +41,7 @@ from repro.core.simulator import (
 )
 from repro.core.sinkhorn import is_doubly_stochastic, sinkhorn
 from repro.core.traffic import ROUTERS, WORKLOADS, gen_trace, traffic_matrix
-from repro.core.types import Decomposition, Phase
+from repro.core.types import Decomposition, Phase, StackedPhases
 
 __all__ = [
     "A2ASchedule",
@@ -49,10 +54,14 @@ __all__ = [
     "ScheduleEntry",
     "ScheduleSelector",
     "SimResult",
+    "StackedPhases",
     "WORKLOADS",
+    "WarmState",
     "bvn_coefficients",
     "bvn_decompose",
+    "bvn_decompose_batch",
     "decompose",
+    "decompose_batch",
     "fit_knee",
     "gen_trace",
     "hierarchical_decompose",
@@ -61,6 +70,7 @@ __all__ = [
     "knee_model",
     "linear_model",
     "maxweight_decompose",
+    "maxweight_decompose_batch",
     "order_phases",
     "plan_schedule",
     "ring_a2a_tokens",
@@ -72,4 +82,5 @@ __all__ = [
     "sinkhorn",
     "split_traffic",
     "traffic_matrix",
+    "warm_state_of",
 ]

@@ -31,7 +31,12 @@ from scipy.optimize import linear_sum_assignment
 from repro.core.sinkhorn import sinkhorn
 from repro.core.types import Decomposition, Phase
 
-__all__ = ["bvn_coefficients", "bvn_decompose", "bottleneck_matching"]
+__all__ = [
+    "bvn_coefficients",
+    "bvn_decompose",
+    "bvn_decompose_batch",
+    "bottleneck_matching",
+]
 
 _SUPPORT_TOL = 1e-9
 
@@ -143,12 +148,43 @@ def bvn_decompose(
     remaining = a.copy()
     phases: list[Phase] = []
     idx = np.arange(n)
-    for lam, perm in coeffs:
-        slot = lam * frame
-        alloc = np.full(n, slot)
-        sent = np.minimum(remaining[idx, perm], alloc)
-        remaining[idx, perm] -= sent
-        phases.append(Phase(perm=perm, alloc=alloc, sent=sent))
+    if coeffs:
+        # Vectorized framed delivery: phase k delivers
+        # min(demand, cum_slots_k) - min(demand, cum_slots_{k-1}) per pair,
+        # so the whole K-phase greedy loop is one grouped cumsum over
+        # (src, dst) pair ids instead of K Python iterations.
+        k_total = len(coeffs)
+        perms = np.stack([p for _, p in coeffs])  # [K, n]
+        slots = np.array([lam * frame for lam, _ in coeffs])  # [K]
+        flat = (idx[None, :] * n + perms).ravel()  # k-major pair ids
+        slot_flat = np.broadcast_to(slots[:, None], (k_total, n)).ravel()
+        order = np.argsort(flat, kind="stable")  # pair groups, k ascending
+        sf, ss = flat[order], slot_flat[order]
+        csum = np.cumsum(ss)
+        new_group = np.concatenate([[True], sf[1:] != sf[:-1]])
+        starts = np.flatnonzero(new_group)
+        # cumulative slots within each pair group, inclusive of this phase
+        group_base = np.zeros(sf.size)
+        group_base[starts] = csum[starts] - ss[starts]
+        np.maximum.accumulate(group_base, out=group_base)
+        cum_incl = csum - group_base
+        cum_before = cum_incl - ss
+        demand = a.ravel()[sf]
+        sent_sorted = np.minimum(demand, cum_incl) - np.minimum(
+            demand, cum_before
+        )
+        sent_flat = np.empty(sf.size)
+        sent_flat[order] = sent_sorted
+        sent = sent_flat.reshape(k_total, n)
+        alloc = np.broadcast_to(slots[:, None], (k_total, n)).copy()
+        delivered = np.zeros(n * n)
+        np.add.at(delivered, sf, sent_sorted)
+        remaining = (a.ravel() - delivered).reshape(n, n).copy()
+        np.clip(remaining, 0.0, None, out=remaining)
+        phases = [
+            Phase.unchecked(perm=perms[k], alloc=alloc[k], sent=sent[k])
+            for k in range(k_total)
+        ]
     # Numerical guard: deliver any crumbs left by coefficient truncation in
     # extra minimal phases (rare; keeps Decomposition.verify exact).
     guard = 0
@@ -174,3 +210,26 @@ def bvn_decompose(
             "num_bvn_matchings": len(coeffs),
         },
     )
+
+
+def bvn_decompose_batch(
+    matrices: np.ndarray,
+    *,
+    tol: float = 1e-6,
+    bottleneck: bool = False,
+    max_matchings: int | None = None,
+) -> list[Decomposition]:
+    """Decompose a stack of traffic matrices ``[L, n, n]`` (one per MoE
+    layer / regime) through the full Sinkhorn -> BvN -> framed-delivery
+    pipeline.  The per-matrix matching extraction is inherently sequential
+    (each coefficient changes the support), but the framed delivery and
+    phase construction run vectorized per layer."""
+    stack = np.asarray(matrices, dtype=np.float64)
+    if stack.ndim != 3 or stack.shape[1] != stack.shape[2]:
+        raise ValueError(f"expected [L, n, n] stack, got {stack.shape}")
+    return [
+        bvn_decompose(
+            stack[i], tol=tol, bottleneck=bottleneck, max_matchings=max_matchings
+        )
+        for i in range(stack.shape[0])
+    ]

@@ -109,5 +109,8 @@ class CommModel:
             tokens_per_us=bytes_per_us / bytes_per_token, reconf_us=reconf_us
         )
 
-    def comm_us(self, tokens: float) -> float:
-        return float(tokens) / self.tokens_per_us
+    def comm_us(self, tokens) -> np.ndarray | float:
+        """Transfer time for ``tokens`` (scalar or array, vectorized)."""
+        t = np.asarray(tokens, dtype=np.float64)
+        out = t / self.tokens_per_us
+        return float(out) if out.ndim == 0 else out

@@ -13,9 +13,9 @@ import numpy as np
 
 from repro.core.bvn import bvn_decompose
 from repro.core.maxweight import maxweight_decompose
-from repro.core.types import Decomposition, Phase
+from repro.core.types import Decomposition, Phase, StackedPhases
 
-__all__ = ["decompose", "STRATEGIES"]
+__all__ = ["decompose", "decompose_batch", "STRATEGIES"]
 
 STRATEGIES = ("bvn", "bvn-bottleneck", "maxweight", "shift")
 
@@ -29,12 +29,15 @@ def _shift_decompose(matrix: np.ndarray) -> Decomposition:
     a = np.asarray(matrix, dtype=np.float64)
     n = a.shape[0]
     idx = np.arange(n)
-    phases = []
-    for k in range(1, n):
-        perm = (idx + k) % n
-        sent = a[idx, perm].copy()
-        phases.append(Phase(perm=perm, alloc=sent.copy(), sent=sent))
-    return Decomposition(matrix=a, phases=phases, strategy="shift", meta={})
+    shifts = np.arange(1, n)[:, None]  # [n-1, 1]
+    perms = (idx[None, :] + shifts) % n  # [n-1, n]
+    sent = a[idx[None, :], perms].copy() if n > 1 else np.zeros((0, n))
+    stacked = StackedPhases(perms=perms, alloc=sent.copy(), sent=sent)
+    d = Decomposition(
+        matrix=a, phases=stacked.to_phases(), strategy="shift", meta={}
+    )
+    d._stacked_cache = stacked
+    return d
 
 
 def decompose(
@@ -66,3 +69,48 @@ def decompose(
         raise ValueError(f"unknown strategy {strategy!r}; one of {STRATEGIES}")
     d.meta["local_tokens"] = local
     return d
+
+
+def decompose_batch(
+    matrices: np.ndarray,
+    strategy: str,
+    *,
+    keep_diagonal: bool = False,
+    warm_start: list | None = None,
+    **kwargs,
+) -> list[Decomposition]:
+    """Decompose a stack of traffic matrices ``[L, n, n]`` in one call.
+
+    One matrix per MoE layer (or regime); the diagonal handling matches
+    ``decompose``.  ``warm_start`` (max-weight only) is a per-layer list of
+    ``WarmState`` from the previous step — layers whose off-diagonal
+    support is unchanged re-plan without any LAP solves.
+    """
+    stack = np.asarray(matrices, dtype=np.float64)
+    if stack.ndim != 3 or stack.shape[1] != stack.shape[2]:
+        raise ValueError(f"expected [L, n, n] stack, got {stack.shape}")
+    n_layers = stack.shape[0]
+    stack = stack.copy()
+    local = np.zeros((n_layers, stack.shape[1]))
+    if not keep_diagonal:
+        local = np.einsum("lii->li", stack).copy()
+        np.einsum("lii->li", stack)[:] = 0.0
+    if strategy == "maxweight":
+        from repro.core.maxweight import maxweight_decompose_batch
+
+        out = maxweight_decompose_batch(stack, warm_start=warm_start, **kwargs)
+    elif warm_start is not None:
+        raise ValueError("warm_start is only supported for 'maxweight'")
+    elif strategy in ("bvn", "bvn-bottleneck"):
+        from repro.core.bvn import bvn_decompose_batch
+
+        out = bvn_decompose_batch(
+            stack, bottleneck=(strategy == "bvn-bottleneck"), **kwargs
+        )
+    elif strategy == "shift":
+        out = [_shift_decompose(stack[i]) for i in range(n_layers)]
+    else:
+        raise ValueError(f"unknown strategy {strategy!r}; one of {STRATEGIES}")
+    for i, d in enumerate(out):
+        d.meta["local_tokens"] = local[i]
+    return out

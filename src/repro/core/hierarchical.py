@@ -22,24 +22,28 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.cost_models import CommModel, ComputeModel
-from repro.core.decompose import decompose
+from repro.core.decompose import decompose, decompose_batch
 from repro.core.simulator import SimResult, simulate_decomposition
-from repro.core.types import Decomposition, Phase
+from repro.core.types import Decomposition, StackedPhases
 
 __all__ = ["split_traffic", "hierarchical_decompose", "simulate_hierarchical"]
 
 
 def split_traffic(matrix: np.ndarray, pod_size: int):
-    """(intra, inter): same-pod block-diagonal part and the remainder."""
+    """(intra, inter): same-pod block-diagonal part and the remainder.
+
+    Every entry lands in exactly one part (``intra + inter == matrix``
+    identically — the partition neither drops nor duplicates demand mass).
+    """
     a = np.asarray(matrix, dtype=np.float64)
     n = a.shape[0]
     assert n % pod_size == 0, (n, pod_size)
-    pods = n // pod_size
-    mask = np.zeros((n, n), dtype=bool)
-    for p in range(pods):
-        s = slice(p * pod_size, (p + 1) * pod_size)
-        mask[s, s] = True
-    return a * mask, a * ~mask
+    mask = (np.arange(n)[:, None] // pod_size) == (
+        np.arange(n)[None, :] // pod_size
+    )
+    intra = np.where(mask, a, 0.0)
+    inter = np.where(mask, 0.0, a)
+    return intra, inter
 
 
 def _union_pod_phases(decomps, pod_size: int, n: int, intra_offdiag) -> Decomposition:
@@ -47,23 +51,23 @@ def _union_pod_phases(decomps, pod_size: int, n: int, intra_offdiag) -> Decompos
     each pod's phase k (identity in exhausted pods — pods' circuits run
     in parallel, so the union's duration is the max pod phase)."""
     k_max = max((d.num_phases for d in decomps), default=0)
-    phases = []
-    for k in range(k_max):
-        perm = np.arange(n)
-        alloc = np.zeros(n)
-        sent = np.zeros(n)
-        for p, d in enumerate(decomps):
-            if k >= d.num_phases:
-                continue
-            ph = d.phases[k]
-            base = p * pod_size
-            perm[base : base + pod_size] = ph.perm + base
-            alloc[base : base + pod_size] = ph.alloc
-            sent[base : base + pod_size] = ph.sent
-        phases.append(Phase(perm=perm, alloc=alloc, sent=sent))
-    return Decomposition(
-        matrix=intra_offdiag, phases=phases, strategy="hier-intra"
+    perms = np.broadcast_to(np.arange(n), (k_max, n)).copy()
+    alloc = np.zeros((k_max, n))
+    sent = np.zeros((k_max, n))
+    for p, d in enumerate(decomps):
+        st = d.stacked()
+        k = st.num_phases
+        base = p * pod_size
+        sl = slice(base, base + pod_size)
+        perms[:k, sl] = st.perms + base
+        alloc[:k, sl] = st.alloc
+        sent[:k, sl] = st.sent
+    stacked = StackedPhases(perms=perms, alloc=alloc, sent=sent)
+    out = Decomposition(
+        matrix=intra_offdiag, phases=stacked.to_phases(), strategy="hier-intra"
     )
+    out._stacked_cache = stacked
+    return out
 
 
 def hierarchical_decompose(
@@ -74,10 +78,12 @@ def hierarchical_decompose(
     n = a.shape[0]
     intra, inter = split_traffic(a, pod_size)
     pods = n // pod_size
-    per_pod = []
-    for p in range(pods):
-        s = slice(p * pod_size, (p + 1) * pod_size)
-        per_pod.append(decompose(intra[s, s], strategy, keep_diagonal=False))
+    # Block-diagonal extraction -> one batched decomposition over pods.
+    blocks = (
+        intra.reshape(pods, pod_size, pods, pod_size)
+        .transpose(0, 2, 1, 3)[np.arange(pods), np.arange(pods)]
+    )
+    per_pod = decompose_batch(blocks, strategy, keep_diagonal=False)
     intra_offdiag = intra.copy()
     np.fill_diagonal(intra_offdiag, 0.0)
     intra_d = _union_pod_phases(per_pod, pod_size, n, intra_offdiag)
@@ -116,12 +122,23 @@ def simulate_hierarchical(
     # --- flat: one fabric, slowest-pair phase timing ----------------------
     flat_d = decompose(a, strategy)
     pod_of = np.arange(n) // pod_size
-    makespan = 0.0
-    for ph in flat_d.phases:
-        crosses = (pod_of != pod_of[ph.perm])[ph.sent > 0].any()
-        cm = comm_inter if crosses else comm_intra
-        makespan += cm.reconf_us + cm.comm_us(ph.duration_tokens)
-    recv_total = sum(ph.recv_tokens() for ph in flat_d.phases) + local
+    st = flat_d.stacked()
+    if st.num_phases:
+        crosses = (
+            (pod_of[None, :] != pod_of[st.perms]) & (st.sent > 0)
+        ).any(axis=1)
+        durs = st.durations()
+        makespan = float(
+            np.where(
+                crosses,
+                comm_inter.reconf_us + comm_inter.comm_us(durs),
+                comm_intra.reconf_us + comm_intra.comm_us(durs),
+            ).sum()
+        )
+        recv_total = st.recv_tokens().sum(axis=0) + local
+    else:
+        makespan = 0.0
+        recv_total = local
     flat = makespan + float(np.max(compute(recv_total)))
 
     return {

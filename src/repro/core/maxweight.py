@@ -12,16 +12,210 @@ Unlike BvN this operates on the *raw* matrix — no Sinkhorn step — so
 ``alloc == sent`` for every pair: no normalization-induced idle capacity.
 The cost is intra-matching imbalance (§3.3): the phase holds the circuit
 for its largest transfer while smaller pairs idle.
+
+Fast path (this file's scheduler-hot-path additions):
+
+* ``maxweight_decompose_batch`` — the controller's one-call-per-drift-
+  event entry point: decompose a stack of traffic matrices (one per MoE
+  layer / regime) with per-layer warm starts.  Cold layers delegate to
+  the single-matrix path (LAP-bound, bit-identical to the seed); the
+  batch win is warm-start amortization across the stack.
+* **Warm start** — at a traffic-drift event the controller re-plans from
+  a matrix whose *support* (set of positive pairs) is usually unchanged;
+  ``warm_start`` replays the previous step's matchings (no LAP solves at
+  all) and falls back to cold greedy only for whatever residual the
+  replay leaves.  On an unchanged matrix the replay is bit-identical to
+  the cold path; under pure weight drift it stays a valid decomposition
+  (delivers all demand) whose matchings may be mildly stale — the
+  selector's drop-tolerance loop catches any real regression.
+
+``maxweight_decompose_reference`` preserves the seed implementation
+verbatim as the parity oracle for tests and ``benchmarks/bench_scheduler``.
 """
 
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 from scipy.optimize import linear_sum_assignment
 
-from repro.core.types import Decomposition, Phase
+from repro.core.types import Decomposition, Phase, StackedPhases
 
-__all__ = ["maxweight_decompose"]
+__all__ = [
+    "maxweight_decompose",
+    "maxweight_decompose_batch",
+    "maxweight_decompose_reference",
+    "WarmState",
+    "warm_state_of",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class WarmState:
+    """Everything needed to replay a previous decomposition.
+
+    ``support`` is the positive pattern of the matrix the perms were
+    computed for; the replay is only taken when the new matrix has the
+    *same* support (steady-state re-planning) and the same planning
+    options (``min_fill``/``max_matchings``), which guarantees the
+    replayed perms cover every positive entry under the same contract.
+    """
+
+    support: np.ndarray  # [n, n] bool
+    perms: np.ndarray  # [K, n] int64 (greedy + residual-sweep phases)
+    min_fill: float = 0.0
+    max_matchings: int | None = None
+    # phases [0, n_greedy) used min_fill deferral semantics; the rest are
+    # residual-sweep full clears (only distinct when min_fill > 0).
+    n_greedy: int = 0
+
+
+def warm_state_of(decomp: Decomposition) -> WarmState:
+    """Extract a ``WarmState`` from a previous max-weight decomposition."""
+    perms = decomp.stacked().perms
+    return WarmState(
+        support=np.asarray(decomp.matrix) > 0,
+        perms=perms,
+        min_fill=float(decomp.meta.get("min_fill") or 0.0),
+        max_matchings=decomp.meta.get("max_matchings"),
+        n_greedy=int(decomp.meta.get("n_greedy", perms.shape[0])),
+    )
+
+
+def _greedy_phases(
+    residual: np.ndarray,
+    *,
+    max_matchings: int | None,
+    min_fill: float,
+    phases_done: int = 0,
+) -> tuple[list[np.ndarray], list[np.ndarray], int]:
+    """The seed greedy loop, emitting raw (perm, sent) arrays plus the
+    count of greedy (pre-sweep) phases.
+
+    Bit-identical LAP sequence to ``maxweight_decompose_reference`` —
+    the fast path saves only Python/object overhead, never changes a
+    matching.
+    """
+    n = residual.shape[0]
+    idx = np.arange(n)
+    perms: list[np.ndarray] = []
+    sents: list[np.ndarray] = []
+    # Worst case nnz iterations; each clears >= 1 positive entry.
+    hard_cap = int((residual > 0).sum()) + 1
+    while residual.max() > 0 and len(perms) < hard_cap:
+        if (
+            max_matchings is not None
+            and len(perms) + phases_done >= max_matchings
+        ):
+            break
+        rows, cols = linear_sum_assignment(residual, maximize=True)
+        perm = np.empty(n, dtype=np.int64)
+        perm[rows] = cols
+        sent = residual[idx, perm].copy()
+        if min_fill > 0.0:
+            # Defer near-empty pairs; they'll be picked up once they are
+            # relatively heavy (or by the final residual sweep).
+            keep = sent >= min_fill * sent.max()
+            sent = np.where(keep, sent, 0.0)
+        if sent.sum() <= 0:
+            break
+        residual[idx, perm] -= sent
+        perms.append(perm)
+        sents.append(sent)
+    n_greedy = len(perms)
+    # If capped, sweep the residual with support matchings until done.
+    while residual.max() > 0:
+        rows, cols = linear_sum_assignment(residual, maximize=True)
+        perm = np.empty(n, dtype=np.int64)
+        perm[rows] = cols
+        sent = residual[idx, perm].copy()
+        if sent.sum() <= 0:
+            break
+        residual[idx, perm] = 0.0
+        perms.append(perm)
+        sents.append(sent)
+    return perms, sents, n_greedy
+
+
+def _warm_replay(
+    residual: np.ndarray, warm_perms: np.ndarray, min_fill: float
+) -> tuple[np.ndarray, np.ndarray]:
+    """Replay previous matchings against a new residual — no LAP solves.
+
+    Each replayed phase clears whatever mass sits on its matched pairs;
+    phases whose pairs were already drained collapse away.  When the
+    support is unchanged the replay covers every positive entry (each was
+    cleared by one of these perms last step), so the residual afterwards
+    is exactly zero unless ``min_fill`` deferred entries — the caller
+    finishes those with the cold loop.
+    """
+    n = residual.shape[0]
+    k_warm = warm_perms.shape[0]
+    if k_warm == 0:
+        return np.zeros((0, n), dtype=np.int64), np.zeros((0, n))
+    if min_fill == 0.0:
+        # Every pair is cleared in full at its FIRST appearance across the
+        # replayed perms, so the whole replay is one first-occurrence
+        # scatter: np.unique on flattened (src, dst) pair ids returns the
+        # first raveled index, and ravel order is phase-major.
+        flat_pairs = (np.arange(n)[None, :] * n + warm_perms).ravel()
+        uniq, first = np.unique(flat_pairs, return_index=True)
+        sent = np.zeros(k_warm * n)
+        sent[first] = residual.ravel()[uniq]
+        sent = sent.reshape(k_warm, n)
+        residual.ravel()[uniq] = 0.0
+        live = sent.max(axis=1) > 0
+        return warm_perms[live], sent[live]
+    idx = np.arange(n)
+    perms: list[np.ndarray] = []
+    sents: list[np.ndarray] = []
+    for perm in warm_perms:
+        sent = residual[idx, perm].copy()
+        mx = sent.max()
+        if mx <= 0:
+            continue
+        keep = sent >= min_fill * mx
+        sent = np.where(keep, sent, 0.0)
+        if sent.sum() <= 0:
+            continue
+        residual[idx, perm] -= sent
+        perms.append(perm)
+        sents.append(sent)
+    if not perms:
+        return np.zeros((0, n), dtype=np.int64), np.zeros((0, n))
+    return np.stack(perms), np.stack(sents)
+
+
+def _build(
+    a: np.ndarray,
+    perms: np.ndarray,
+    sent: np.ndarray,
+    *,
+    max_matchings: int | None,
+    min_fill: float,
+    warm_hit: bool,
+    n_greedy: int,
+) -> Decomposition:
+    alloc = sent.copy()  # max-weight transfers everything matched
+    phases = [
+        Phase.unchecked(perm=perms[k], alloc=alloc[k], sent=sent[k])
+        for k in range(perms.shape[0])
+    ]
+    d = Decomposition(
+        matrix=a,
+        phases=phases,
+        strategy="maxweight",
+        meta={
+            "max_matchings": max_matchings,
+            "min_fill": min_fill,
+            "warm_hit": warm_hit,
+            "n_greedy": n_greedy,
+        },
+    )
+    # Pre-seed the stacked cache: the planner consumes it immediately.
+    d._stacked_cache = StackedPhases(perms=perms, alloc=alloc, sent=sent)
+    return d
 
 
 def maxweight_decompose(
@@ -29,6 +223,7 @@ def maxweight_decompose(
     *,
     max_matchings: int | None = None,
     min_fill: float = 0.0,
+    warm_start: WarmState | None = None,
 ) -> Decomposition:
     """Greedy max-weight decomposition.
 
@@ -40,7 +235,99 @@ def maxweight_decompose(
       min_fill: entries smaller than ``min_fill * max_entry_of_matching``
         may be deferred to later phases (0 = transfer everything matched,
         the paper's plain greedy).
+      warm_start: previous step's ``WarmState``; taken only when the new
+        matrix has the same positive support (steady-state re-planning),
+        making the re-plan LAP-free.
     """
+    a = np.asarray(matrix, dtype=np.float64)
+    if (a < 0).any():
+        raise ValueError("traffic matrix must be nonnegative")
+    residual = a.copy()
+    warm_hit = (
+        warm_start is not None
+        and warm_start.support.shape == a.shape
+        and warm_start.min_fill == min_fill
+        and warm_start.max_matchings == max_matchings
+        and bool(np.array_equal(a > 0, warm_start.support))
+    )
+    n = a.shape[0]
+    perms = np.zeros((0, n), dtype=np.int64)
+    sent = np.zeros((0, n))
+    if warm_hit:
+        # With min_fill the sweep phases have different (full-clear)
+        # semantics, so only the greedy prefix is replayed and the sweep
+        # re-runs; with min_fill == 0 every phase is a full clear and the
+        # whole schedule replays LAP-free.
+        warm_perms = (
+            warm_start.perms
+            if min_fill == 0.0
+            else warm_start.perms[: warm_start.n_greedy]
+        )
+        perms, sent = _warm_replay(residual, warm_perms, min_fill)
+    n_greedy = perms.shape[0]
+    if residual.max() > 0:
+        cold_perms, cold_sents, cold_greedy = _greedy_phases(
+            residual,
+            max_matchings=max_matchings,
+            min_fill=min_fill,
+            phases_done=perms.shape[0],
+        )
+        n_greedy += cold_greedy
+        if cold_perms:
+            perms = np.concatenate([perms, np.stack(cold_perms)])
+            sent = np.concatenate([sent, np.stack(cold_sents)])
+    return _build(
+        a,
+        perms,
+        sent,
+        max_matchings=max_matchings,
+        min_fill=min_fill,
+        warm_hit=warm_hit,
+        n_greedy=n_greedy,
+    )
+
+
+def maxweight_decompose_batch(
+    matrices: np.ndarray,
+    *,
+    max_matchings: int | None = None,
+    min_fill: float = 0.0,
+    warm_start: list[WarmState | None] | None = None,
+) -> list[Decomposition]:
+    """Decompose a stack of traffic matrices ``[L, n, n]`` in one call.
+
+    One entry per MoE layer (or traffic regime); layers whose support is
+    unchanged since the previous step replay their old matchings LAP-free
+    via ``warm_start`` (list aligned with the stack; None entries run
+    cold).  Returns one ``Decomposition`` per layer.
+    """
+    stack = np.asarray(matrices, dtype=np.float64)
+    if stack.ndim != 3 or stack.shape[1] != stack.shape[2]:
+        raise ValueError(f"expected [L, n, n] stack, got {stack.shape}")
+    if (stack < 0).any():
+        raise ValueError("traffic matrices must be nonnegative")
+    if warm_start is not None and len(warm_start) != stack.shape[0]:
+        raise ValueError("warm_start must align with the matrix stack")
+    out: list[Decomposition] = []
+    for i in range(stack.shape[0]):
+        out.append(
+            maxweight_decompose(
+                stack[i],
+                max_matchings=max_matchings,
+                min_fill=min_fill,
+                warm_start=warm_start[i] if warm_start is not None else None,
+            )
+        )
+    return out
+
+
+def maxweight_decompose_reference(
+    matrix: np.ndarray,
+    *,
+    max_matchings: int | None = None,
+    min_fill: float = 0.0,
+) -> Decomposition:
+    """Seed implementation, kept verbatim as the fast path's parity oracle."""
     a = np.asarray(matrix, dtype=np.float64)
     if (a < 0).any():
         raise ValueError("traffic matrix must be nonnegative")

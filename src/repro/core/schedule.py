@@ -8,6 +8,10 @@ Two consumers:
    permutations + per-phase capacities that ``repro.parallel.collectives``
    executes as ``ppermute`` phases under ``shard_map``.  Capacities are
    rounded up to a TPU-friendly quantum so block shapes stay aligned.
+
+Planning sits on the controller critical path at every traffic-drift
+event, so everything here works on the stacked ``[K, n]`` phase arrays
+(``Decomposition.stacked()``) instead of looping Python ``Phase`` objects.
 """
 
 from __future__ import annotations
@@ -18,13 +22,21 @@ import numpy as np
 
 from repro.core.types import Decomposition
 
-__all__ = ["order_phases", "A2ASchedule", "plan_schedule", "plan_schedule_bvn", "ring_schedule"]
+__all__ = [
+    "order_phases",
+    "A2ASchedule",
+    "phase_offsets",
+    "plan_schedule",
+    "plan_schedule_bvn",
+    "ring_schedule",
+]
 
 
 def _phase_times(decomp: Decomposition) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
     """(dispatch, compute-proxy, combine) duration per phase in token units."""
-    d = np.array([p.duration_tokens for p in decomp.phases])
-    c = np.array([p.recv_tokens().max() for p in decomp.phases])
+    st = decomp.stacked()
+    d = st.durations()
+    c = st.recv_tokens().max(axis=1) if st.num_phases else np.zeros(0)
     return d, c, d.copy()
 
 
@@ -104,54 +116,103 @@ class A2ASchedule:
     def multi_phase(self) -> bool:
         return self.offsets is not None
 
+    def cap_matrix(self, caps: np.ndarray | None = None) -> np.ndarray:
+        """Total per-(src, dst) capacity across phases. [n, n] float64.
+
+        For single-phase-pair schedules (max-weight/shift) each served
+        pair appears once, so this is exactly its phase cap; for BvN it is
+        the pair's summed slot budget.  This is the selector fast path's
+        scoring matrix: planned drops against observed traffic ``off`` are
+        ``max(off - cap_matrix, 0)`` in one vectorized pass.
+
+        ``caps`` overrides the schedule's own phase caps (same [K] layout)
+        — the MoE runtime rescales caps to per-expert units.
+        """
+        n = self.n
+        caps = self.caps if caps is None else np.asarray(caps)
+        out = np.zeros((n, n))
+        if self.num_phases:
+            src = np.tile(np.arange(n), self.num_phases)
+            caps_b = np.broadcast_to(
+                caps.astype(np.float64)[:, None], self.perms.shape
+            ).ravel()
+            v = self.valid.ravel()
+            np.add.at(out, (src[v], self.perms.ravel()[v]), caps_b[v])
+        return out
+
     def pair_capacity(self) -> int:
         """Largest total slots any (src, dst) pair accumulates."""
         if not self.multi_phase:
             return int(self.caps.max()) if self.caps.size else 0
-        total = 0
-        for i in range(self.n):
-            per_dst: dict[int, int] = {}
-            for k in range(self.num_phases):
-                if self.valid[k, i]:
-                    d = int(self.perms[k, i])
-                    per_dst[d] = per_dst.get(d, 0) + int(self.caps[k])
-            if per_dst:
-                total = max(total, max(per_dst.values()))
-        return total
+        per_pair = self.cap_matrix()
+        return int(per_pair.max()) if per_pair.size else 0
 
     def validate(self) -> None:
         n = self.n
-        seen_pairs: set[tuple[int, int]] = set()
-        for k in range(self.num_phases):
-            if sorted(self.perms[k].tolist()) != list(range(n)):
-                raise ValueError(f"phase {k} perm invalid: {self.perms[k]}")
-            for i in range(n):
-                if self.valid[k, i]:
-                    pair = (i, int(self.perms[k, i]))
-                    if pair in seen_pairs and not self.multi_phase:
-                        raise ValueError(f"pair {pair} valid in two phases")
-                    seen_pairs.add(pair)
+        if self.num_phases == 0:
+            return
+        perms = np.asarray(self.perms)
+        if not (np.sort(perms, axis=1) == np.arange(n)[None, :]).all():
+            bad = int(
+                np.flatnonzero(
+                    (np.sort(perms, axis=1) != np.arange(n)[None, :]).any(1)
+                )[0]
+            )
+            raise ValueError(f"phase {bad} perm invalid: {perms[bad]}")
+        if not self.multi_phase:
+            src = np.tile(np.arange(n), self.num_phases)
+            pair_ids = (src * n + perms.ravel())[self.valid.ravel()]
+            uniq, counts = np.unique(pair_ids, return_counts=True)
+            if counts.size and counts.max() > 1:
+                dup = int(uniq[np.argmax(counts)])
+                raise ValueError(
+                    f"pair {(dup // n, dup % n)} valid in two phases"
+                )
         if (self.caps <= 0).any():
             raise ValueError("capacities must be positive")
         if self.multi_phase:
-            # offsets must tile disjoint ranges per pair
-            for i in range(n):
-                cursor: dict[int, int] = {}
-                for k in range(self.num_phases):
-                    if not self.valid[k, i]:
-                        continue
-                    d = int(self.perms[k, i])
-                    expect = cursor.get(d, 0)
-                    if int(self.offsets[k, i]) != expect:
-                        raise ValueError(
-                            f"phase {k} src {i}: offset "
-                            f"{self.offsets[k, i]} != cumulative {expect}"
-                        )
-                    cursor[d] = expect + int(self.caps[k])
+            # offsets must tile disjoint [offset, offset + cap) ranges per
+            # pair, in phase order
+            cursor = np.zeros((n, n), dtype=np.int64)
+            src = np.arange(n)
+            for k in range(self.num_phases):
+                sel = self.valid[k]
+                dst = perms[k][sel]
+                expect = cursor[src[sel], dst]
+                got = np.asarray(self.offsets[k])[sel]
+                if not np.array_equal(got, expect):
+                    i = int(np.flatnonzero(got != expect)[0])
+                    raise ValueError(
+                        f"phase {k} src {int(src[sel][i])}: offset "
+                        f"{got[i]} != cumulative {expect[i]}"
+                    )
+                cursor[src[sel], dst] += int(self.caps[k])
 
 
-def _round_up(x: int, quantum: int) -> int:
-    return int(-(-x // quantum) * quantum)
+def _round_up(x, quantum: int):
+    """Ceil to a multiple of ``quantum`` (scalar int or int array)."""
+    return -(-np.asarray(x) // quantum) * quantum
+
+
+def phase_offsets(
+    perms: np.ndarray, valid: np.ndarray, caps: np.ndarray
+) -> np.ndarray:
+    """Per-(phase, src) slot offsets for multi-phase-pair schedules.
+
+    Offset = cumulative caps of earlier valid phases on the same
+    (src, dst) pair, so phase k ships the slice [offset, offset + cap)
+    of the pair's bucket.  One vectorized row update per phase. [K, n]
+    """
+    n = perms.shape[1]
+    offsets = np.zeros(perms.shape, dtype=np.int64)
+    cursor = np.zeros((n, n), dtype=np.int64)
+    src = np.arange(n)
+    for k in range(perms.shape[0]):
+        sel = np.asarray(valid[k])
+        dst = perms[k][sel]
+        offsets[k][sel] = cursor[src[sel], dst]
+        cursor[src[sel], dst] += int(caps[k])
+    return offsets
 
 
 def ring_schedule(n: int, cap_per_phase: int) -> A2ASchedule:
@@ -160,8 +221,8 @@ def ring_schedule(n: int, cap_per_phase: int) -> A2ASchedule:
     This is the uniform-traffic degenerate case of max-weight decomposition
     and doubles as the framework's dense-A2A-equivalent schedule.
     """
-    perms = np.stack(
-        [(np.arange(n) + k) % n for k in range(1, n)], axis=0
+    perms = (
+        (np.arange(n)[None, :] + np.arange(1, n)[:, None]) % n
     ).astype(np.int32)
     caps = np.full(n - 1, cap_per_phase, dtype=np.int32)
     return A2ASchedule(perms=perms, caps=caps)
@@ -176,27 +237,23 @@ def plan_schedule_bvn(
     bucket.  This is the paper's *baseline* strategy made runnable on the
     ppermute fabric — expect many phases with small caps (Fig 2)."""
     n = decomp.n
-    perms, caps, valid, offsets = [], [], [], []
-    cursor = np.zeros((n, n), dtype=np.int64)  # slots consumed per pair
-    for p in decomp.phases:
-        v = (p.sent > 0) & (p.perm != np.arange(n))
-        if not v.any():
-            continue
-        cap = _round_up(max(int(np.ceil(p.alloc.max())), min_cap), quantum)
-        off = np.zeros(n, dtype=np.int64)
-        for i in range(n):
-            if v[i]:
-                off[i] = cursor[i, p.perm[i]]
-                cursor[i, p.perm[i]] += cap
-        perms.append(p.perm.astype(np.int32))
-        caps.append(cap)
-        valid.append(v)
-        offsets.append(off)
+    st = decomp.stacked()
+    valid_all = (st.sent > 0) & (st.perms != np.arange(n)[None, :])
+    keep = valid_all.any(axis=1)
+    perms = st.perms[keep].astype(np.int32)
+    valid = valid_all[keep]
+    caps = _round_up(
+        np.maximum(
+            np.ceil(st.alloc[keep].max(axis=1)).astype(np.int64), min_cap
+        ),
+        quantum,
+    ).astype(np.int32)
+    offsets = phase_offsets(perms, valid, caps)
     sched = A2ASchedule(
-        perms=np.stack(perms),
-        caps=np.array(caps, dtype=np.int32),
-        valid=np.stack(valid),
-        offsets=np.stack(offsets).astype(np.int32),
+        perms=perms,
+        caps=caps,
+        valid=valid,
+        offsets=offsets.astype(np.int32),
     )
     sched.validate()
     return sched
@@ -222,33 +279,36 @@ def plan_schedule(
     decomposition where each pair carries traffic in at most one phase
     (max-weight, shift — not BvN; see DESIGN.md §2.2).
     """
-    perms, caps, valid = [], [], []
-    for p in decomp.phases:
-        v = (p.sent > 0) & (p.perm != np.arange(decomp.n))
-        if not v.any():
-            continue  # nothing on the wire: skip the phase entirely
-        vols = p.alloc[v]
-        # cap_quantile trades planned token drops for padding bytes: the
-        # literal circuit semantic (max) pads every active pair to the
-        # heaviest transfer; a p90 cap drops <=10% of the heaviest pair's
-        # tail while shrinking every pair's buffer (EXPERIMENTS.md §Perf).
-        base = float(np.quantile(vols, cap_quantile)) if cap_quantile else float(vols.max())
-        cap = _round_up(max(int(np.ceil(base * slack)), min_cap), quantum)
-        perms.append(p.perm.astype(np.int32))
-        caps.append(cap)
-        valid.append(v)
-    if not perms:
+    n = decomp.n
+    st = decomp.stacked()
+    valid_all = (st.sent > 0) & (st.perms != np.arange(n)[None, :])
+    keep = valid_all.any(axis=1)
+    if not keep.any():
         # Degenerate (all-local) traffic: single identity phase.
-        n = decomp.n
         return A2ASchedule(
             perms=np.arange(n, dtype=np.int32)[None, :],
             caps=np.array([max(min_cap, quantum)], dtype=np.int32),
             valid=np.zeros((1, n), dtype=bool),
         )
+    valid = valid_all[keep]
+    alloc = st.alloc[keep]
+    # cap_quantile trades planned token drops for padding bytes: the
+    # literal circuit semantic (max) pads every active pair to the
+    # heaviest transfer; a p90 cap drops <=10% of the heaviest pair's
+    # tail while shrinking every pair's buffer (EXPERIMENTS.md §Perf).
+    if cap_quantile:
+        base = np.nanquantile(
+            np.where(valid, alloc, np.nan), cap_quantile, axis=1
+        )
+    else:
+        base = np.where(valid, alloc, -np.inf).max(axis=1)
+    caps = _round_up(
+        np.maximum(np.ceil(base * slack).astype(np.int64), min_cap), quantum
+    ).astype(np.int32)
     sched = A2ASchedule(
-        perms=np.stack(perms),
-        caps=np.array(caps, dtype=np.int32),
-        valid=np.stack(valid),
+        perms=st.perms[keep].astype(np.int32),
+        caps=caps,
+        valid=valid,
     )
     sched.validate()
     return sched

@@ -12,6 +12,14 @@ This mirrors real OCS controllers (plan circuits from demand estimates,
 re-plan on drift) and costs one recompile only when the library misses —
 ``ScheduleSelector.observe`` returns the chosen entry; the training loop
 swaps the jitted step function accordingly.
+
+``observe`` runs every step, so its scoring is fully vectorized: each
+entry precomputes its ``[n, n]`` capacity matrix at plan time (planned
+drops against traffic ``off`` are then ``max(off - caps, 0)`` — the
+sequential per-phase clamping telescopes exactly), and the whole library
+is scored in a single stacked ``[L, n, n]`` pass.  The library is LRU
+bounded; re-planning warm-starts from the previous decomposition, so a
+steady-state re-plan never solves an assignment problem.
 """
 
 from __future__ import annotations
@@ -21,6 +29,7 @@ import dataclasses
 import numpy as np
 
 from repro.core.decompose import decompose
+from repro.core.maxweight import WarmState, warm_state_of
 from repro.core.schedule import A2ASchedule, plan_schedule
 
 __all__ = ["ScheduleEntry", "ScheduleSelector"]
@@ -31,6 +40,11 @@ class ScheduleEntry:
     name: str
     reference: np.ndarray  # traffic matrix the schedule was planned for
     schedule: A2ASchedule
+    caps: np.ndarray | None = None  # [n, n] per-pair capacity (lazy)
+
+    def __post_init__(self):
+        if self.caps is None:
+            self.caps = self.schedule.cap_matrix()
 
     def mismatch(self, observed: np.ndarray) -> float:
         """Relative L1 distance between normalized traffic shapes."""
@@ -39,7 +53,25 @@ class ScheduleEntry:
         return float(np.abs(a - b).sum() / 2.0)
 
     def drop_fraction(self, observed: np.ndarray) -> float:
-        """Planned token-drop rate if this schedule served ``observed``."""
+        """Planned token-drop rate if this schedule served ``observed``.
+
+        Vectorized: sequentially clamping each phase's cap against the
+        remaining pair demand telescopes to one clamp against the pair's
+        *total* capacity (caps are nonnegative), so the whole phase loop
+        collapses into ``max(off - caps, 0)``.
+        """
+        off = observed.copy()
+        np.fill_diagonal(off, 0.0)
+        return self._drop_from_off(off, off.sum())
+
+    def _drop_from_off(self, off: np.ndarray, total: float) -> float:
+        """``drop_fraction`` given a pre-built diag-zeroed matrix + total."""
+        if total <= 0:
+            return 0.0
+        return float(np.maximum(off - self.caps, 0.0).sum() / total)
+
+    def drop_fraction_reference(self, observed: np.ndarray) -> float:
+        """Seed per-phase loop, kept as the fast path's parity oracle."""
         off = observed.copy()
         np.fill_diagonal(off, 0.0)
         rem = off.copy()
@@ -61,6 +93,10 @@ class ScheduleSelector:
       strategy: decomposition strategy for (re)planning.
       drop_tolerance: acceptable planned drop rate before switching.
       ema: smoothing for observed traffic (drift filter).
+      max_library: LRU bound on the schedule library (compiled executables
+        are expensive to keep alive; evicts the least-recently-used entry).
+        Floored at 2 — the current entry is never evicted, so a bound of 1
+        could not admit any replacement.
     """
 
     def __init__(
@@ -71,6 +107,7 @@ class ScheduleSelector:
         drop_tolerance: float = 0.02,
         ema: float = 0.3,
         plan_kwargs: dict | None = None,
+        max_library: int = 16,
     ):
         self.n = n
         self.strategy = strategy
@@ -84,16 +121,61 @@ class ScheduleSelector:
         self.smoothed: np.ndarray | None = None
         self.replans = 0
         self.switches = 0
+        self.evictions = 0
+        self.max_library = max(2, max_library)
+        self._caps_stack: np.ndarray | None = None  # [L, n, n] cache
+        self._last_used: dict[int, int] = {}  # id(entry) -> step
+        self._step = 0
+        self._warm: WarmState | None = None
+
+    def _touch(self, entry: ScheduleEntry) -> None:
+        self._last_used[id(entry)] = self._step
 
     def _plan(self, traffic: np.ndarray, name: str) -> ScheduleEntry:
-        d = decompose(traffic, self.strategy, min_fill=0.1)
+        kwargs = {"min_fill": 0.1}
+        if self.strategy == "maxweight" and self._warm is not None:
+            kwargs["warm_start"] = self._warm
+        d = decompose(traffic, self.strategy, **kwargs)
+        if self.strategy == "maxweight":
+            self._warm = warm_state_of(d)
         entry = ScheduleEntry(
             name=name, reference=traffic.copy(),
             schedule=plan_schedule(d, **self.plan_kwargs),
         )
+        if len(self.library) >= self.max_library:
+            self._evict()
         self.library.append(entry)
+        self._caps_stack = None
+        self._touch(entry)
         self.replans += 1
         return entry
+
+    def _evict(self) -> None:
+        """Drop the least-recently-used entry (never the current one)."""
+        candidates = [e for e in self.library if e is not self.current]
+        if not candidates:
+            return
+        victim = min(
+            candidates, key=lambda e: self._last_used.get(id(e), -1)
+        )
+        self.library.remove(victim)
+        self._last_used.pop(id(victim), None)
+        self._caps_stack = None
+        self.evictions += 1
+
+    def _score_library(self, off: np.ndarray) -> np.ndarray:
+        """Planned drop rate of every library entry in one stacked pass."""
+        if self._caps_stack is None or self._caps_stack.shape[0] != len(
+            self.library
+        ):
+            self._caps_stack = np.stack([e.caps for e in self.library])
+        total = off.sum()
+        if total <= 0:
+            return np.zeros(len(self.library))
+        dropped = np.maximum(off[None, :, :] - self._caps_stack, 0.0).sum(
+            axis=(1, 2)
+        )
+        return dropped / total
 
     def observe(self, traffic: np.ndarray) -> tuple[ScheduleEntry, bool]:
         """Feed one step's realized routing counts.
@@ -101,24 +183,30 @@ class ScheduleSelector:
         Returns (entry to use next, changed?) — ``changed`` means the
         caller must swap to that entry's compiled executable."""
         t = np.asarray(traffic, dtype=np.float64)
+        self._step += 1
         if self.smoothed is None:
             self.smoothed = t.copy()
         else:
             self.smoothed = (1 - self.ema) * self.smoothed + self.ema * t
 
+        off = self.smoothed.copy()
+        np.fill_diagonal(off, 0.0)
+        total = off.sum()
         if self.current is not None:
-            if self.current.drop_fraction(self.smoothed) <= self.drop_tolerance:
+            if self.current._drop_from_off(off, total) <= self.drop_tolerance:
+                self._touch(self.current)
                 return self.current, False  # still serving well
         # find the best library entry, else replan
         best, best_drop = None, float("inf")
-        for e in self.library:
-            dr = e.drop_fraction(self.smoothed)
-            if dr < best_drop:
-                best, best_drop = e, dr
+        if self.library:
+            drops = self._score_library(off)
+            k = int(np.argmin(drops))
+            best, best_drop = self.library[k], float(drops[k])
         if best is None or best_drop > self.drop_tolerance:
             best = self._plan(self.smoothed, f"plan{self.replans}")
         changed = best is not self.current
         if changed and self.current is not None:
             self.switches += 1
         self.current = best
+        self._touch(best)
         return best, changed

@@ -55,6 +55,20 @@ class SimResult:
         )
 
 
+def _chain_max(starts: np.ndarray, durs: np.ndarray, base: float | np.ndarray):
+    """Closed form of the flow-shop recurrence ``f_k = max(s_k, f_{k-1}) + c_k``.
+
+    ``starts`` [K] (or [K, n]) are the earliest-start gates, ``durs`` the
+    per-step costs, ``base`` the value of ``f_{-1}``.  Telescoping with
+    ``C = cumsum(durs)`` gives ``f_k = C_k + max(base, cummax(s_j - C_{j-1}))``
+    — one cumsum + one accumulated max instead of a Python loop over K.
+    """
+    c = np.cumsum(durs, axis=0)
+    c_prev = np.concatenate([np.zeros_like(c[:1]), c[:-1]], axis=0)
+    gate = np.maximum.accumulate(starts - c_prev, axis=0)
+    return c + np.maximum(base, gate)
+
+
 def simulate_decomposition(
     decomp: Decomposition,
     compute: ComputeModel,
@@ -64,81 +78,53 @@ def simulate_decomposition(
     fabric: str = "dual",
     local_tokens: np.ndarray | None = None,
 ) -> SimResult:
-    phases = decomp.phases
     n = decomp.n
-    k_total = len(phases)
+    st = decomp.stacked()
+    k_total = st.num_phases
     local = (
         np.zeros(n) if local_tokens is None else np.asarray(local_tokens, np.float64)
     )
     if k_total == 0:
         t = float(np.max(compute(local))) if local.any() else 0.0
         return SimResult(t, 0.0, t, 0.0, 0, 0.0, decomp.strategy)
-
-    disp_dur = np.array(
-        [comm.reconf_us + comm.comm_us(p.duration_tokens) for p in phases]
-    )
-    comb_dur = disp_dur.copy()  # return path carries the same volumes
-    recv = np.stack([p.recv_tokens() for p in phases])  # [K, n]
-
-    # --- dispatch plane ---------------------------------------------------
-    if fabric == "dual":
-        disp_done = np.cumsum(disp_dur)
-    elif fabric == "single":
-        disp_done = np.zeros(k_total)  # filled below, interleaved with combine
-    else:
+    if fabric not in ("dual", "single"):
         raise ValueError(f"unknown fabric {fabric!r}")
 
+    disp_dur = comm.reconf_us + comm.comm_us(st.durations())  # [K]
+    comb_dur = disp_dur.copy()  # return path carries the same volumes
+    recv = st.recv_tokens()  # [K, n]
+    phase_comp = compute(recv)  # [K, n]
+    local_comp = compute(local)  # [n]
+
+    # --- dispatch plane ---------------------------------------------------
+    # dual: dispatch phases chain back to back; single: same chain, but the
+    # combine phases later serialize behind it on the one plane.
+    disp_done = np.cumsum(disp_dur)
+
     # --- compute ----------------------------------------------------------
-    # compute_done[k] = time when every rank finished phase k's batch
-    compute_done = np.zeros(k_total)
+    # compute_done[k] = time when every rank finished phase k's batch.
+    # Per-rank chain: free_k = max(disp_done[k], free_{k-1}) + comp_k.
     if overlap:
-        if fabric == "dual":
-            free = compute(local)  # local (diagonal) tokens start at t=0
-            for k in range(k_total):
-                start = np.maximum(disp_done[k], free)
-                free = start + compute(recv[k])
-                compute_done[k] = free.max()
-        # single fabric handled in the interleaved loop below
-    # (non-overlap handled after dispatch completes)
+        free = _chain_max(
+            disp_done[:, None], phase_comp, local_comp[None, :]
+        )  # [K, n]
+        compute_done = free.max(axis=1)
+    else:
+        total_comp = compute(recv.sum(axis=0) + local)
+        compute_done = np.full(k_total, disp_done[-1] + total_comp.max())
 
-    # --- combine plane / single-fabric interleaving ------------------------
-    if fabric == "dual":
-        if not overlap:
-            total_comp = compute(recv.sum(axis=0) + local)
-            all_done = disp_done[-1] + total_comp.max()
-            compute_done[:] = all_done
-        comb_free = 0.0
-        for k in range(k_total):
-            start = max(compute_done[k], comb_free)
-            comb_free = start + comb_dur[k]
-        makespan = comb_free
-    else:  # single plane: D1..DK then C1..CK on one resource
-        net_free = 0.0
-        free = compute(local)
-        for k in range(k_total):
-            net_free += disp_dur[k]
-            disp_done[k] = net_free
-            if overlap:
-                start = np.maximum(disp_done[k], free)
-                free = start + compute(recv[k])
-                compute_done[k] = free.max()
-        if not overlap:
-            total_comp = compute(recv.sum(axis=0) + local)
-            compute_done[:] = disp_done[-1] + total_comp.max()
-        for k in range(k_total):
-            start = max(compute_done[k], net_free)
-            net_free = start + comb_dur[k]
-        makespan = net_free
+    # --- combine plane ----------------------------------------------------
+    # Combine phase k gates on phase k's compute everywhere; on the single
+    # plane it additionally queues behind the last dispatch phase.
+    comb_base = 0.0 if fabric == "dual" else float(disp_done[-1])
+    comb_free = _chain_max(compute_done, comb_dur, comb_base)
+    makespan = comb_free[-1]
 
     if overlap:
-        per_rank_total = compute(local).astype(np.float64)
-        for k in range(k_total):
-            per_rank_total = per_rank_total + compute(recv[k])
-        compute_us = float(per_rank_total.max())
+        compute_us = float((local_comp + phase_comp.sum(axis=0)).max())
     else:
         compute_us = float(compute(recv.sum(axis=0) + local).max())
 
-    comm_total = float(disp_dur.sum() + comb_dur.sum())
     exposed = float(makespan - compute_us)
     return SimResult(
         makespan_us=float(makespan),

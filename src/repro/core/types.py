@@ -18,7 +18,16 @@ from typing import Any
 
 import numpy as np
 
-__all__ = ["Phase", "Decomposition"]
+__all__ = ["Phase", "StackedPhases", "Decomposition"]
+
+
+def _is_permutation(perm: np.ndarray) -> bool:
+    n = perm.shape[0]
+    if perm.size == 0:
+        return True
+    if perm.min() < 0 or perm.max() >= n:
+        return False
+    return bool(np.bincount(perm, minlength=n).max() == 1)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -36,12 +45,24 @@ class Phase:
 
     def __post_init__(self) -> None:
         n = self.perm.shape[0]
-        if sorted(self.perm.tolist()) != list(range(n)):
+        if not _is_permutation(self.perm):
             raise ValueError(f"perm is not a permutation: {self.perm}")
         if self.alloc.shape != (n,) or self.sent.shape != (n,):
             raise ValueError("alloc/sent must have shape [n]")
         if (self.sent - self.alloc > 1e-6).any():
             raise ValueError("sent exceeds alloc")
+
+    @classmethod
+    def unchecked(
+        cls, perm: np.ndarray, alloc: np.ndarray, sent: np.ndarray
+    ) -> "Phase":
+        """Construct without invariant checks — for phases produced by the
+        decomposition fast paths, whose invariants hold by construction."""
+        p = object.__new__(cls)
+        object.__setattr__(p, "perm", perm)
+        object.__setattr__(p, "alloc", alloc)
+        object.__setattr__(p, "sent", sent)
+        return p
 
     @property
     def n(self) -> int:
@@ -68,6 +89,72 @@ class Phase:
         return m
 
 
+@dataclasses.dataclass(frozen=True)
+class StackedPhases:
+    """All phases of a decomposition as stacked ``[K, n]`` arrays.
+
+    This is the vectorized working form of the scheduler fast path: one
+    gather/scatter over the stack replaces a Python loop over ``Phase``
+    objects.  ``perms[k, i]`` is the destination of source ``i`` in phase
+    ``k``; ``alloc``/``sent`` mirror the per-phase vectors.
+    """
+
+    perms: np.ndarray  # [K, n] int64
+    alloc: np.ndarray  # [K, n] float64
+    sent: np.ndarray  # [K, n] float64
+
+    @property
+    def num_phases(self) -> int:
+        return int(self.perms.shape[0])
+
+    @property
+    def n(self) -> int:
+        return int(self.perms.shape[1])
+
+    def durations(self) -> np.ndarray:
+        """Circuit hold time per phase: the largest allocated slot. [K]"""
+        if self.num_phases == 0:
+            return np.zeros(0)
+        return self.alloc.max(axis=1)
+
+    def recv_tokens(self) -> np.ndarray:
+        """Tokens received per destination rank per phase. [K, n]"""
+        k, n = self.perms.shape
+        out = np.zeros((k, n))
+        if k:
+            rows = np.repeat(np.arange(k), n)
+            np.add.at(out, (rows, self.perms.ravel()), self.sent.ravel())
+        return out
+
+    def sent_matrix_total(self) -> np.ndarray:
+        """Sum of per-phase sent matrices. [n, n]"""
+        n = self.n
+        total = np.zeros((n, n))
+        if self.num_phases:
+            src = np.tile(np.arange(n), self.num_phases)
+            np.add.at(total, (src, self.perms.ravel()), self.sent.ravel())
+        return total
+
+    def to_phases(self) -> list[Phase]:
+        return [
+            Phase(perm=self.perms[k], alloc=self.alloc[k], sent=self.sent[k])
+            for k in range(self.num_phases)
+        ]
+
+    @staticmethod
+    def from_phases(phases: list[Phase], n: int) -> "StackedPhases":
+        if not phases:
+            empty = np.zeros((0, n))
+            return StackedPhases(
+                perms=np.zeros((0, n), dtype=np.int64), alloc=empty, sent=empty
+            )
+        return StackedPhases(
+            perms=np.stack([p.perm for p in phases]).astype(np.int64),
+            alloc=np.stack([p.alloc for p in phases]).astype(np.float64),
+            sent=np.stack([p.sent for p in phases]).astype(np.float64),
+        )
+
+
 @dataclasses.dataclass
 class Decomposition:
     """An ordered sequence of phases delivering ``matrix``."""
@@ -89,11 +176,16 @@ class Decomposition:
     def total_duration_tokens(self) -> float:
         return float(sum(p.duration_tokens for p in self.phases))
 
+    def stacked(self) -> StackedPhases:
+        """Stacked ``[K, n]`` view of the phases (built once, then cached)."""
+        cached = getattr(self, "_stacked_cache", None)
+        if cached is None or cached.num_phases != len(self.phases):
+            cached = StackedPhases.from_phases(self.phases, self.n)
+            self._stacked_cache = cached
+        return cached
+
     def sent_total(self) -> np.ndarray:
-        total = np.zeros_like(self.matrix, dtype=np.float64)
-        for p in self.phases:
-            total += p.sent_matrix()
-        return total
+        return self.stacked().sent_matrix_total()
 
     def verify(self, *, atol: float = 1e-6) -> None:
         """All demand delivered, nothing invented."""

@@ -1,27 +1,137 @@
-"""jit'd public wrapper for the grouped expert GEMM.
+"""Public wrapper for the grouped expert GEMM: block-size autotuning,
+backend-based interpret selection, and a shape-fit fallback.
 
 On CPU (this container) the kernel body runs in ``interpret=True`` mode;
-on TPU pass ``interpret=False`` (the launcher does this automatically via
-``jax.default_backend()``).
+on TPU ``interpret=False`` is selected automatically from
+``jax.default_backend()``.  Block sizes come from a small autotune table
+keyed on ``(C, d, f)`` — entries measured on TPUv4-class VMEM (~16 MB);
+anything not in the table uses the divisor/VMEM-budget heuristic.  Shapes
+the kernel cannot tile at all (C or f with no usable block divisor) fall
+back to the einsum oracle, so ``moe_gemm`` is always safe to call.
 """
 
 from __future__ import annotations
 
+import functools
+
 import jax
 
 from repro.kernels.moe_gemm.kernel import moe_gemm_pallas
+from repro.kernels.moe_gemm.ref import moe_gemm_ref
+
+# Measured-good block shapes per (C, d, f) — the MoE launcher's common
+# cells (capacity x d_model x d_ff_expert).  Values are (block_c, block_f).
+AUTOTUNE_TABLE: dict[tuple[int, int, int], tuple[int, int]] = {
+    # Mixtral-8x7B-ish: d=4096, f=14336
+    (512, 4096, 14336): (256, 512),
+    (1024, 4096, 14336): (256, 512),
+    (2048, 4096, 14336): (512, 512),
+    # DBRX-ish: d=6144, f=10752
+    (512, 6144, 10752): (256, 256),
+    (1024, 6144, 10752): (256, 256),
+    # Qwen3-MoE-ish fine-grained experts: d=4096, f=1536
+    (512, 4096, 1536): (256, 512),
+    (1024, 4096, 1536): (512, 512),
+    # test/bench shapes
+    (128, 64, 128): (128, 128),
+    (256, 128, 256): (128, 128),
+}
+
+# Conservative VMEM working-set budget (bytes): x + w_gate + w_up + w_down
+# blocks + the f32 accumulator must fit with double-buffering headroom.
+_VMEM_BUDGET = 12 * 1024 * 1024
 
 
-def moe_gemm(x, w_gate, w_up, w_down, *, block_c=128, block_f=128, interpret=None):
-    """Grouped expert SwiGLU: x [E, C, d] -> [E, C, d]."""
+def _vmem_bytes(bc: int, bf: int, d: int, dtype_bytes: int) -> int:
+    x = bc * d * dtype_bytes
+    w = 2 * d * bf * dtype_bytes + bf * d * dtype_bytes
+    acc = bc * d * 4
+    return x + w + acc
+
+
+def _divisor_blocks(dim: int, floor: int) -> list[int]:
+    """Usable block sizes for ``dim``: divisors, largest first."""
+    return [b for b in (1024, 512, 256, 128, 64, 32, 16, 8) if b >= floor and dim % b == 0]
+
+
+def select_block_sizes(
+    c: int,
+    d: int,
+    f: int,
+    *,
+    dtype_bytes: int = 2,
+    interpret: bool = False,
+) -> tuple[int, int] | None:
+    """Pick (block_c, block_f) for the grid, or None if untileable.
+
+    Table hit wins; otherwise take the largest divisor blocks whose VMEM
+    working set fits the budget.  Compiled TPU mode requires MXU-friendly
+    blocks (>=128 on both tile dims); interpret mode only needs divisors.
+    """
+    hit = AUTOTUNE_TABLE.get((c, d, f))
+    if hit is not None and c % hit[0] == 0 and f % hit[1] == 0:
+        return hit
+    floor = 8 if interpret else 128
+    cands_c = _divisor_blocks(c, floor) or ([c] if (interpret and c > 0) else [])
+    cands_f = _divisor_blocks(f, floor) or ([f] if (interpret and f > 0) else [])
+    for bc in cands_c:
+        for bf in cands_f:
+            if _vmem_bytes(bc, bf, d, dtype_bytes) <= _VMEM_BUDGET:
+                return bc, bf
+    return None
+
+
+@functools.lru_cache(maxsize=None)
+def _differentiable_kernel(block_c: int, block_f: int, interpret: bool):
+    """Pallas forward + einsum-oracle backward (the kernel body uses a
+    scratch accumulator + pl.when, which Pallas AD cannot transpose).
+    The backward re-linearizes through the oracle — standard remat; both
+    paths accumulate in f32, so gradients agree to kernel tolerance."""
+
+    @jax.custom_vjp
+    def fn(x, w_gate, w_up, w_down):
+        return moe_gemm_pallas(
+            x, w_gate, w_up, w_down,
+            block_c=block_c, block_f=block_f, interpret=interpret,
+        )
+
+    def fwd(x, w_gate, w_up, w_down):
+        out = moe_gemm_pallas(
+            x, w_gate, w_up, w_down,
+            block_c=block_c, block_f=block_f, interpret=interpret,
+        )
+        return out, (x, w_gate, w_up, w_down)
+
+    def bwd(residuals, g):
+        _, vjp = jax.vjp(moe_gemm_ref, *residuals)
+        return vjp(g)
+
+    fn.defvjp(fwd, bwd)
+    return fn
+
+
+def moe_gemm(x, w_gate, w_up, w_down, *, block_c=None, block_f=None, interpret=None):
+    """Grouped expert SwiGLU: x [E, C, d] -> [E, C, d].
+
+    ``block_c``/``block_f`` override the autotune table; ``interpret``
+    defaults to True off-TPU.  Falls back to the einsum oracle when the
+    shape cannot be tiled.  Differentiable: forward runs the kernel,
+    backward goes through the einsum oracle's VJP.
+    """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    return moe_gemm_pallas(
-        x,
-        w_gate,
-        w_up,
-        w_down,
-        block_c=block_c,
-        block_f=block_f,
-        interpret=interpret,
+    e, c, d = x.shape
+    f = w_gate.shape[-1]
+    if block_c is None or block_f is None:
+        picked = select_block_sizes(
+            c, d, f, dtype_bytes=x.dtype.itemsize, interpret=interpret
+        )
+        if picked is None:
+            return moe_gemm_ref(x, w_gate, w_up, w_down)
+        block_c = block_c or picked[0]
+        block_f = block_f or picked[1]
+    if c % min(block_c, c) or f % min(block_f, f):
+        return moe_gemm_ref(x, w_gate, w_up, w_down)
+    return _differentiable_kernel(int(block_c), int(block_f), bool(interpret))(
+        x, w_gate, w_up, w_down
     )

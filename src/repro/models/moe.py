@@ -26,10 +26,11 @@ import math
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.schedule import A2ASchedule
-from repro.parallel import current_rules, shard
+from repro.core.schedule import A2ASchedule, phase_offsets
+from repro.parallel import current_rules, shard, shard_map_compat
 from repro.parallel.collectives import (
     a2a_combine,
     a2a_dispatch,
@@ -53,8 +54,10 @@ def moe_init(key: jax.Array, cfg: ModelConfig) -> dict:
     }
 
 
-def _round8(x: int) -> int:
-    return max(8, -(-x // 8) * 8)
+def _round8(x):
+    """max(8, ceil to a multiple of 8) — scalar int or int array."""
+    r = np.maximum(8, -(-np.asarray(x) // 8) * 8)
+    return int(r) if r.ndim == 0 else r
 
 
 def _router(params: dict, cfg: ModelConfig, x: jax.Array):
@@ -114,16 +117,25 @@ def _ungroup(y, pos, gate, t: int):
     return out[:t]
 
 
-def _expert_ffn(params: dict, x: jax.Array, e_slice=None) -> jax.Array:
+def _expert_ffn(
+    params: dict, x: jax.Array, e_slice=None, *, use_pallas: bool = False
+) -> jax.Array:
     """Batched SwiGLU over expert groups.  x: [E, C, d] -> [E, C, d].
 
-    On TPU this is the ``kernels/moe_gemm`` Pallas hot spot; this einsum
-    form is the portable/XLA path (also its correctness oracle).
+    ``use_pallas`` routes through the ``kernels/moe_gemm`` Pallas kernel
+    (the TPU hot spot; interpret mode off-TPU) with block sizes from its
+    autotune table; shapes the kernel cannot tile fall back here.  The
+    einsum form is the portable/XLA path and the kernel's correctness
+    oracle.
     """
     if e_slice is not None:  # already-local expert slices (inside shard_map)
         wg, wu, wd = e_slice
     else:
         wg, wu, wd = params["w_gate"], params["w_up"], params["w_down"]
+    if use_pallas:
+        from repro.kernels.moe_gemm import moe_gemm
+
+        return moe_gemm(x, cast(wg), cast(wu), cast(wd))
     g = jnp.einsum("ecd,edf->ecf", x, cast(wg))
     u = jnp.einsum("ecd,edf->ecf", x, cast(wu))
     h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
@@ -150,7 +162,7 @@ def _moe_dense(params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
     # capacity dim sharded over the DP axis ('fsdp'->data) so expert work
     # splits across data shards too, not just the expert axis
     buf = shard(buf, "expert", "fsdp", None)
-    y = _expert_ffn(params, buf)
+    y = _expert_ffn(params, buf, use_pallas=m.use_pallas)
     y = shard(y, "expert", "fsdp", None)
     out = _ungroup(y, pos, gate, t)
     return out.astype(x.dtype).reshape(b, s, d)
@@ -209,21 +221,15 @@ def _moe_ep(params, cfg: ModelConfig, x: jax.Array, schedule: A2ASchedule | None
             c_max = cap_uni
             phase_caps = None
         else:
-            phase_caps = [
-                _round8(math.ceil(int(c) / e_local)) for c in schedule.caps
-            ]
+            # per-expert phase caps: ceil(cap / e_local) rounded up to 8
+            phase_caps = _round8(-(-schedule.caps.astype(np.int64) // e_local))
             if schedule.offsets is not None:
                 # multi-phase pairs (BvN): the bucket must hold each pair's
                 # TOTAL allocation across phases
-                import numpy as _np
-
-                per_pair = _np.zeros((n, n), dtype=_np.int64)
-                for k in range(schedule.num_phases):
-                    sel = schedule.valid[k]
-                    per_pair[_np.arange(n)[sel], schedule.perms[k][sel]] += phase_caps[k]
+                per_pair = schedule.cap_matrix(caps=phase_caps)
                 c_max = max(cap_uni, int(per_pair.max()))
             else:
-                c_max = max([cap_uni] + phase_caps)
+                c_max = max(cap_uni, int(phase_caps.max()))
         buf, pos, gate = _group(
             x_loc, key, gates.reshape(-1), n * e_local, c_max
         )
@@ -234,9 +240,13 @@ def _moe_ep(params, cfg: ModelConfig, x: jax.Array, schedule: A2ASchedule | None
             tokens gather over 'data', GEMM against the local f-shard, and
             the partial outputs reduce-scatter back."""
             if not two_d:
-                return _expert_ffn(None, grouped, e_slice=(wg, wu, wd))
+                return _expert_ffn(
+                    None, grouped, e_slice=(wg, wu, wd), use_pallas=m.use_pallas
+                )
             gathered = jax.lax.all_gather(grouped, "data", axis=1, tiled=True)
-            y_part = _expert_ffn(None, gathered, e_slice=(wg, wu, wd))
+            y_part = _expert_ffn(
+                None, gathered, e_slice=(wg, wu, wd), use_pallas=m.use_pallas
+            )
             return jax.lax.psum_scatter(
                 y_part, "data", scatter_dimension=1, tiled=True
             )
@@ -248,21 +258,14 @@ def _moe_ep(params, cfg: ModelConfig, x: jax.Array, schedule: A2ASchedule | None
             y = y.reshape(e_local, n, c_max, d).transpose(1, 0, 2, 3)
             back = a2a_combine(y, EP_AXIS)
         else:  # scheduled ppermute phases (capacities in per-expert units)
-            import numpy as _np
-
             offsets = None
             if schedule.offsets is not None:  # recompute in per-expert units
-                offsets = _np.zeros_like(schedule.offsets)
-                cursor = _np.zeros((n, n), dtype=_np.int64)
-                for k in range(schedule.num_phases):
-                    for i in range(n):
-                        if schedule.valid[k, i]:
-                            d2 = int(schedule.perms[k, i])
-                            offsets[k, i] = cursor[i, d2]
-                            cursor[i, d2] += phase_caps[k]
+                offsets = phase_offsets(
+                    schedule.perms, schedule.valid, phase_caps
+                ).astype(schedule.offsets.dtype)
             sched = A2ASchedule(
                 perms=schedule.perms,
-                caps=_np.asarray(phase_caps, dtype=_np.int32),
+                caps=np.asarray(phase_caps, dtype=np.int32),
                 valid=schedule.valid,
                 offsets=offsets,
             )
@@ -278,7 +281,7 @@ def _moe_ep(params, cfg: ModelConfig, x: jax.Array, schedule: A2ASchedule | None
         y_loc = _ungroup(back, pos, gate, t_ep)  # [t_ep, d] f32
         return y_loc.astype(xb.dtype).reshape(bl, s_loc, d)
 
-    fn = jax.shard_map(
+    fn = shard_map_compat(
         body, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False
     )
     return fn(

@@ -5,6 +5,7 @@ from repro.parallel.sharding import (
     current_rules,
     logical_to_spec,
     shard,
+    shard_map_compat,
 )
 
 __all__ = [
@@ -14,4 +15,5 @@ __all__ = [
     "current_rules",
     "logical_to_spec",
     "shard",
+    "shard_map_compat",
 ]

@@ -78,7 +78,9 @@ def gpipe(stage_fn, stage_params, x, *, mesh, axis: str, n_micro: int):
         mask = (me == p_stages - 1).astype(outs.dtype)
         return jax.lax.psum(outs * mask, axis)
 
-    fn = jax.shard_map(
+    from repro.parallel.sharding import shard_map_compat
+
+    fn = shard_map_compat(
         body, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False
     )
     return fn(stage_params, x)

@@ -150,3 +150,23 @@ def shard(x: jax.Array, *logical: str | None) -> jax.Array:
         raise ValueError(f"{len(logical)} names for rank-{x.ndim} tensor")
     spec = logical_to_spec(logical, x.shape)
     return jax.lax.with_sharding_constraint(x, NamedSharding(ar.mesh, spec))
+
+
+def shard_map_compat(body, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """``jax.shard_map`` across jax versions.
+
+    Newer jax exposes ``jax.shard_map(..., check_vma=)``; 0.4.x only has
+    ``jax.experimental.shard_map.shard_map(..., check_rep=)`` (the same
+    replication-check knob under its old name).
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma,
+        )
+    from jax.experimental.shard_map import shard_map
+
+    return shard_map(
+        body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check_vma,
+    )

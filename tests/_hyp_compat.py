@@ -1,0 +1,81 @@
+"""Minimal hypothesis stand-in so property tests still run (not skip)
+when the real ``hypothesis`` package is unavailable.
+
+Provides just the surface this suite uses — ``given``/``settings`` and
+``strategies.integers/floats`` — backed by a deterministic RNG sweep.
+Install ``hypothesis`` (see requirements-dev.txt) to get real shrinking
+and example databases; this fallback trades those for zero dependencies.
+
+Usage (in test modules):
+
+    try:
+        from hypothesis import given, settings
+        from hypothesis import strategies as st
+    except ImportError:
+        from _hyp_compat import given, settings
+        from _hyp_compat import strategies as st
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 25
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+
+class strategies:  # mirrors ``hypothesis.strategies`` naming
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value, endpoint=True))
+        )
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> _Strategy:
+        return _Strategy(
+            lambda rng: float(rng.uniform(min_value, max_value))
+        )
+
+
+def settings(*, max_examples: int = DEFAULT_MAX_EXAMPLES, **_ignored):
+    """Decorator recording how many examples ``given`` should run."""
+
+    def deco(fn):
+        fn._hyp_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strats: _Strategy):
+    """Run the wrapped test over a deterministic sweep of drawn examples."""
+
+    def deco(fn):
+        def runner(*args):
+            n = getattr(fn, "_hyp_max_examples", DEFAULT_MAX_EXAMPLES)
+            rng = np.random.default_rng(1234)
+            for i in range(n):
+                drawn = tuple(s.draw(rng) for s in strats)
+                try:
+                    fn(*args, *drawn)
+                except Exception as e:  # re-raise with the failing example
+                    raise AssertionError(
+                        f"falsifying example #{i}: {drawn!r}"
+                    ) from e
+
+        # NOT functools.wraps: pytest must see runner's bare (*args)
+        # signature, not the wrapped one's drawn parameters (it would
+        # treat them as fixtures).
+        runner.__name__ = fn.__name__
+        runner.__doc__ = fn.__doc__
+        return runner
+
+    return deco

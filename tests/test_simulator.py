@@ -2,8 +2,13 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # fall back to the deterministic in-repo sweep
+    from _hyp_compat import given, settings
+    from _hyp_compat import strategies as st
 
 from repro.core import (
     CommModel,

@@ -6,8 +6,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # fall back to the deterministic in-repo sweep
+    from _hyp_compat import given, settings
+    from _hyp_compat import strategies as st
 
 from repro.checkpoint import CheckpointManager, restore, save
 from repro.data import DataConfig, SyntheticStream
