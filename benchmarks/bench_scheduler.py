@@ -1,7 +1,8 @@
 """Scheduler fast-path benchmark: vectorized selector scoring + warm-started
-batched decomposition vs the seed implementations.
+batched decomposition vs the seed implementations, plus the end-to-end
+controller loop under drifting traffic.
 
-Two measurements, mirroring the controller's two hot paths:
+Three measurements, mirroring the controller's hot paths:
 
 * **observe steady-state** — ``ScheduleSelector.observe`` is called every
   training step with the realized routing counts; in steady state it only
@@ -17,10 +18,17 @@ Two measurements, mirroring the controller's two hot paths:
   dominate there, so it is roughly parity by construction — the cold fast
   path is bit-identical to the seed.)
 
+* **controller end-to-end** — ``ScheduleRuntime.observe`` every step over
+  a drifting traffic stream (regime shift + hotspot): the realistic
+  observe+re-plan overhead the training loop pays per step, with the
+  warm/cold plan split per drift event.
+
 Parity is asserted inline (identical chosen entries / drop fractions,
-bit-identical cold phases, warm replay delivering all demand); results
-land in ``BENCH_scheduler.json`` at the repo root so the perf trajectory
-is tracked PR over PR.
+bit-identical cold phases, warm replay delivering all demand).  Results
+land in ``BENCH_scheduler.json`` at the repo root: the top-level fields
+always describe the LATEST run, and every run also appends a timestamped
+entry to the ``history`` list so the perf trajectory is tracked PR over
+PR (ROADMAP: "persist trend lines").
 
 Usage: PYTHONPATH=src python -m benchmarks.bench_scheduler
 """
@@ -199,19 +207,93 @@ def bench_maxweight(reps: int = 5) -> dict:
     }
 
 
+def bench_controller(steps: int = 240) -> dict:
+    """End-to-end controller loop under drift: a regime shift at
+    steps/3 and an expert hotspot at 2*steps/3 stream through
+    ``ScheduleRuntime.observe`` (per-layer grouping), measuring the
+    observe+re-plan overhead the training loop pays per step."""
+    from repro.core.drift import DriftScenario
+    from repro.core.runtime import ControllerConfig, ScheduleRuntime
+
+    n, e, layers = 16, 64, 8
+    runtime = ScheduleRuntime(
+        ControllerConfig(
+            n_ranks=n, n_experts=e, ema=0.5, cooldown=5, group_by="layer"
+        ),
+        layers,
+    )
+    shift = DriftScenario("shift", e, shift_step=steps // 3, seed=3)
+    hot = DriftScenario(
+        "hotspot", e, shift_step=2 * steps // 3, window=steps, seed=3
+    )
+    rng = np.random.default_rng(4)
+    tokens = 2048.0 * n
+
+    stream = []
+    for t in range(steps):
+        probs = hot.expert_probs(t) if t >= 2 * steps // 3 else shift.expert_probs(t)
+        noise = 1 + 0.02 * rng.standard_normal((layers, 1, e))
+        stream.append(np.maximum(tokens * probs[None, None, :] * noise, 0.0))
+
+    t0 = time.perf_counter()
+    swaps = 0
+    for t, stats in enumerate(stream):
+        decision = runtime.observe(stats)
+        swaps += bool(decision.changed)
+    total_s = time.perf_counter() - t0
+
+    s = runtime.summary()
+    assert s["replan_events"] >= 2, s  # both drift events must register
+    assert s["decompose_calls"] == s["replan_events"], s
+    assert s["warm_hits"] > 0, s  # steady-state re-plans hit the warm path
+    return {
+        "n": n,
+        "experts": e,
+        "layers": layers,
+        "steps": steps,
+        "total_us_per_step": round(total_s / steps * 1e6, 2),
+        "observe_us_per_step": s["observe_us_per_step"],
+        "replan_ms_per_event": s["replan_ms_per_event"],
+        "replan_events": s["replan_events"],
+        "decompose_calls": s["decompose_calls"],
+        "warm_hits": s["warm_hits"],
+        "cold_plans": s["cold_plans"],
+        "swaps": swaps,
+    }
+
+
 def run() -> dict:
     results = {
         "observe_steady_state": bench_observe(),
         "maxweight_batch": bench_maxweight(),
+        "controller": bench_controller(),
     }
     results["meta"] = {
         "unit_note": "observe in us/step; decomposition in ms per re-plan "
-        "event (16-layer stack)",
+        "event (16-layer stack); controller in us/step end-to-end",
         "timestamp": time.strftime("%Y-%m-%d %H:%M:%S"),
     }
+    # Trend lines: keep the latest run at the top level, append every run
+    # to the history list (prior history is preserved across runs).
+    prior = []
+    if os.path.exists(OUT_PATH):
+        try:
+            with open(OUT_PATH) as f:
+                prior = json.load(f).get("history", [])
+        except (json.JSONDecodeError, OSError):
+            prior = []
+    results["history"] = prior + [
+        {
+            "timestamp": results["meta"]["timestamp"],
+            "observe_steady_state": results["observe_steady_state"],
+            "maxweight_batch": results["maxweight_batch"],
+            "controller": results["controller"],
+        }
+    ]
     with open(OUT_PATH, "w") as f:
         json.dump(results, f, indent=2)
     obs, mw = results["observe_steady_state"], results["maxweight_batch"]
+    ctl = results["controller"]
     print(
         f"observe steady-state: {obs['seed_us_per_step']}us -> "
         f"{obs['fast_us_per_step']}us  ({obs['speedup']}x)"
@@ -221,7 +303,14 @@ def run() -> dict:
         f"warm {mw['fast_warm_ms']}ms ({mw['speedup']}x), "
         f"cold {mw['fast_cold_ms']}ms ({mw['cold_speedup']}x)"
     )
-    print(f"wrote {os.path.abspath(OUT_PATH)}")
+    print(
+        f"controller ({ctl['layers']} layers, n={ctl['n']}): "
+        f"{ctl['total_us_per_step']}us/step end-to-end, "
+        f"{ctl['replan_events']} re-plan events "
+        f"({ctl['warm_hits']} warm / {ctl['cold_plans']} cold), "
+        f"re-plan {ctl['replan_ms_per_event']}ms/event"
+    )
+    print(f"wrote {os.path.abspath(OUT_PATH)} ({len(results['history'])} history entries)")
     return results
 
 

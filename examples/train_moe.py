@@ -5,8 +5,17 @@ fault-tolerant resume.
 
     PYTHONPATH=src python examples/train_moe.py --steps 200
 
+With ``--drift`` the run closes the controller loop: a
+``ScheduleRuntime`` observes each step's realized routing counts while a
+workload drift (regime shift / expert hotspot / gradual skew) is injected
+into the observations, and the runtime re-plans all MoE layers in one
+``decompose_batch`` call per drift event:
+
+    PYTHONPATH=src python examples/train_moe.py --steps 120 --drift shift
+
 On a multi-device host (XLA_FLAGS=--xla_force_host_platform_device_count=8)
-pass --mesh to exercise distributed EP with the paper's scheduled dispatch.
+pass --mesh to exercise distributed EP with the paper's scheduled dispatch
+(--dispatch scheduled makes the controller's swaps recompile the step).
 """
 
 import argparse
@@ -44,12 +53,40 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--ckpt", default="/tmp/repro_example_ckpt")
     ap.add_argument("--mesh", action="store_true", help="use all local devices")
+    ap.add_argument(
+        "--dispatch",
+        default=None,
+        choices=("dense", "a2a", "scheduled"),
+        help="MoE dispatch mode (default: dense; a2a under --mesh)",
+    )
+    ap.add_argument(
+        "--drift",
+        default="none",
+        choices=("none", "shift", "hotspot", "skew"),
+        help="close the controller loop and inject this routing drift",
+    )
+    ap.add_argument(
+        "--drift-step", type=int, default=None,
+        help="step at which the drift engages (default steps // 3)",
+    )
+    ap.add_argument(
+        "--virtual-ranks", type=int, default=8,
+        help="controller fabric size when no EP mesh is active",
+    )
     args = ap.parse_args()
 
-    cfg = small_moe()
+    dispatch = args.dispatch or ("a2a" if args.mesh else "dense")
+    cfg = small_moe(dispatch)
     model = Model(cfg)
     print(f"{cfg.name}: {cfg.param_count()/1e6:.0f}M params "
           f"({cfg.active_param_count()/1e6:.0f}M active)")
+
+    mesh = None
+    if args.mesh:
+        import jax
+
+        n = jax.device_count()
+        mesh = jax.make_mesh((max(n // 4, 1), min(n, 4)), ("data", "model"))
 
     data_cfg = DataConfig(
         vocab_size=cfg.vocab_size, seq_len=args.seq, global_batch=args.batch
@@ -63,16 +100,53 @@ def main() -> None:
         log_every=10,
     )
 
+    runtime = stats_hook = None
+    if args.drift != "none" or dispatch == "scheduled":
+        import numpy as np
+
+        from repro.core import ControllerConfig, DriftScenario, ScheduleRuntime
+
+        # schedules execute on the mesh's EP ('model') axis when one is
+        # active; --virtual-ranks only sizes the single-device fabric
+        n_ranks = (
+            mesh.shape["model"] if mesh is not None else args.virtual_ranks
+        )
+        runtime = ScheduleRuntime(
+            ControllerConfig(
+                n_ranks=n_ranks,
+                n_experts=cfg.moe.n_experts,
+                ema=0.5,
+                cooldown=5,
+                # one schedule shared by all layers keeps the stack
+                # scan-friendly; "layer" plans one schedule per MoE layer
+                group_by="model",
+            ),
+            model.n_moe_layers,
+        )
+        if dispatch == "scheduled":
+            # scheduled dispatch needs a schedule before the first step:
+            # prime from a uniform demand estimate
+            tokens = args.batch * args.seq * cfg.moe.top_k
+            uniform = np.full((n_ranks, n_ranks), tokens / n_ranks**2)
+            runtime.prime(uniform)
+        if args.drift != "none":
+            scenario = DriftScenario(
+                args.drift,
+                cfg.moe.n_experts,
+                shift_step=args.drift_step or args.steps // 3,
+                window=max(args.steps // 4, 10),
+            )
+            stats_hook = scenario.stats_hook
+            print(f"drift scenario: {args.drift} @ step {scenario.shift_step}")
+
     if args.mesh:
         import jax
         from jax.sharding import NamedSharding, PartitionSpec as P
 
         from repro.parallel import axis_rules
 
-        n = jax.device_count()
-        mesh = jax.make_mesh((max(n // 4, 1), min(n, 4)), ("data", "model"))
         cfg = dataclasses.replace(
-            cfg, moe=dataclasses.replace(cfg.moe, dispatch="a2a")
+            cfg, moe=dataclasses.replace(cfg.moe, dispatch=dispatch)
         )
         model = Model(cfg)
 
@@ -85,12 +159,32 @@ def main() -> None:
             }
 
         with axis_rules(mesh):
-            res = train_loop(model, data_cfg, loop_cfg, shard_batch=shard_batch)
+            res = train_loop(
+                model, data_cfg, loop_cfg, shard_batch=shard_batch,
+                runtime=runtime, stats_hook=stats_hook,
+            )
     else:
-        res = train_loop(model, data_cfg, loop_cfg)
+        res = train_loop(
+            model, data_cfg, loop_cfg, runtime=runtime, stats_hook=stats_hook
+        )
 
+    if not res["history"]:
+        print(f"\nnothing to do: checkpoint in {args.ckpt} is already at "
+              f"step {res['final_step']} >= --steps (delete it to retrain)")
+        return
     first, last = res["history"][0]["loss"], res["history"][-1]["loss"]
-    print(f"\nloss {first:.3f} -> {last:.3f} over {res['final_step']} steps")
+    steps_s = 1.0 / max(res["history"][-1]["dt_s"], 1e-9)
+    print(f"\nloss {first:.3f} -> {last:.3f} over {res['final_step']} steps "
+          f"({steps_s:.1f} steps/s at the tail)")
+    if "controller" in res:
+        c = res["controller"]
+        print(
+            f"controller: {c['replan_events']} re-plan events "
+            f"({c['decompose_calls']} decompose_batch calls, "
+            f"{c['warm_hits']} warm / {c['cold_plans']} cold plans), "
+            f"{c['swaps']} swaps, {c['compiles']} compiles, "
+            f"observe {c['observe_us_per_step']}us/step"
+        )
     assert last < first, "training did not reduce loss"
     print("OK")
 

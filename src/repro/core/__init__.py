@@ -20,6 +20,7 @@ from repro.core.cost_models import (
     linear_model,
 )
 from repro.core.decompose import STRATEGIES, decompose, decompose_batch
+from repro.core.drift import DRIFT_KINDS, DriftScenario
 from repro.core.hierarchical import (
     hierarchical_decompose,
     simulate_hierarchical,
@@ -31,8 +32,14 @@ from repro.core.maxweight import (
     maxweight_decompose_batch,
     warm_state_of,
 )
+from repro.core.runtime import (
+    ControllerConfig,
+    Decision,
+    ScheduleRuntime,
+    routing_to_traffic,
+)
 from repro.core.schedule import A2ASchedule, order_phases, plan_schedule, ring_schedule
-from repro.core.selector import ScheduleEntry, ScheduleSelector
+from repro.core.selector import Proposal, ScheduleEntry, ScheduleSelector
 from repro.core.simulator import (
     SimResult,
     simulate_decomposition,
@@ -47,11 +54,17 @@ __all__ = [
     "A2ASchedule",
     "CommModel",
     "ComputeModel",
+    "ControllerConfig",
+    "DRIFT_KINDS",
+    "Decision",
     "Decomposition",
+    "DriftScenario",
     "Phase",
+    "Proposal",
     "ROUTERS",
     "STRATEGIES",
     "ScheduleEntry",
+    "ScheduleRuntime",
     "ScheduleSelector",
     "SimResult",
     "StackedPhases",
@@ -75,6 +88,7 @@ __all__ = [
     "plan_schedule",
     "ring_a2a_tokens",
     "ring_schedule",
+    "routing_to_traffic",
     "simulate_decomposition",
     "simulate_ideal",
     "simulate_hierarchical",

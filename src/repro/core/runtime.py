@@ -1,0 +1,376 @@
+"""Scheduler runtime: the closed controller loop (observe -> score ->
+re-plan -> swap) that tracks live MoE routing drift.
+
+The paper's dynamic setting re-decomposes per iteration; under JAX the
+executable is static, so the runtime owns the host-side controller state
+and tells the training loop *when to swap* the compiled step function:
+
+* **observe** — the MoE forward emits per-layer realized routing counts
+  ``[L, n_src, E]`` as an auxiliary output; the loop host-fetches the
+  *previous* step's counts (off the critical path) and feeds them here.
+  Counts are folded to per-layer ``[n, n]`` rank-traffic matrices via the
+  contiguous expert placement, then EMA-smoothed per layer.
+* **score** — each layer *group* has a ``ScheduleSelector`` that scores
+  its (summed) traffic against the group's schedule library with the
+  hysteresis/cooldown policy.  A group whose library misses declares a
+  drift event.
+* **re-plan** — one ``decompose_batch`` call re-plans **all** MoE layers
+  with per-layer ``WarmState`` replay: at steady state (support
+  unchanged) the re-plan is LAP-free, so a drift event costs milliseconds
+  of host work, not a cold solve per layer.
+* **swap** — the returned ``Decision`` carries a compile-cache key (the
+  per-group current entries); the training loop swaps / rebuilds the
+  jitted step function only when the key changes, and a *compile* only
+  happens on a library miss (library hits reuse cached executables).
+
+Grouping: ``group_by="layer"`` (default) plans one schedule per MoE
+layer (requires the model's unrolled per-layer schedule path);
+``group_by="model"`` shares one schedule across all MoE layers (the
+scan-friendly layout) while still tracking per-layer traffic and warm
+states.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core.decompose import decompose_batch
+from repro.core.maxweight import WarmState, warm_state_of
+from repro.core.schedule import plan_schedule
+from repro.core.selector import (
+    DEFAULT_PLAN_KWARGS,
+    Proposal,
+    ScheduleEntry,
+    ScheduleSelector,
+)
+
+__all__ = ["ControllerConfig", "Decision", "ScheduleRuntime", "routing_to_traffic"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ControllerConfig:
+    """Knobs for the drift controller.
+
+    Args:
+      n_ranks: EP fabric size the schedules are planned for.  On a real
+        mesh this is the EP axis size; single-device runs may use a
+        *virtual* rank count to exercise the controller (experts are
+        mapped to virtual ranks by contiguous blocks).
+      n_experts: router width E (must be divisible by ``n_ranks``).
+      strategy: decomposition strategy for re-planning.
+      drop_tolerance: planned drop rate above which a group's schedule no
+        longer "serves" and the library is consulted.
+      ema: per-layer traffic smoothing (drift filter) applied by the
+        runtime; group selectors receive the smoothed traffic raw.
+      hysteresis: relative drop improvement required to switch entries
+        (see ``ScheduleSelector``).
+      cooldown: observations after a re-plan during which further misses
+        are suppressed (the EMA needs a few steps to settle after a
+        regime change; each miss costs a recompile).
+      group_by: "layer" (one schedule per MoE layer) or "model" (one
+        shared schedule; scan-friendly).
+      min_fill: decomposition min_fill (defer near-empty pairs).
+      plan_kwargs: forwarded to ``plan_schedule`` (slack/quantum/min_cap).
+      max_library: LRU bound per group library.
+    """
+
+    n_ranks: int
+    n_experts: int
+    strategy: str = "maxweight"
+    drop_tolerance: float = 0.05
+    ema: float = 0.3
+    hysteresis: float = 0.1
+    cooldown: int = 5
+    group_by: str = "layer"
+    min_fill: float = 0.1
+    plan_kwargs: dict | None = None
+    max_library: int = 16
+
+    def __post_init__(self):
+        if self.n_experts % self.n_ranks:
+            raise ValueError(
+                f"{self.n_experts} experts not divisible by {self.n_ranks} ranks"
+            )
+        if self.group_by not in ("layer", "model"):
+            raise ValueError(f"unknown group_by {self.group_by!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Decision:
+    """One ``observe`` outcome for the training loop.
+
+    ``changed`` — the per-group schedule assignment moved; the caller
+    must swap to the step function keyed by ``key`` (compiling it only
+    if the key is new, i.e. a library miss happened somewhere).
+    ``replanned`` — this observation triggered the (single) batched
+    re-plan.  ``actions`` — per-group "keep"/"switch"/"miss".
+    """
+
+    changed: bool
+    replanned: bool
+    key: tuple
+    actions: tuple[str, ...]
+
+
+def routing_to_traffic(
+    stats: np.ndarray, *, n_ranks: int, n_experts: int
+) -> np.ndarray:
+    """Fold realized routing counts ``[L, n_src, E]`` to ``[L, n, n]``.
+
+    Experts map to ranks by contiguous blocks (matching
+    ``core/traffic.py`` and the EP dispatch's ``dest = expert // e_local``).
+    When the counts come from fewer source shards than ranks (e.g. a
+    single-device run observing a virtual fabric), each source row is
+    split evenly across its ``n // n_src`` virtual sources — the drift
+    signal lives in the destination (expert) distribution, which is
+    preserved exactly.
+    """
+    s = np.asarray(stats, dtype=np.float64)
+    if s.ndim != 3 or s.shape[2] != n_experts:
+        raise ValueError(f"expected [L, n_src, {n_experts}] stats, got {s.shape}")
+    n_src = s.shape[1]
+    per_rank = s.reshape(s.shape[0], n_src, n_ranks, n_experts // n_ranks).sum(
+        axis=-1
+    )  # [L, n_src, n]
+    if n_src == n_ranks:
+        return per_rank
+    if n_ranks % n_src == 0:
+        k = n_ranks // n_src
+        return np.repeat(per_rank, k, axis=1) / k
+    if n_src % n_ranks == 0:
+        k = n_src // n_ranks
+        return per_rank.reshape(s.shape[0], n_ranks, k, n_ranks).sum(axis=2)
+    raise ValueError(f"cannot map {n_src} source shards onto {n_ranks} ranks")
+
+
+class ScheduleRuntime:
+    """Owns the controller loop end to end for ``n_moe_layers`` MoE layers."""
+
+    def __init__(self, cfg: ControllerConfig, n_moe_layers: int):
+        if n_moe_layers < 1:
+            raise ValueError("runtime needs at least one MoE layer")
+        self.cfg = cfg
+        self.n_layers = n_moe_layers
+        if cfg.group_by == "layer":
+            self.groups: list[list[int]] = [[l] for l in range(n_moe_layers)]
+        else:
+            self.groups = [list(range(n_moe_layers))]
+        self.selectors = [
+            ScheduleSelector(
+                cfg.n_ranks,
+                strategy=cfg.strategy,
+                drop_tolerance=cfg.drop_tolerance,
+                ema=1.0,  # the runtime smooths per layer; don't smooth twice
+                hysteresis=cfg.hysteresis,
+                cooldown=cfg.cooldown,
+                plan_kwargs=cfg.plan_kwargs,
+                max_library=cfg.max_library,
+            )
+            for _ in self.groups
+        ]
+        self._plan_kwargs = dict(DEFAULT_PLAN_KWARGS)
+        if cfg.plan_kwargs:
+            self._plan_kwargs.update(cfg.plan_kwargs)
+        self._smoothed: np.ndarray | None = None  # [L, n, n]
+        self._warm: list[WarmState | None] = [None] * n_moe_layers
+        self._group_warm: list[WarmState | None] = [None] * len(self.groups)
+        self._key: tuple = ()
+        # counters / telemetry
+        self.steps = 0
+        self.replan_events = 0
+        self.decompose_calls = 0
+        self.warm_hits = 0
+        self.cold_plans = 0
+        self.observe_s = 0.0  # cumulative host time inside observe()
+        self.replan_s = 0.0  # cumulative host time inside re-plan events
+        self.last_event: dict | None = None
+
+    # ---------------------------------------------------------------- state
+    @property
+    def schedules(self) -> tuple | None:
+        """Per-MoE-layer ``A2ASchedule`` tuple, or None before the first
+        plan.  ``group_by="model"`` repeats the shared schedule."""
+        if any(sel.current is None for sel in self.selectors):
+            return None
+        out = [None] * self.n_layers
+        for group, sel in zip(self.groups, self.selectors):
+            for l in group:
+                out[l] = sel.current.schedule
+        return tuple(out)
+
+    @property
+    def schedule_key(self) -> tuple:
+        """Compile-cache key: each group's current entry, by process-
+        unique uid (never reused, unlike id() after GC; -1 = unplanned)."""
+        return tuple(
+            sel.current.uid if sel.current is not None else -1
+            for sel in self.selectors
+        )
+
+    def live_entry_ids(self) -> set:
+        """uids of every entry still in a library — compile caches keyed
+        on ``schedule_key`` can drop keys referencing anything else (the
+        LRU eviction's whole point is bounding live executables)."""
+        return {e.uid for sel in self.selectors for e in sel.library}
+
+    def _group_traffic(self, gi: int) -> np.ndarray:
+        # Mean (not sum) over the group's layers: the schedule executes
+        # per layer, so capacities must be sized for one layer's traffic.
+        return self._smoothed[self.groups[gi]].mean(axis=0)
+
+    # -------------------------------------------------------------- observe
+    def observe(self, stats: np.ndarray) -> Decision:
+        """Feed one step's realized routing counts ``[L, n_src, E]``."""
+        t0 = time.perf_counter()
+        mats = routing_to_traffic(
+            stats, n_ranks=self.cfg.n_ranks, n_experts=self.cfg.n_experts
+        )
+        if mats.shape[0] != self.n_layers:
+            raise ValueError(
+                f"stats cover {mats.shape[0]} layers, runtime has {self.n_layers}"
+            )
+        if self._smoothed is None:
+            self._smoothed = mats.copy()
+        else:
+            self._smoothed = (1 - self.cfg.ema) * self._smoothed + self.cfg.ema * mats
+        self.steps += 1
+
+        proposals = [
+            sel.propose(self._group_traffic(gi))
+            for gi, sel in enumerate(self.selectors)
+        ]
+        decision = self._apply(proposals)
+        self.observe_s += time.perf_counter() - t0
+        return decision
+
+    def prime(self, traffic: np.ndarray) -> Decision:
+        """Bootstrap from a demand estimate before the first step.
+
+        ``traffic``: ``[n, n]`` (shared across layers) or ``[L, n, n]``.
+        Plans every group so ``schedules`` is available for the initial
+        compile (scheduled dispatch cannot run schedule-less).
+        """
+        t = np.asarray(traffic, dtype=np.float64)
+        if t.ndim == 2:
+            t = np.broadcast_to(t, (self.n_layers, *t.shape))
+        if t.shape != (self.n_layers, self.cfg.n_ranks, self.cfg.n_ranks):
+            raise ValueError(f"bad prime traffic shape {t.shape}")
+        self._smoothed = t.astype(np.float64).copy()
+        proposals = []
+        for gi, sel in enumerate(self.selectors):
+            # run the traffic through the selector so its EMA state exists
+            p = sel.propose(self._group_traffic(gi))
+            if sel.current is None:
+                p = Proposal("miss", None, float("inf"))
+            proposals.append(p)
+        return self._apply(proposals)
+
+    # --------------------------------------------------------------- re-plan
+    def _apply(self, proposals: list[Proposal]) -> Decision:
+        if any(p.action == "miss" for p in proposals):
+            self._replan(proposals)
+            replanned = True
+        else:
+            for sel, p in zip(self.selectors, proposals):
+                if p.action == "switch":
+                    sel.adopt(p.entry)
+            replanned = False
+        key = self.schedule_key
+        changed = key != self._key
+        self._key = key
+        return Decision(
+            changed=changed,
+            replanned=replanned,
+            key=key,
+            actions=tuple(p.action for p in proposals),
+        )
+
+    def _replan(self, proposals: list[Proposal]) -> None:
+        """One ``decompose_batch`` call re-plans ALL MoE layers (per-layer
+        warm states), plus one aggregate row per multi-layer group — so a
+        steady-state drift event never solves an assignment problem."""
+        t0 = time.perf_counter()
+        maxweight = self.cfg.strategy == "maxweight"
+        rows = [self._smoothed]
+        warm: list[WarmState | None] = list(self._warm)
+        group_rows: dict[int, int] = {}
+        cursor = self.n_layers
+        for gi, group in enumerate(self.groups):
+            if len(group) == 1:
+                group_rows[gi] = group[0]
+            else:
+                rows.append(self._group_traffic(gi)[None])
+                warm.append(self._group_warm[gi])
+                group_rows[gi] = cursor
+                cursor += 1
+        stack = np.concatenate(rows, axis=0)
+        decomps = decompose_batch(
+            stack,
+            self.cfg.strategy,
+            min_fill=self.cfg.min_fill,
+            warm_start=warm if maxweight else None,
+        )
+        self.decompose_calls += 1
+        self.replan_events += 1
+        if maxweight:
+            self._warm = [warm_state_of(d) for d in decomps[: self.n_layers]]
+            for gi, row in group_rows.items():
+                if row >= self.n_layers:
+                    self._group_warm[gi] = warm_state_of(decomps[row])
+        hits = sum(bool(d.meta.get("warm_hit")) for d in decomps)
+        self.warm_hits += hits
+        self.cold_plans += len(decomps) - hits
+        registered = []
+        for gi, (sel, p) in enumerate(zip(self.selectors, proposals)):
+            if p.action == "miss":
+                d = decomps[group_rows[gi]]
+                entry = ScheduleEntry(
+                    name=f"plan{self.replan_events}.g{gi}",
+                    reference=self._group_traffic(gi).copy(),
+                    schedule=plan_schedule(d, **self._plan_kwargs),
+                )
+                sel.register(entry)
+                registered.append(gi)
+            elif p.action == "switch":
+                sel.adopt(p.entry)
+        for sel in self.selectors:
+            # the event re-planned (and warm-refreshed) every layer, so
+            # the whole runtime enters cooldown — otherwise groups whose
+            # EMA crosses tolerance a step later each trigger their own
+            # event (a recompile per step: the storm cooldown exists for)
+            sel._cooldown_left = max(sel._cooldown_left, sel.cooldown)
+        dt = time.perf_counter() - t0
+        self.replan_s += dt
+        self.last_event = {
+            "step": self.steps,
+            "decompose_calls": 1,
+            "layers": len(decomps),
+            "warm_hits": hits,
+            "cold": len(decomps) - hits,
+            "groups_replanned": registered,
+            "replan_s": dt,
+        }
+
+    # --------------------------------------------------------------- summary
+    def summary(self) -> dict:
+        """Counters for logs / benchmark output."""
+        return {
+            "steps": self.steps,
+            "replan_events": self.replan_events,
+            "decompose_calls": self.decompose_calls,
+            "warm_hits": self.warm_hits,
+            "cold_plans": self.cold_plans,
+            "switches": sum(s.switches for s in self.selectors),
+            "library_sizes": [len(s.library) for s in self.selectors],
+            "observe_us_per_step": (
+                round(self.observe_s / self.steps * 1e6, 2) if self.steps else 0.0
+            ),
+            "replan_ms_per_event": (
+                round(self.replan_s / self.replan_events * 1e3, 3)
+                if self.replan_events
+                else 0.0
+            ),
+        }

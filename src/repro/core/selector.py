@@ -25,6 +25,7 @@ steady-state re-plan never solves an assignment problem.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 
 import numpy as np
 
@@ -32,7 +33,18 @@ from repro.core.decompose import decompose
 from repro.core.maxweight import WarmState, warm_state_of
 from repro.core.schedule import A2ASchedule, plan_schedule
 
-__all__ = ["ScheduleEntry", "ScheduleSelector"]
+__all__ = [
+    "DEFAULT_PLAN_KWARGS",
+    "Proposal",
+    "ScheduleEntry",
+    "ScheduleSelector",
+]
+
+# plan_schedule defaults shared by the selector's inline re-plan and the
+# runtime's batched re-plan (core/runtime) — keep them planning identically
+DEFAULT_PLAN_KWARGS = {"slack": 1.1, "quantum": 8, "min_cap": 8}
+
+_entry_uids = itertools.count()
 
 
 @dataclasses.dataclass
@@ -41,6 +53,9 @@ class ScheduleEntry:
     reference: np.ndarray  # traffic matrix the schedule was planned for
     schedule: A2ASchedule
     caps: np.ndarray | None = None  # [n, n] per-pair capacity (lazy)
+    # process-unique id: compile-cache keys must survive entry eviction
+    # (id() values can be reused by the allocator after GC)
+    uid: int = dataclasses.field(default_factory=_entry_uids.__next__)
 
     def __post_init__(self):
         if self.caps is None:
@@ -85,6 +100,26 @@ class ScheduleEntry:
         return float(rem.sum() / total) if total > 0 else 0.0
 
 
+@dataclasses.dataclass(frozen=True)
+class Proposal:
+    """Outcome of scoring one observation without re-planning.
+
+    ``action`` is one of:
+      * ``"keep"``   — the current entry still serves within tolerance
+        (or nothing better is admissible under hysteresis/cooldown),
+      * ``"switch"`` — a library entry serves better; adopt it (compiled
+        executable already exists — a cheap swap),
+      * ``"miss"``   — no library entry serves within tolerance; the
+        caller must plan a new schedule (``register`` it afterwards).
+    ``entry`` is the entry to use for keep/switch (None on a miss with an
+    empty library); ``drop`` is its planned drop fraction.
+    """
+
+    action: str
+    entry: ScheduleEntry | None
+    drop: float
+
+
 class ScheduleSelector:
     """Maintain a schedule library; pick/replan per observed traffic.
 
@@ -93,6 +128,14 @@ class ScheduleSelector:
       strategy: decomposition strategy for (re)planning.
       drop_tolerance: acceptable planned drop rate before switching.
       ema: smoothing for observed traffic (drift filter).
+      hysteresis: relative drop improvement a library entry must offer
+        before the selector switches away from the current entry
+        (0 = legacy behavior: any strictly better entry wins).  Damps
+        executable flapping between near-equivalent schedules.
+      cooldown: observations after a re-plan during which ``propose``
+        never returns a miss (it degrades to switch/keep) — re-plan storms
+        while the EMA settles after a drift event cost a recompile each.
+        0 = legacy behavior.
       max_library: LRU bound on the schedule library (compiled executables
         are expensive to keep alive; evicts the least-recently-used entry).
         Floored at 2 — the current entry is never evicted, so a bound of 1
@@ -106,6 +149,8 @@ class ScheduleSelector:
         strategy: str = "maxweight",
         drop_tolerance: float = 0.02,
         ema: float = 0.3,
+        hysteresis: float = 0.0,
+        cooldown: int = 0,
         plan_kwargs: dict | None = None,
         max_library: int = 16,
     ):
@@ -113,7 +158,10 @@ class ScheduleSelector:
         self.strategy = strategy
         self.drop_tolerance = drop_tolerance
         self.ema = ema
-        self.plan_kwargs = dict(slack=1.1, quantum=8, min_cap=8)
+        self.hysteresis = hysteresis
+        self.cooldown = cooldown
+        self._cooldown_left = 0
+        self.plan_kwargs = dict(DEFAULT_PLAN_KWARGS)
         if plan_kwargs:
             self.plan_kwargs.update(plan_kwargs)
         self.library: list[ScheduleEntry] = []
@@ -142,13 +190,31 @@ class ScheduleSelector:
             name=name, reference=traffic.copy(),
             schedule=plan_schedule(d, **self.plan_kwargs),
         )
+        self.register(entry, make_current=False)
+        return entry
+
+    def register(self, entry: ScheduleEntry, *, make_current: bool = True) -> None:
+        """Insert an externally planned entry (e.g. the runtime's batched
+        re-plan) into the library and optionally adopt it as current.
+        Starts the re-plan cooldown window."""
         if len(self.library) >= self.max_library:
             self._evict()
         self.library.append(entry)
         self._caps_stack = None
         self._touch(entry)
         self.replans += 1
-        return entry
+        self._cooldown_left = self.cooldown
+        if make_current:
+            self.adopt(entry)
+
+    def adopt(self, entry: ScheduleEntry) -> bool:
+        """Make ``entry`` current.  Returns True if it changed."""
+        changed = entry is not self.current
+        if changed and self.current is not None:
+            self.switches += 1
+        self.current = entry
+        self._touch(entry)
+        return changed
 
     def _evict(self) -> None:
         """Drop the least-recently-used entry (never the current one)."""
@@ -177,36 +243,68 @@ class ScheduleSelector:
         )
         return dropped / total
 
-    def observe(self, traffic: np.ndarray) -> tuple[ScheduleEntry, bool]:
-        """Feed one step's realized routing counts.
+    def propose(self, traffic: np.ndarray) -> Proposal:
+        """Score one step's realized routing counts WITHOUT re-planning.
 
-        Returns (entry to use next, changed?) — ``changed`` means the
-        caller must swap to that entry's compiled executable."""
+        Applies the EMA filter, then the hysteresis/cooldown policy; the
+        caller handles a ``"miss"`` by planning a schedule (possibly
+        batched across layer groups — see ``core/runtime``) and calling
+        ``register``.  ``observe`` wraps this with an inline re-plan."""
         t = np.asarray(traffic, dtype=np.float64)
         self._step += 1
         if self.smoothed is None:
             self.smoothed = t.copy()
         else:
             self.smoothed = (1 - self.ema) * self.smoothed + self.ema * t
+        in_cooldown = self._cooldown_left > 0
+        self._cooldown_left = max(0, self._cooldown_left - 1)
 
         off = self.smoothed.copy()
         np.fill_diagonal(off, 0.0)
         total = off.sum()
+        cur_drop = float("inf")
         if self.current is not None:
-            if self.current._drop_from_off(off, total) <= self.drop_tolerance:
+            cur_drop = self.current._drop_from_off(off, total)
+            if cur_drop <= self.drop_tolerance:
                 self._touch(self.current)
-                return self.current, False  # still serving well
-        # find the best library entry, else replan
+                return Proposal("keep", self.current, cur_drop)
         best, best_drop = None, float("inf")
         if self.library:
             drops = self._score_library(off)
             k = int(np.argmin(drops))
             best, best_drop = self.library[k], float(drops[k])
-        if best is None or best_drop > self.drop_tolerance:
-            best = self._plan(self.smoothed, f"plan{self.replans}")
-        changed = best is not self.current
-        if changed and self.current is not None:
-            self.switches += 1
-        self.current = best
-        self._touch(best)
-        return best, changed
+        # Switching away from current requires a relative improvement of
+        # at least `hysteresis` (flap damping); a fresh plan additionally
+        # requires the cooldown window to have elapsed.
+        improves = best is not None and best is not self.current and (
+            cur_drop == float("inf")
+            or best_drop <= cur_drop * (1.0 - self.hysteresis)
+        )
+        if improves and best_drop <= self.drop_tolerance:
+            return Proposal("switch", best, best_drop)
+        if best_drop <= self.drop_tolerance and self.current is not None:
+            # a library entry serves, but not enough better than current
+            # to justify flapping — ride the (marginally off) current
+            self._touch(self.current)
+            return Proposal("keep", self.current, cur_drop)
+        if in_cooldown:
+            if improves:
+                return Proposal("switch", best, best_drop)
+            if self.current is not None:
+                self._touch(self.current)
+                return Proposal("keep", self.current, cur_drop)
+        return Proposal("miss", best, best_drop)
+
+    def observe(self, traffic: np.ndarray) -> tuple[ScheduleEntry, bool]:
+        """Feed one step's realized routing counts.
+
+        Returns (entry to use next, changed?) — ``changed`` means the
+        caller must swap to that entry's compiled executable."""
+        p = self.propose(traffic)
+        entry = (
+            self._plan(self.smoothed, f"plan{self.replans}")
+            if p.action == "miss"
+            else p.entry
+        )
+        changed = self.adopt(entry)
+        return entry, changed

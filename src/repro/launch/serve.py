@@ -8,6 +8,14 @@ Serving layout (launch.rules.serve_rules): weights 2D (data x model),
 KV caches sharded per DESIGN.md §5b.  Requests arrive as fixed batches
 (static shapes); a production front-end would bucket by length — the
 bucketing scheduler is host-side and orthogonal to the compiled steps.
+
+``--controller`` closes the scheduler loop at serving granularity for
+MoE archs: a ``ScheduleRuntime`` observes per-round routing demand (the
+front-end's estimate, here synthesized with an injectable ``--drift``
+scenario), and re-plans between request rounds — schedule swaps land on
+round boundaries, where re-jitting the prefill/decode executables is
+safe.  Only ``scheduled`` dispatch bakes the schedule into the
+executables; other modes track decisions without re-jitting.
 """
 
 from __future__ import annotations
@@ -18,6 +26,7 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config, smoke_config
 from repro.launch.rules import dtype_policy, serve_rules
@@ -25,6 +34,38 @@ from repro.models import Model
 from repro.parallel import axis_rules
 
 log = logging.getLogger("repro.launch.serve")
+
+
+def _make_controller(cfg, args, n_ranks: int):
+    """(runtime, scenario) for MoE archs, (None, None) otherwise."""
+    if cfg.moe is None or cfg.moe.n_experts % n_ranks:
+        if args.controller:
+            log.info(
+                "controller disabled: arch %s has no EP-compatible MoE",
+                cfg.name,
+            )
+        return None, None
+    from repro.core import ControllerConfig, DriftScenario, ScheduleRuntime
+
+    model = Model(cfg)
+    runtime = ScheduleRuntime(
+        ControllerConfig(
+            n_ranks=n_ranks,
+            n_experts=cfg.moe.n_experts,
+            ema=0.6,  # round-level demand estimates: react fast
+            cooldown=1,
+            group_by="model",  # one shared schedule: prefill/decode scan
+        ),
+        model.n_moe_layers,
+    )
+    scenario = DriftScenario(
+        args.drift,
+        cfg.moe.n_experts,
+        shift_step=max(args.rounds // 2, 1),
+        window=max(args.rounds // 2, 1),
+        seed=0,
+    )
+    return runtime, scenario
 
 
 def main(argv=None) -> None:
@@ -36,6 +77,21 @@ def main(argv=None) -> None:
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--new-tokens", type=int, default=64)
     ap.add_argument("--rounds", type=int, default=2, help="request batches")
+    ap.add_argument(
+        "--controller",
+        action="store_true",
+        help="re-plan MoE schedules between rounds from demand estimates",
+    )
+    ap.add_argument(
+        "--drift",
+        default="shift",
+        choices=("none", "shift", "hotspot", "skew"),
+        help="demand drift injected across rounds (with --controller)",
+    )
+    ap.add_argument(
+        "--virtual-ranks", type=int, default=8,
+        help="controller fabric size when no EP mesh is active",
+    )
     args = ap.parse_args(argv)
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -44,9 +100,19 @@ def main(argv=None) -> None:
         n = jax.device_count()
         mesh = jax.make_mesh((max(n // 4, 1), min(n, 4)), ("data", "model"))
 
+    runtime = scenario = None
+    if args.controller:
+        n_ranks = (
+            mesh.shape["model"] if mesh is not None else args.virtual_ranks
+        )
+        runtime, scenario = _make_controller(cfg, args, n_ranks)
+
     model = Model(cfg)
     max_len = args.prompt_len + args.new_tokens
     policy = dtype_policy(cfg)
+    consumes_schedule = (
+        cfg.moe is not None and cfg.moe.dispatch == "scheduled"
+    )
 
     def serve_round(params, prompts, prefill, decode):
         caches = model.init_cache(args.batch, max_len, policy["cache_dtype"])
@@ -64,11 +130,37 @@ def main(argv=None) -> None:
         jax.block_until_ready(token)
         return t_pre, time.perf_counter() - t0
 
+    def observe_round(r: int):
+        """Feed round r's demand estimate; returns True when the serving
+        executables must be rebuilt (schedule swap on a round boundary)."""
+        nonlocal model
+        if runtime is None:
+            return False
+        tokens = float(args.batch * args.prompt_len * cfg.moe.top_k)
+        stats = np.broadcast_to(
+            tokens * scenario.expert_probs(r)[None, None, :],
+            (runtime.n_layers, 1, cfg.moe.n_experts),
+        )
+        decision = runtime.observe(stats)
+        if decision.changed:
+            model = model.with_schedule(runtime.schedules)
+            log.info(
+                "round %d: controller swap (%s)",
+                r,
+                "library miss" if decision.replanned else "library hit",
+            )
+        return decision.changed and consumes_schedule
+
     def run():
+        nonlocal model
         params = model.init(jax.random.PRNGKey(0))
+        observe_round(0)  # plan before the first jit (round-0 schedule)
         prefill = jax.jit(model.prefill, donate_argnums=(2,))
         decode = jax.jit(model.decode_step, donate_argnums=(2,))
         for r in range(args.rounds):
+            if r > 0 and observe_round(r):
+                prefill = jax.jit(model.prefill, donate_argnums=(2,))
+                decode = jax.jit(model.decode_step, donate_argnums=(2,))
             prompts = jax.random.randint(
                 jax.random.PRNGKey(r), (args.batch, args.prompt_len), 0, cfg.vocab_size
             )
@@ -82,6 +174,16 @@ def main(argv=None) -> None:
                 args.batch * args.prompt_len / t_pre,
                 t_dec * 1e3,
                 toks / t_dec,
+            )
+        if runtime is not None:
+            s = runtime.summary()
+            log.info(
+                "controller: %d re-plan events, %d warm / %d cold plans, "
+                "observe %.0fus/round",
+                s["replan_events"],
+                s["warm_hits"],
+                s["cold_plans"],
+                s["observe_us_per_step"],
             )
 
     if mesh is not None:

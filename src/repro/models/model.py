@@ -31,9 +31,32 @@ from repro.parallel import shard
 
 
 class Model:
-    def __init__(self, cfg: ModelConfig, schedule: A2ASchedule | None = None):
+    """``schedule`` is either one ``A2ASchedule`` shared by every MoE
+    layer, or a sequence with one schedule per MoE layer (layer order) —
+    the controller runtime's per-layer re-planning.  A sequence whose
+    entries are all the same object collapses to the shared form (keeps
+    the scan-friendly stack and the serving paths, which do not support
+    distinct per-layer schedules)."""
+
+    def __init__(self, cfg: ModelConfig, schedule=None):
         self.cfg = cfg
+        if (
+            isinstance(schedule, (list, tuple))
+            and schedule
+            and all(s is schedule[0] for s in schedule)
+        ):
+            schedule = schedule[0]
         self.schedule = schedule
+
+    def with_schedule(self, schedule) -> "Model":
+        """A new facade over the same config with a different schedule
+        (the runtime's swap path — params are untouched)."""
+        return Model(self.cfg, schedule)
+
+    @property
+    def n_moe_layers(self) -> int:
+        cfg = self.cfg
+        return sum(cfg.ffn_kind(l) == "moe" for l in range(cfg.n_layers))
 
     # ------------------------------------------------------------- params
     def init(self, key: jax.Array) -> dict:
@@ -73,9 +96,12 @@ class Model:
         x = stack.stack_train(params["stack"], self.cfg, x, self.schedule)
         return self._logits(params, x)
 
-    def _hidden(self, params, tokens, ext_embeds=None):
+    def _hidden(self, params, tokens, ext_embeds=None, *, collect_stats=False):
         x = self._embed(params, tokens, ext_embeds)
-        return stack.stack_train(params["stack"], self.cfg, x, self.schedule)
+        return stack.stack_train(
+            params["stack"], self.cfg, x, self.schedule,
+            collect_stats=collect_stats,
+        )
 
     def loss(self, params, batch: dict) -> jax.Array:
         """Mean next-token CE over positions with targets >= 0.
@@ -85,7 +111,18 @@ class Model:
         bounding loss memory at [B, S/nc, V/tp] — essential for 150k-vocab
         models at 4k sequence lengths."""
         hidden = self._hidden(params, batch["tokens"], batch.get("ext_embeds"))
-        targets = batch["targets"]
+        return self._ce(params, hidden, batch["targets"])
+
+    def loss_and_stats(self, params, batch: dict):
+        """``loss`` plus per-layer realized routing counts
+        ``[n_moe_layers, n_src, E]`` — the controller loop's observation
+        (aux output; host-fetched off the critical path)."""
+        hidden, stats = self._hidden(
+            params, batch["tokens"], batch.get("ext_embeds"), collect_stats=True
+        )
+        return self._ce(params, hidden, batch["targets"]), stats
+
+    def _ce(self, params, hidden, targets) -> jax.Array:
         if hidden.shape[1] != targets.shape[1]:  # frontend prefix: no loss
             pad = hidden.shape[1] - targets.shape[1]
             targets = jnp.concatenate(

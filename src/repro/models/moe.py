@@ -149,8 +149,21 @@ def _ep_size() -> int:
     return ar.axis_size((EP_AXIS,))
 
 
+def _routing_counts(idx: jax.Array, n_experts: int) -> jax.Array:
+    """Realized per-expert routing demand from [T, k] expert ids.
+
+    Counts are pre-capacity-drop (the controller plans for demand, not for
+    what the current schedule happened to admit) and carry no gradient —
+    top-k indices are already non-differentiable."""
+    return (
+        jnp.zeros((n_experts,), jnp.float32).at[idx.reshape(-1)].add(1.0)
+    )
+
+
 # --------------------------------------------------------------- dense mode
-def _moe_dense(params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+def _moe_dense(
+    params, cfg: ModelConfig, x: jax.Array, *, return_stats: bool = False
+):
     m = cfg.moe
     b, s, d = x.shape
     t = b * s
@@ -165,11 +178,22 @@ def _moe_dense(params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
     y = _expert_ffn(params, buf, use_pallas=m.use_pallas)
     y = shard(y, "expert", "fsdp", None)
     out = _ungroup(y, pos, gate, t)
-    return out.astype(x.dtype).reshape(b, s, d)
+    out = out.astype(x.dtype).reshape(b, s, d)
+    if not return_stats:
+        return out
+    # single source shard: [1, E]
+    return out, _routing_counts(idx, m.n_experts)[None, :]
 
 
 # ----------------------------------------------------------- EP (A2A) modes
-def _moe_ep(params, cfg: ModelConfig, x: jax.Array, schedule: A2ASchedule | None):
+def _moe_ep(
+    params,
+    cfg: ModelConfig,
+    x: jax.Array,
+    schedule: A2ASchedule | None,
+    *,
+    return_stats: bool = False,
+):
     """Token-sharded EP under shard_map over the model axis."""
     m = cfg.moe
     ar = current_rules()
@@ -203,6 +227,11 @@ def _moe_ep(params, cfg: ModelConfig, x: jax.Array, schedule: A2ASchedule | None
         w_d_spec,  # w_down [E, f, d]
     )
     out_specs = P(batch_axes, EP_AXIS, None)
+    if return_stats:
+        # routing counts: each (batch shard, EP rank) contributes a
+        # [1, 1, E] row; globally [batch_shards, n, E], summed over the
+        # batch axis outside the shard_map.
+        out_specs = (out_specs, P(batch_axes, EP_AXIS, None))
 
     def body(xb, wr, wg, wu, wd):
         bl, s_loc, _ = xb.shape
@@ -279,18 +308,25 @@ def _moe_ep(params, cfg: ModelConfig, x: jax.Array, schedule: A2ASchedule | None
             back = scheduled_combine(parts, sched, EP_AXIS, c_max)
 
         y_loc = _ungroup(back, pos, gate, t_ep)  # [t_ep, d] f32
-        return y_loc.astype(xb.dtype).reshape(bl, s_loc, d)
+        out = y_loc.astype(xb.dtype).reshape(bl, s_loc, d)
+        if not return_stats:
+            return out
+        return out, _routing_counts(idx, m.n_experts)[None, None, :]
 
     fn = shard_map_compat(
         body, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False
     )
-    return fn(
+    res = fn(
         x,
         params["router"]["w"],
         params["w_gate"],
         params["w_up"],
         params["w_down"],
     )
+    if not return_stats:
+        return res
+    y, counts = res
+    return y, counts.sum(axis=0)  # [n, E]
 
 
 def _ep_feasible(cfg: ModelConfig, x: jax.Array) -> bool:
@@ -316,15 +352,20 @@ def moe_apply(
     x: jax.Array,
     *,
     schedule: A2ASchedule | None = None,
-) -> jax.Array:
+    return_stats: bool = False,
+):
+    """Apply the MoE FFN.  With ``return_stats`` the layer additionally
+    returns its realized routing counts ``[n_src, E]`` (f32; one row per
+    EP source rank, a single row in dense mode) — the controller loop's
+    observation signal, host-fetched off the critical path."""
     m = cfg.moe
     mode = m.dispatch
     if _ep_size() == 1 or mode == "dense" or not _ep_feasible(cfg, x):
-        return _moe_dense(params, cfg, x)
+        return _moe_dense(params, cfg, x, return_stats=return_stats)
     if mode == "a2a":
-        return _moe_ep(params, cfg, x, None)
+        return _moe_ep(params, cfg, x, None, return_stats=return_stats)
     if mode == "scheduled":
         if schedule is None:
             raise ValueError("scheduled dispatch needs an A2ASchedule")
-        return _moe_ep(params, cfg, x, schedule)
+        return _moe_ep(params, cfg, x, schedule, return_stats=return_stats)
     raise ValueError(f"unknown dispatch mode {mode!r}")

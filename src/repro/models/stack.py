@@ -52,22 +52,35 @@ def block_init(key: jax.Array, cfg: ModelConfig, j: int) -> dict:
     return p
 
 
-def _ffn_apply(p, cfg, j, x, schedule):
+def moe_positions(cfg: ModelConfig) -> list[int]:
+    """Period positions carrying an MoE FFN (the param/stat layout is
+    periodic, so ``ffn_kind(j)`` for j in [0, period) covers all layers)."""
+    return [j for j in range(cfg.period) if cfg.ffn_kind(j) == "moe"]
+
+
+def _ffn_apply(p, cfg, j, x, schedule, collect_stats=False):
+    """Returns (y, routing-stats-or-None)."""
     if cfg.ffn_kind(j) == "moe":
-        return moe_apply(p["ffn"], cfg, x, schedule=schedule)
+        out = moe_apply(
+            p["ffn"], cfg, x, schedule=schedule, return_stats=collect_stats
+        )
+        return out if collect_stats else (out, None)
     if cfg.ffn_gelu:
-        return gelu_mlp_apply(p["ffn"], x)
-    return swiglu_apply(p["ffn"], x)
+        return gelu_mlp_apply(p["ffn"], x), None
+    return swiglu_apply(p["ffn"], x), None
 
 
-def block_train(p, cfg: ModelConfig, j: int, x, schedule):
+def block_train(p, cfg: ModelConfig, j: int, x, schedule, *, collect_stats=False):
     """One layer in Megatron-SP form: the residual stream x stays
     sequence-sharded ('seq_act' rule); mixers that need cross-token access
     gather a bf16 copy and their output is constrained back to
     sequence-sharded so the out-proj psum lowers to a reduce-scatter.
     MoE FFNs consume the sequence-sharded stream directly (the EP
     shard_map is sequence-sharded over the same axis — zero extra comm).
-    All constraints are no-ops without a mesh."""
+    All constraints are no-ops without a mesh.
+
+    Returns (x, stats) — stats is the MoE layer's realized routing counts
+    when ``collect_stats`` (None for dense FFNs / rwkv channel-mix)."""
     from repro.parallel import shard
 
     def seq_sharded(t):
@@ -85,9 +98,10 @@ def block_train(p, cfg: ModelConfig, j: int, x, schedule):
         x = seq_sharded(x + y)
         h2 = rmsnorm_apply(p["ln2"], x, eps=cfg.norm_eps)
         y2, _ = rk.rwkv_channel_mix(p["mixer"], h2)
-        return seq_sharded(x + y2)
+        return seq_sharded(x + y2), None
     h = rmsnorm_apply(p["ln2"], x, eps=cfg.norm_eps)
-    return seq_sharded(x + _ffn_apply(p, cfg, j, h, schedule))
+    y, stats = _ffn_apply(p, cfg, j, h, schedule, collect_stats)
+    return seq_sharded(x + y), stats
 
 
 def block_cache(cfg: ModelConfig, j: int, batch: int, max_len: int, dtype=jnp.bfloat16):
@@ -118,7 +132,7 @@ def block_prefill(p, cfg, j, x, cache, schedule):
         x = x + y2
         return x, (x_tm.astype(cache[0].dtype), s, x_cm.astype(cache[2].dtype))
     h = rmsnorm_apply(p["ln2"], x, eps=cfg.norm_eps)
-    x = x + _ffn_apply(p, cfg, j, h, schedule)
+    x = x + _ffn_apply(p, cfg, j, h, schedule)[0]
     return x, cache
 
 
@@ -144,7 +158,7 @@ def block_decode(p, cfg, j, x, cache, step, schedule):
         x = x + y2
         return x, (x_tm2.astype(x_tm.dtype), s2, x_cm2.astype(x_cm.dtype))
     h = rmsnorm_apply(p["ln2"], x, eps=cfg.norm_eps)
-    x = x + _ffn_apply(p, cfg, j, h, schedule)
+    x = x + _ffn_apply(p, cfg, j, h, schedule)[0]
     return x, cache
 
 
@@ -169,11 +183,39 @@ def stack_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16) 
     return out
 
 
-def stack_train(params: dict, cfg: ModelConfig, x: jax.Array, schedule) -> jax.Array:
+def stack_train(
+    params: dict,
+    cfg: ModelConfig,
+    x: jax.Array,
+    schedule,
+    *,
+    collect_stats: bool = False,
+):
+    """Run the training stack.
+
+    ``schedule`` is either one ``A2ASchedule``/None shared by every MoE
+    layer (scan path: HLO is O(period)) or a sequence with one schedule
+    per MoE layer in layer order (the controller's per-layer re-planning;
+    schedules are static so the stack unrolls — HLO O(depth)).
+
+    With ``collect_stats`` returns ``(x, stats)`` where stats is the
+    ``[n_moe_layers, n_src, E]`` realized routing counts in layer order.
+    """
+    if isinstance(schedule, (list, tuple)):
+        return _stack_train_unrolled(
+            params, cfg, x, tuple(schedule), collect_stats
+        )
+
     def period_fn(x, pparams):
+        stats = []
         for j in range(cfg.period):
-            x = block_train(pparams[f"pos{j}"], cfg, j, x, schedule)
-        return x
+            x, st = block_train(
+                pparams[f"pos{j}"], cfg, j, x, schedule,
+                collect_stats=collect_stats,
+            )
+            if st is not None:
+                stats.append(st)
+        return x, tuple(stats)
 
     if cfg.remat == "block":
         period_fn = jax.checkpoint(period_fn)
@@ -183,12 +225,62 @@ def stack_train(params: dict, cfg: ModelConfig, x: jax.Array, schedule) -> jax.A
     def scan_fn(carry, pparams):
         # the scan carry is the saved (checkpointed) residual: keep it
         # sequence-sharded under the 'seq_act' rule (no-op by default)
-        out = shard(period_fn(carry, pparams), "batch", "seq_act", "embed")
-        return out, None
+        out, stats = period_fn(carry, pparams)
+        return shard(out, "batch", "seq_act", "embed"), stats
 
     x = shard(x, "batch", "seq_act", "embed")
-    x, _ = jax.lax.scan(scan_fn, x, params)
-    return x
+    x, stats = jax.lax.scan(scan_fn, x, params)
+    if not collect_stats:
+        return x
+    # stats: tuple (per MoE period position) of [n_periods, n_src, E];
+    # flatten to [n_moe_layers, n_src, E] in global layer order.
+    flat = [leaf[p] for p in range(cfg.n_periods) for leaf in stats]
+    return x, jnp.stack(flat)
+
+
+def _stack_train_unrolled(
+    params: dict,
+    cfg: ModelConfig,
+    x: jax.Array,
+    schedules: tuple,
+    collect_stats: bool,
+):
+    """Per-layer schedules: unrolled over periods (schedules are static
+    compile-time values, so they cannot ride through ``lax.scan``)."""
+    from repro.parallel import shard
+
+    positions = moe_positions(cfg)
+    expected = cfg.n_periods * len(positions)
+    if len(schedules) != expected:
+        raise ValueError(
+            f"got {len(schedules)} schedules for {expected} MoE layers"
+        )
+    x = shard(x, "batch", "seq_act", "embed")
+    stats = []
+    si = 0
+    for p in range(cfg.n_periods):
+        pparams = jax.tree.map(lambda a: a[p], params)
+        scheds = {j: schedules[si + k] for k, j in enumerate(positions)}
+        si += len(positions)
+
+        def period_fn(x, pp, scheds=scheds):
+            sts = []
+            for j in range(cfg.period):
+                x, st = block_train(
+                    pp[f"pos{j}"], cfg, j, x, scheds.get(j),
+                    collect_stats=collect_stats,
+                )
+                if st is not None:
+                    sts.append(st)
+            return x, tuple(sts)
+
+        fn = jax.checkpoint(period_fn) if cfg.remat == "block" else period_fn
+        x, sts = fn(x, pparams)
+        x = shard(x, "batch", "seq_act", "embed")
+        stats.extend(sts)
+    if not collect_stats:
+        return x
+    return x, jnp.stack(stats)
 
 
 def stack_prefill(params, cfg: ModelConfig, x, caches, schedule):

@@ -43,6 +43,11 @@ class TrainLoopConfig:
     peak_lr: float = 3e-4
     warmup: int = 20
     grad_compress: str | None = None
+    # failure budget: consecutive failed attempts.  The counter resets as
+    # soon as the run progresses past the step that failed (NOT on any
+    # replayed pre-failure step — a persistently failing step must still
+    # exhaust the budget), so transient faults spread across a long run
+    # never kill it; only a genuinely stuck step does.
     max_failures: int = 3
     log_every: int = 10
 
@@ -54,6 +59,8 @@ def train_loop(
     *,
     shard_batch: Callable | None = None,
     failure_hook: Callable[[int], None] | None = None,
+    runtime=None,
+    stats_hook: Callable | None = None,
 ) -> dict:
     """Run (or resume) training.  Returns final metrics/history.
 
@@ -61,20 +68,56 @@ def train_loop(
       mesh's batch sharding (identity when single-device).
     failure_hook: test hook called before each step; may raise to inject
       a failure.
+    runtime: optional ``core.ScheduleRuntime`` closing the controller
+      loop: the step function emits per-layer realized routing counts,
+      the loop host-fetches the *previous* step's counts (never blocking
+      on in-flight work) and feeds them to ``runtime.observe``; when the
+      decision swaps schedules, the jitted step function is swapped too —
+      compiled executables are cached per schedule assignment, so only a
+      library miss compiles.
+    stats_hook: optional fn(step, stats) -> stats applied to the observed
+      routing counts before ``runtime.observe`` (drift injection in tests
+      and the drift-scenario examples).
     """
     stream = SyntheticStream(data_cfg)
     opt = AdamW(
         lr=cosine_schedule(loop_cfg.peak_lr, loop_cfg.warmup, loop_cfg.steps)
     )
-    step_fn = jax.jit(
-        make_train_step(
-            model,
-            opt,
-            microbatches=loop_cfg.microbatches,
-            grad_compress=loop_cfg.grad_compress,
-        ),
-        donate_argnums=(0, 1, 2),
-    )
+
+    def build_step(m):
+        return jax.jit(
+            make_train_step(
+                m,
+                opt,
+                microbatches=loop_cfg.microbatches,
+                grad_compress=loop_cfg.grad_compress,
+                collect_routing=runtime is not None,
+            ),
+            donate_argnums=(0, 1, 2),
+        )
+
+    if runtime is not None and runtime.schedules is not None:
+        model = model.with_schedule(runtime.schedules)
+    moe_cfg = getattr(model.cfg, "moe", None)
+    if (
+        moe_cfg is not None
+        and moe_cfg.dispatch == "scheduled"
+        and model.schedule is None
+    ):
+        # fail fast: this is a config error, not a transient fault — left
+        # to the step function it would trace-fail max_failures+1 times
+        raise ValueError(
+            "scheduled dispatch needs a schedule before the first step: "
+            "prime the runtime (ScheduleRuntime.prime) or pass a Model "
+            "with an initial A2ASchedule"
+        )
+    step_fn = build_step(model)
+    # compiled step per schedule assignment: a drift event whose selectors
+    # land on library entries reuses the executable (swap, no compile).
+    # Only scheduled dispatch bakes the schedule into the executable —
+    # dense/a2a steps are schedule-independent and never rebuilt.
+    consumes_schedule = moe_cfg is not None and moe_cfg.dispatch == "scheduled"
+    step_cache = {runtime.schedule_key: step_fn} if runtime is not None else {}
     manager = CheckpointManager(loop_cfg.ckpt_dir, keep=loop_cfg.keep)
 
     def fresh_state():
@@ -97,21 +140,63 @@ def train_loop(
         shard_batch = lambda b: b
 
     history = []
-    failures = 0
+    failures = 0  # total over the run (reported)
+    consecutive_failures = 0  # the retry budget (resets on progress)
+    last_failure_step = -1
     step = start_step
+    swaps = compiles = 0
+    pending_routing = None  # previous step's routing counts (device)
     t_last = time.perf_counter()
+    steps_since_log = 0
     while step < loop_cfg.steps:
         try:
             if failure_hook is not None:
                 failure_hook(step)
+            if runtime is not None and pending_routing is not None:
+                # Observe the PREVIOUS step's realized routing: its device
+                # computation already finished, so the host fetch never
+                # blocks on in-flight work (off the critical path).
+                stats = np.asarray(pending_routing, dtype=np.float64)
+                pending_routing = None
+                if stats_hook is not None:
+                    stats = stats_hook(step, stats)
+                decision = runtime.observe(stats)
+                if decision.changed:
+                    model = model.with_schedule(runtime.schedules)
+                    swaps += 1
+                    if consumes_schedule:
+                        if decision.key not in step_cache:
+                            step_cache[decision.key] = build_step(model)
+                            compiles += 1
+                        step_fn = step_cache[decision.key]
+                        # drop executables whose entries were LRU-evicted
+                        # from every library (they can never be swapped
+                        # back in; keeps live executables bounded)
+                        live = runtime.live_entry_ids()
+                        for k in list(step_cache):
+                            if k != decision.key and not set(k) <= live:
+                                del step_cache[k]
+                    log.info(
+                        "step %d: controller swap (%s; %s)",
+                        step,
+                        "library miss" if decision.replanned else "library hit",
+                        ",".join(decision.actions),
+                    )
             batch = shard_batch(stream.batch(step))
             params, opt_state, ef_state, metrics = step_fn(
                 state["params"], state["opt"], state["ef"], batch
             )
             state = {"params": params, "opt": opt_state, "ef": ef_state}
+            if runtime is not None:
+                pending_routing = metrics.pop("routing")
+            if step >= last_failure_step:
+                # progressed past the failing step: the fault was transient
+                consecutive_failures = 0
         except Exception as err:  # roll back to last checkpoint, retry
             failures += 1
-            if failures > loop_cfg.max_failures:
+            consecutive_failures += 1
+            last_failure_step = step
+            if consecutive_failures > loop_cfg.max_failures:
                 raise
             log.warning("step %d failed (%s); restoring last checkpoint", step, err)
             manager.wait()
@@ -121,21 +206,37 @@ def train_loop(
                 state, step = restored, ck_step
             else:
                 state, step = template, 0
+            # replayed steps re-log: drop history at/after the restored
+            # step so the returned history has no duplicate step numbers
+            history = [h for h in history if h["step"] < step]
+            pending_routing = None
+            t_last = time.perf_counter()
+            steps_since_log = 0
             continue
 
+        steps_since_log += 1
         if step % loop_cfg.log_every == 0 or step == loop_cfg.steps - 1:
             loss = float(metrics["loss"])
-            dt = time.perf_counter() - t_last
-            t_last = time.perf_counter()
-            history.append({"step": step, "loss": loss, "dt_s": dt})
-            log.info("step %d loss %.4f (%.2fs)", step, loss, dt)
+            now = time.perf_counter()
+            dt_step = (now - t_last) / steps_since_log
+            t_last = now
+            steps_since_log = 0
+            history.append({"step": step, "loss": loss, "dt_s": dt_step})
+            log.info("step %d loss %.4f (%.3fs/step)", step, loss, dt_step)
         step += 1
         if step % loop_cfg.ckpt_every == 0 or step == loop_cfg.steps:
             manager.save_async(step, state)
     manager.wait()
-    return {
+    out = {
         "history": history,
         "final_step": step,
         "failures": failures,
         "final_loss": history[-1]["loss"] if history else float("nan"),
     }
+    if runtime is not None:
+        out["controller"] = {
+            **runtime.summary(),
+            "swaps": swaps,
+            "compiles": compiles,
+        }
+    return out

@@ -119,7 +119,14 @@ def param_specs(params):
     return jax.tree_util.tree_unflatten(treedef, specs)
 
 
-def make_train_step(model, optimizer, *, microbatches: int = 1, grad_compress: str | None = None):
+def make_train_step(
+    model,
+    optimizer,
+    *,
+    microbatches: int = 1,
+    grad_compress: str | None = None,
+    collect_routing: bool = False,
+):
     """Returns train_step(params, opt_state, ef_state, batch) ->
     (params, opt_state, ef_state, metrics).
 
@@ -127,14 +134,22 @@ def make_train_step(model, optimizer, *, microbatches: int = 1, grad_compress: s
     (memory ~ 1/microbatches of activations on top of remat).
     grad_compress='ef8' applies int8 error-feedback compression to grads
     before the optimizer (see repro.optim.compression).
+    collect_routing adds the per-layer realized MoE routing counts
+    ``[n_moe_layers, n_src, E]`` to metrics as ``metrics["routing"]``
+    (summed over microbatches) — the controller loop's observation.
     """
 
     def loss_fn(params, batch):
-        return model.loss(params, batch)
+        if collect_routing:
+            return model.loss_and_stats(params, batch)
+        return model.loss(params, batch), None
 
     def grads_of(params, batch):
         if microbatches == 1:
-            return jax.value_and_grad(loss_fn)(params, batch)
+            (loss, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch
+            )
+            return loss, aux, g
         b = batch["tokens"].shape[0]
         assert b % microbatches == 0, (b, microbatches)
         mb = {
@@ -144,24 +159,33 @@ def make_train_step(model, optimizer, *, microbatches: int = 1, grad_compress: s
 
         def step(carry, mbatch):
             loss_acc, g_acc = carry
-            loss, g = jax.value_and_grad(loss_fn)(params, mbatch)
+            (loss, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, mbatch
+            )
             g_acc = jax.tree.map(jnp.add, g_acc, g)
-            return (loss_acc + loss, g_acc), None
+            return (loss_acc + loss, g_acc), aux
 
         # accumulate in the param dtype: f32 for <100B policies, bf16 for
         # the >=100B ones (halves the largest training buffer; the Adam
         # update still computes in f32)
         zero = jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype), params)
-        (loss, grads), _ = jax.lax.scan(step, (0.0, zero), mb)
+        (loss, grads), auxs = jax.lax.scan(step, (0.0, zero), mb)
+        aux = (
+            jax.tree.map(lambda a: a.sum(axis=0), auxs)
+            if collect_routing
+            else None
+        )
         scale = 1.0 / microbatches
-        return loss * scale, jax.tree.map(lambda g: g * scale, grads)
+        return loss * scale, aux, jax.tree.map(lambda g: g * scale, grads)
 
     def train_step(params, opt_state, ef_state, batch):
-        loss, grads = grads_of(params, batch)
+        loss, aux, grads = grads_of(params, batch)
         if grad_compress == "ef8":
             grads, ef_state = ef_int8_compress(grads, ef_state)
         params, opt_state, stats = optimizer.update(grads, opt_state, params)
         metrics = {"loss": loss, **stats}
+        if collect_routing:
+            metrics["routing"] = aux
         return params, opt_state, ef_state, metrics
 
     return train_step

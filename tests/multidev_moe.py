@@ -93,6 +93,26 @@ def main() -> None:
         )
         print("OK a2a == dense")
 
+        # --- EP routing stats match the host-side router replication ------
+        y_st, stats = jax.jit(
+            lambda p, x: moe.moe_apply(p, cfg_a2a, x, return_stats=True)
+        )(params, x)
+        np.testing.assert_allclose(
+            np.asarray(y_st), np.asarray(y_a2a), rtol=1e-5, atol=1e-5
+        )
+        n_ep, e = 4, cfg.moe.n_experts
+        assert stats.shape == (n_ep, e), stats.shape
+        # source rank i holds sequence chunk i (the EP shard_map is
+        # sequence-sharded); replicate its router on the host
+        s_loc = x.shape[1] // n_ep
+        expect = np.zeros((n_ep, e))
+        for i in range(n_ep):
+            chunk = x[:, i * s_loc : (i + 1) * s_loc].reshape(-1, x.shape[-1])
+            idx, _ = moe._router(params, cfg, chunk)
+            expect[i] = np.bincount(np.asarray(idx).ravel(), minlength=e)
+        np.testing.assert_allclose(np.asarray(stats), expect)
+        print("OK EP routing stats == host-replicated router counts")
+
         # --- grads a2a == dense -------------------------------------------
         g_dense = jax.jit(
             jax.grad(lambda p, x: (moe._moe_dense(p, cfg, x) ** 2).sum())

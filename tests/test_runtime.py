@@ -1,0 +1,259 @@
+"""Controller-loop runtime tests (core/runtime.py): observe -> score ->
+re-plan -> swap, plus the end-to-end drift training run."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ControllerConfig,
+    DriftScenario,
+    ScheduleRuntime,
+    routing_to_traffic,
+)
+
+N, E, L = 4, 8, 3
+
+
+def _stats(probs: np.ndarray, tokens: float = 4096.0, n_src: int = 1) -> np.ndarray:
+    """Deterministic [L, n_src, E] routing counts under popularity ``probs``."""
+    row = tokens / n_src * np.asarray(probs, dtype=np.float64)
+    return np.broadcast_to(row, (L, n_src, E)).copy()
+
+
+def _runtime(**kw) -> ScheduleRuntime:
+    cfg = dict(
+        n_ranks=N, n_experts=E, ema=1.0, cooldown=0, drop_tolerance=0.05
+    )
+    cfg.update(kw)
+    return ScheduleRuntime(ControllerConfig(**cfg), L)
+
+
+class TestRoutingToTraffic:
+    def test_full_source_resolution(self):
+        stats = np.arange(L * N * E, dtype=np.float64).reshape(L, N, E)
+        t = routing_to_traffic(stats, n_ranks=N, n_experts=E)
+        assert t.shape == (L, N, N)
+        # expert blocks fold onto ranks contiguously
+        np.testing.assert_allclose(
+            t[0, 0], stats[0, 0].reshape(N, E // N).sum(axis=1)
+        )
+
+    def test_single_source_spreads_evenly(self):
+        stats = np.ones((L, 1, E))
+        t = routing_to_traffic(stats, n_ranks=N, n_experts=E)
+        assert t.shape == (L, N, N)
+        np.testing.assert_allclose(t.sum(), stats.sum())  # tokens conserved
+        np.testing.assert_allclose(t[0], np.full((N, N), E / N / N))
+
+    def test_bad_shapes_raise(self):
+        with pytest.raises(ValueError):
+            routing_to_traffic(np.ones((L, 1, E + 1)), n_ranks=N, n_experts=E)
+        with pytest.raises(ValueError):
+            routing_to_traffic(np.ones((L, 3, E)), n_ranks=N, n_experts=E)
+
+
+class TestScheduleRuntime:
+    def test_first_observe_plans_all_groups(self):
+        rt = _runtime()
+        probs = np.linspace(1, 2, E)
+        d = rt.observe(_stats(probs))
+        assert d.changed and d.replanned
+        assert rt.decompose_calls == 1  # one batched call, all layers
+        assert rt.schedules is not None and len(rt.schedules) == L
+        assert rt.last_event["layers"] == L
+
+    def test_steady_state_keeps_schedule(self):
+        rt = _runtime()
+        probs = np.linspace(1, 2, E)
+        rt.observe(_stats(probs))
+        for i in range(5):
+            d = rt.observe(_stats(probs * (1 + 0.01 * i)))
+            assert not d.changed and not d.replanned
+        assert rt.decompose_calls == 1
+
+    def test_one_decompose_batch_per_drift_event(self):
+        rt = _runtime()
+        rt.observe(_stats(np.linspace(1, 2, E)))
+        rt.observe(_stats(np.linspace(2, 1, E) ** 4))  # hard drift
+        assert rt.replan_events == rt.decompose_calls == 2
+
+    def test_steady_state_replan_is_lap_free(self):
+        """Same support, drifted weights: the batched re-plan must replay
+        warm states for every layer — zero cold (LAP-solving) plans."""
+        rt = _runtime()
+        probs = np.linspace(1, 2, E)
+        rt.observe(_stats(probs))
+        assert rt.last_event["cold"] == L  # first plan is necessarily cold
+        # skew the weights hard enough to miss, support unchanged
+        d = rt.observe(_stats(probs**6))
+        assert d.replanned
+        assert rt.last_event["warm_hits"] == L
+        assert rt.last_event["cold"] == 0
+
+    def test_returning_regime_is_a_library_hit(self):
+        rt = _runtime()
+        a, b = np.linspace(1, 2, E), np.linspace(2, 1, E) ** 4
+        rt.observe(_stats(a))
+        rt.observe(_stats(b))
+        replans = rt.replan_events
+        d = rt.observe(_stats(a))  # regime A returns
+        assert d.changed and not d.replanned  # swap without a re-plan
+        assert rt.replan_events == replans
+
+    def test_cooldown_suppresses_replan_storm(self):
+        rt = _runtime(cooldown=10)
+        a, b = np.linspace(1, 2, E), np.linspace(2, 1, E) ** 4
+        rt.observe(_stats(a))
+        for _ in range(5):  # drifted, but inside the cooldown window
+            d = rt.observe(_stats(b))
+            assert not d.replanned
+        assert rt.replan_events == 1
+        for _ in range(10):
+            rt.observe(_stats(b))
+        assert rt.replan_events == 2  # replanned once the window elapsed
+
+    def test_replan_event_cools_down_every_group(self):
+        """Staggered drift: layers crossing tolerance a step after an
+        event must NOT each trigger their own re-plan — the event puts
+        the whole runtime in cooldown, not just the groups that missed."""
+        rt = _runtime(cooldown=3)
+        a = np.linspace(1, 2, E)
+        b = np.linspace(2, 1, E) ** 4
+        rt.observe(_stats(a))
+        for _ in range(4):  # burn the initial cooldown
+            rt.observe(_stats(a))
+        staggered = _stats(a)
+        staggered[0] = _stats(b)[0]  # only layer 0 has drifted so far
+        d = rt.observe(staggered)
+        assert d.replanned and rt.replan_events == 2
+        d2 = rt.observe(_stats(b))  # the other layers cross one step later
+        assert not d2.replanned, "staggered miss must be absorbed by cooldown"
+        assert rt.replan_events == 2
+
+    def test_model_grouping_shares_one_schedule(self):
+        rt = ScheduleRuntime(
+            ControllerConfig(
+                n_ranks=N, n_experts=E, ema=1.0, cooldown=0, group_by="model"
+            ),
+            L,
+        )
+        rt.observe(_stats(np.linspace(1, 2, E)))
+        scheds = rt.schedules
+        assert len(scheds) == L
+        assert all(s is scheds[0] for s in scheds)
+        # the batched call still decomposed every layer (warm states) plus
+        # the group aggregate row
+        assert rt.last_event["layers"] == L + 1
+
+    def test_prime_bootstraps_schedules(self):
+        rt = _runtime()
+        traffic = np.full((N, N), 100.0)
+        np.fill_diagonal(traffic, 0.0)
+        d = rt.prime(traffic)
+        assert d.changed and rt.schedules is not None
+        sched = rt.schedules[0]
+        assert sched.num_phases >= 1
+
+
+class TestEndToEndDrift:
+    def test_scheduled_dispatch_requires_priming(self, tmp_path):
+        """Unprimed runtime + scheduled dispatch is a config error: it
+        must fail fast, not burn the retry budget on trace failures."""
+        from repro.configs.base import ModelConfig, MoECfg
+        from repro.data import DataConfig
+        from repro.models import Model
+        from repro.train import TrainLoopConfig, train_loop
+
+        cfg = ModelConfig(
+            name="unprimed", family="moe", n_layers=2, d_model=32,
+            n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=128,
+            moe=MoECfg(n_experts=E, top_k=2, d_ff_expert=32,
+                       dispatch="scheduled"),
+            remat="none",
+        )
+        model = Model(cfg)
+        rt = ScheduleRuntime(
+            ControllerConfig(n_ranks=N, n_experts=E), model.n_moe_layers
+        )
+        with pytest.raises(ValueError, match="prime"):
+            train_loop(
+                model,
+                DataConfig(vocab_size=128, seq_len=16, global_batch=4),
+                TrainLoopConfig(steps=2, ckpt_dir=str(tmp_path)),
+                runtime=rt,
+            )
+
+    def test_drift_training_end_to_end(self, tmp_path):
+        """Close the loop for real: train a small MoE while a routing
+        regime shift is injected mid-run.  The runtime must re-plan all
+        layers in single decompose_batch calls, hit the warm path at the
+        steady-state re-plan (zero LAP solves), swap schedules, and the
+        loss must keep decreasing across the swap."""
+        from repro.configs.base import ModelConfig, MoECfg
+        from repro.data import DataConfig
+        from repro.models import Model
+        from repro.train import TrainLoopConfig, train_loop
+
+        cfg = ModelConfig(
+            name="drift-test",
+            family="moe",
+            n_layers=2,
+            d_model=32,
+            n_heads=4,
+            n_kv_heads=2,
+            d_ff=64,
+            vocab_size=128,
+            moe=MoECfg(n_experts=E, top_k=2, d_ff_expert=32),
+            remat="none",
+        )
+        model = Model(cfg)
+        rt = ScheduleRuntime(
+            ControllerConfig(n_ranks=N, n_experts=E, ema=1.0, cooldown=2),
+            model.n_moe_layers,
+        )
+        shift_at = 12
+
+        base = np.linspace(1.0, 2.0, E)
+        base /= base.sum()
+
+        def drift_hook(step, stats):
+            """Deterministic synthetic counts: regime A, then at
+            ``shift_at`` the same support with heavily skewed weights —
+            the steady-state re-plan case (support unchanged)."""
+            probs = base if step < shift_at else base**6 / (base**6).sum()
+            totals = stats.sum(axis=(1, 2), keepdims=True)
+            return np.broadcast_to(
+                probs[None, None, :], stats.shape
+            ) * totals
+
+        res = train_loop(
+            model,
+            DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=8),
+            TrainLoopConfig(
+                steps=30,
+                ckpt_dir=str(tmp_path),
+                ckpt_every=10,
+                peak_lr=5e-3,
+                warmup=5,
+                log_every=2,
+            ),
+            runtime=rt,
+            stats_hook=drift_hook,
+        )
+        ctl = res["controller"]
+        # the shift triggered a re-plan on top of the initial plan, each
+        # one batched decompose_batch call over all MoE layers
+        assert ctl["replan_events"] >= 2
+        assert ctl["decompose_calls"] == ctl["replan_events"]
+        assert ctl["swaps"] >= 2
+        # steady-state re-plan (support unchanged): warm path, no LAP
+        assert rt.last_event["cold"] == 0
+        assert rt.last_event["warm_hits"] == model.n_moe_layers
+        # training kept improving across the swap
+        losses = [h["loss"] for h in res["history"]]
+        steps = [h["step"] for h in res["history"]]
+        assert len(steps) == len(set(steps))
+        assert all(np.isfinite(losses))
+        assert np.mean(losses[-3:]) < np.mean(losses[:3]) - 0.1, losses
+        post_shift = [h["loss"] for h in res["history"] if h["step"] >= shift_at]
+        assert post_shift[-1] < post_shift[0], post_shift

@@ -2,7 +2,8 @@
 
 import numpy as np
 
-from repro.core.selector import ScheduleSelector
+from repro.core.schedule import ring_schedule
+from repro.core.selector import ScheduleEntry, ScheduleSelector
 from repro.core.traffic import RouterConfig, traffic_matrix
 
 
@@ -50,3 +51,66 @@ class TestScheduleSelector:
         entry, changed = sel.observe(a)  # regime A returns
         assert changed
         assert sel.replans == replans, "should reuse the library, not replan"
+
+
+def _uniform_entry(name, n, cap, traffic_scale=1.0):
+    """Entry whose cap matrix is uniformly ``cap`` on off-diag pairs."""
+    sched = ring_schedule(n, cap)
+    ref = np.full((n, n), traffic_scale)
+    np.fill_diagonal(ref, 0.0)
+    return ScheduleEntry(name=name, reference=ref, schedule=sched)
+
+
+class TestHysteresis:
+    """Switching away from current requires a relative drop improvement."""
+
+    def _selector(self, hysteresis):
+        n = 4
+        sel = ScheduleSelector(
+            n, ema=1.0, drop_tolerance=0.06, hysteresis=hysteresis
+        )
+        a = _uniform_entry("a", n, cap=90)  # drop 0.10 on 100/pair traffic
+        b = _uniform_entry("b", n, cap=94)  # drop 0.06 on 100/pair traffic
+        sel.library = [a, b]
+        sel.current = a
+        traffic = np.full((n, n), 100.0)
+        np.fill_diagonal(traffic, 0.0)
+        return sel, a, b, traffic
+
+    def test_small_improvement_rides_current(self):
+        sel, a, b, traffic = self._selector(hysteresis=0.5)
+        p = sel.propose(traffic)  # b improves 0.10 -> 0.06: only 40% < 50%
+        assert p.action == "keep" and p.entry is a
+
+    def test_zero_hysteresis_switches(self):
+        sel, a, b, traffic = self._selector(hysteresis=0.0)
+        p = sel.propose(traffic)
+        assert p.action == "switch" and p.entry is b
+
+
+class TestCooldown:
+    def test_cooldown_suppresses_replans(self):
+        sel = ScheduleSelector(8, ema=1.0, cooldown=5)
+        a = _traffic(0)
+        b = np.roll(a, 3, axis=1)
+        np.fill_diagonal(b, 0.0)
+        sel.observe(a)
+        assert sel.replans == 1
+        for _ in range(5):  # inside the cooldown window: no re-plan storm
+            entry, _ = sel.observe(b)
+            assert sel.replans == 1
+        sel.observe(b)  # window elapsed: the miss is allowed through
+        assert sel.replans == 2
+
+    def test_cooldown_still_allows_library_switches(self):
+        n = 4
+        sel = ScheduleSelector(n, ema=1.0, drop_tolerance=0.06, cooldown=100)
+        a = _uniform_entry("a", n, cap=40)  # drop 0.60
+        b = _uniform_entry("b", n, cap=94)  # drop 0.06
+        sel.library = [a, b]
+        sel.current = a
+        sel._cooldown_left = 100
+        traffic = np.full((n, n), 100.0)
+        np.fill_diagonal(traffic, 0.0)
+        p = sel.propose(traffic)
+        assert p.action == "switch" and p.entry is b

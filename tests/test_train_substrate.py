@@ -1,6 +1,7 @@
 """Optimizer / data / checkpoint / train-step unit tests."""
 
 import os
+import time
 
 import jax
 import jax.numpy as jnp
@@ -243,3 +244,96 @@ class TestTrainStep:
             params, state, _, m = step_fn(params, state, {}, b)
             losses.append(float(m["loss"]))
         assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.3, losses
+
+
+# ------------------------------------------------------- fault-tolerant loop
+class TestTrainLoopFaultTolerance:
+    """Retry-path regressions: duplicate-free history after rollback, a
+    consecutive (not cumulative) failure budget, and honest per-step
+    throughput in the history."""
+
+    def _run(self, tmp_path, *, steps, failure_hook=None, max_failures=3,
+             ckpt_every=4, log_every=1):
+        from repro.configs.base import ModelConfig
+        from repro.data import DataConfig
+        from repro.models import Model
+        from repro.train import TrainLoopConfig, train_loop
+
+        cfg = ModelConfig(
+            name="loop-test", family="dense", n_layers=2, d_model=32,
+            n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=64, remat="none",
+        )
+        return train_loop(
+            Model(cfg),
+            DataConfig(vocab_size=64, seq_len=16, global_batch=4),
+            TrainLoopConfig(
+                steps=steps, ckpt_dir=str(tmp_path), ckpt_every=ckpt_every,
+                keep=3, peak_lr=1e-3, warmup=2, log_every=log_every,
+                max_failures=max_failures,
+            ),
+            failure_hook=failure_hook,
+        )
+
+    def test_rollback_dedupes_history(self, tmp_path):
+        """A failure past a checkpoint replays steps; the returned history
+        must not contain duplicate step numbers."""
+        state = {"fired": False}
+
+        def boom(step):
+            if step == 6 and not state["fired"]:
+                state["fired"] = True
+                raise RuntimeError("injected fault")
+
+        res = self._run(tmp_path, steps=10, failure_hook=boom)
+        assert state["fired"] and res["failures"] == 1
+        steps = [h["step"] for h in res["history"]]
+        assert steps == sorted(set(steps)), steps
+        assert res["final_step"] == 10
+
+    def test_transient_faults_spread_across_run_survive(self, tmp_path):
+        """More total faults than max_failures, but each retry succeeds:
+        the consecutive budget must NOT kill the run (the old cumulative
+        counter did)."""
+        fired = set()
+
+        def boom(step):
+            if step in (3, 5, 7, 9) and step not in fired:
+                fired.add(step)
+                raise RuntimeError(f"transient fault @ {step}")
+
+        res = self._run(tmp_path, steps=12, failure_hook=boom, max_failures=2)
+        assert len(fired) == 4
+        assert res["failures"] == 4  # total is still reported
+        assert res["final_step"] == 12
+
+    def test_persistent_failure_exhausts_budget(self, tmp_path):
+        """A step that keeps failing must still raise after max_failures
+        consecutive attempts."""
+        attempts = []
+
+        def boom(step):
+            if step == 5:
+                attempts.append(step)
+                raise RuntimeError("persistent fault")
+
+        with pytest.raises(RuntimeError, match="persistent fault"):
+            self._run(tmp_path, steps=10, failure_hook=boom, max_failures=2)
+        assert len(attempts) == 3  # budget + the final fatal attempt
+
+    def test_history_dt_is_per_step(self, tmp_path):
+        """history[*]['dt_s'] must be per-step time, not the whole
+        log_every window (the old behavior over-reported by log_every x)."""
+        sleep_s = 0.05
+
+        def slow(step):
+            time.sleep(sleep_s)
+
+        res = self._run(
+            tmp_path, steps=11, failure_hook=slow, log_every=5
+        )
+        entries = {h["step"]: h["dt_s"] for h in res["history"]}
+        # steady-state windows (steps 1-5 and 6-10) cover 5 steps each of
+        # >= 50ms: per-step must sit near one step's cost, far below the
+        # ~250ms window total the bug reported
+        for s in (5, 10):
+            assert sleep_s <= entries[s] < 3 * sleep_s, entries
