@@ -1,0 +1,114 @@
+"""Compile-count smoke: per-layer scheduled stacks must trace ONE layer
+body, not depth-many.
+
+Array-native schedules (``core.ScheduleTable``) exist so per-layer plans
+ride ``lax.scan`` — before them, distinct per-layer ``A2ASchedule``
+objects forced the stack to unroll (HLO O(depth)) and every drift swap
+recompiled.  This smoke guards both properties:
+
+1. **O(period) HLO**: the lowered HLO of a depth-8 scheduled MoE model
+   must contain a while loop (the scan) and the SAME number of dot ops
+   as a depth-2 model — one traced period body regardless of depth.
+2. **Zero-recompile swaps**: calling the jitted loss with a re-planned
+   table (same shapes) must not grow the executable cache.
+
+Exit code != 0 on regression, so CI fails fast.
+
+Usage: PYTHONPATH=src python -m benchmarks.compile_smoke
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+
+import jax
+import numpy as np
+
+
+def _model(n_layers: int):
+    from repro.configs.base import ModelConfig, MoECfg
+    from repro.models import Model
+
+    return Model(
+        ModelConfig(
+            name=f"smoke-{n_layers}",
+            family="moe",
+            n_layers=n_layers,
+            d_model=32,
+            n_heads=4,
+            n_kv_heads=2,
+            d_ff=64,
+            vocab_size=128,
+            moe=MoECfg(
+                n_experts=8, top_k=2, d_ff_expert=32, dispatch="scheduled"
+            ),
+            remat="none",
+        )
+    )
+
+
+def _table(n_layers: int, n_ranks: int = 4, seed: int = 0):
+    from repro.core import ScheduleTable, decompose, plan_schedule
+
+    rng = np.random.default_rng(seed)
+    scheds = []
+    for _ in range(n_layers):
+        m = rng.random((n_ranks, n_ranks)) * 500
+        np.fill_diagonal(m, 0)
+        scheds.append(plan_schedule(decompose(m, "maxweight")))
+    return ScheduleTable.from_schedules(scheds, k_max=n_ranks, clip=True)
+
+
+def _dots_and_whiles(model, table) -> tuple[int, int]:
+    import jax.numpy as jnp
+
+    tokens = jnp.zeros((2, 16), jnp.int32)
+    batch = {"tokens": tokens, "targets": tokens}
+    hlo = (
+        jax.jit(lambda p, b, s: model.loss(p, b, schedule=s))
+        .lower(model.init(jax.random.PRNGKey(0)), batch, table)
+        .compiler_ir("hlo")
+        .as_hlo_text()
+    )
+    return len(re.findall(r"= \S+ dot\(", hlo)), hlo.count(" while(")
+
+
+def main() -> int:
+    shallow = _dots_and_whiles(_model(2), _table(2))
+    deep = _dots_and_whiles(_model(8), _table(8))
+    print(f"depth-2: {shallow[0]} dots, {shallow[1]} while ops")
+    print(f"depth-8: {deep[0]} dots, {deep[1]} while ops")
+    if deep[1] < 1:
+        print("FAIL: depth-8 stack lowered without a scan while-loop")
+        return 1
+    if deep[0] != shallow[0]:
+        print(
+            "FAIL: dot count scales with depth "
+            f"({shallow[0]} -> {deep[0]}): the per-layer scheduled stack "
+            "is unrolling instead of scanning one layer body"
+        )
+        return 1
+
+    # zero-recompile swap: same executable across re-planned tables
+    model, table = _model(4), _table(4, seed=1)
+    import jax.numpy as jnp
+
+    tokens = jnp.zeros((2, 16), jnp.int32)
+    batch = {"tokens": tokens, "targets": tokens}
+    params = model.init(jax.random.PRNGKey(0))
+    f = jax.jit(lambda p, b, s: model.loss(p, b, schedule=s))
+    f(params, batch, table)
+    f(params, batch, _table(4, seed=2))
+    cache = getattr(f, "_cache_size", lambda: 1)()
+    print(f"executable cache after table swap: {cache}")
+    if cache != 1:
+        print("FAIL: a schedule-table swap recompiled the step")
+        return 1
+    print("OK: depth-L scan traces one layer body; table swaps are "
+          "compile-free")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

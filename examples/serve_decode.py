@@ -2,9 +2,24 @@
 against the KV cache; reports decode throughput.
 
     PYTHONPATH=src python examples/serve_decode.py --new-tokens 32
+
+``--controller`` mirrors ``repro.launch.serve``: a ``ScheduleRuntime``
+plans MoE circuit schedules from per-round demand estimates (``--drift``
+injects a workload shift between rounds) and folds them into a traced
+``ScheduleTable`` that feeds the prefill/decode executables.  Schedules
+are data, so the round-1 re-plan swaps into the SAME jitted functions —
+watch the "0 recompiles" line.  As in ``launch/serve.py``, only
+``scheduled`` dispatch consumes the table (``--dispatch scheduled``; on
+a single device it drives a *virtual* fabric of ``--virtual-ranks``
+ranks — scheduled capacity semantics without a mesh); other modes track
+controller decisions without touching the computation.
+
+    PYTHONPATH=src python examples/serve_decode.py --arch mixtral-8x7b \
+        --dispatch scheduled --controller --drift shift --rounds 2
 """
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -14,54 +29,161 @@ from repro.configs import smoke_config
 from repro.models import Model
 
 
+def make_controller(cfg, args):
+    """(runtime, scenario) as in repro.launch.serve: round-granularity
+    re-planning over demand estimates."""
+    if cfg.moe is None or cfg.moe.n_experts % args.virtual_ranks:
+        print("controller disabled: arch has no EP-compatible MoE")
+        return None, None
+    from repro.core import ControllerConfig, DriftScenario, ScheduleRuntime
+
+    runtime = ScheduleRuntime(
+        ControllerConfig(
+            n_ranks=args.virtual_ranks,
+            n_experts=cfg.moe.n_experts,
+            ema=0.6,
+            cooldown=1,
+            group_by="model",
+        ),
+        Model(cfg).n_moe_layers,
+    )
+    scenario = DriftScenario(
+        args.drift,
+        cfg.moe.n_experts,
+        shift_step=max(args.rounds // 2, 1),
+        window=max(args.rounds // 2, 1),
+        seed=0,
+    )
+    return runtime, scenario
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-3-8b")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--rounds", type=int, default=1, help="request batches")
+    ap.add_argument(
+        "--controller",
+        action="store_true",
+        help="plan MoE schedules per round from demand estimates",
+    )
+    ap.add_argument(
+        "--drift",
+        default="shift",
+        choices=("none", "shift", "hotspot", "skew"),
+        help="demand drift injected across rounds (with --controller)",
+    )
+    ap.add_argument(
+        "--virtual-ranks", type=int, default=8,
+        help="controller fabric size when no EP mesh is active",
+    )
+    ap.add_argument(
+        "--dispatch",
+        default=None,
+        choices=("dense", "a2a", "scheduled"),
+        help="override the arch's MoE dispatch mode",
+    )
     args = ap.parse_args()
 
     cfg = smoke_config(args.arch)  # reduced config: CPU-friendly demo
+    if args.dispatch and cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, dispatch=args.dispatch)
+        )
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     max_len = args.prompt_len + args.new_tokens
 
-    prompts = jax.random.randint(
-        jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab_size
+    runtime = scenario = None
+    if args.controller:
+        runtime, scenario = make_controller(cfg, args)
+    # only scheduled dispatch consumes the table (launch/serve.py
+    # convention) — other modes track controller decisions without
+    # altering the computation
+    consumes_schedule = (
+        cfg.moe is not None and cfg.moe.dispatch == "scheduled"
     )
-    caches = model.init_cache(args.batch, max_len)
+    if consumes_schedule and runtime is None:
+        # fail upfront, not inside a jit trace: scheduled dispatch has no
+        # plan to execute without the controller
+        raise SystemExit(
+            "scheduled dispatch needs --controller (with --virtual-ranks "
+            "dividing the arch's n_experts) to plan a schedule"
+        )
+
+    # jit once; the schedule is traced input, so controller re-plans swap
+    # new table arrays into these same executables
     prefill = jax.jit(model.prefill)
     decode = jax.jit(model.decode_step)
 
-    t0 = time.perf_counter()
-    logits, caches = prefill(params, prompts, caches)
-    logits.block_until_ready()
-    t_prefill = time.perf_counter() - t0
+    def observe_round(r: int):
+        if runtime is None:
+            return None
+        import numpy as np
 
-    token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    out = [token]
-    # warm up decode compile before timing
-    _, _ = decode(params, token, caches, jnp.int32(args.prompt_len))
-    t0 = time.perf_counter()
-    for i in range(args.new_tokens):
-        logits, caches = decode(
-            params, token, caches, jnp.int32(args.prompt_len + i)
+        tokens = float(args.batch * args.prompt_len * cfg.moe.top_k)
+        stats = np.broadcast_to(
+            tokens * scenario.expert_probs(r)[None, None, :],
+            (runtime.n_layers, 1, cfg.moe.n_experts),
         )
-        token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        out.append(token)
-    jax.block_until_ready(token)
-    t_decode = time.perf_counter() - t0
+        decision = runtime.observe(stats)
+        if decision.changed:
+            print(f"round {r}: controller swap "
+                  f"({'re-plan' if decision.replanned else 'library hit'})")
+        return runtime.table() if consumes_schedule else None
 
-    toks = args.new_tokens * args.batch
-    print(f"arch={cfg.name} batch={args.batch} prompt={args.prompt_len}")
-    print(f"prefill: {t_prefill*1e3:.1f} ms")
-    print(
-        f"decode:  {toks} tokens in {t_decode*1e3:.1f} ms "
-        f"({toks/t_decode:.1f} tok/s)"
-    )
-    sample = jnp.stack(out, axis=1)[0, :10].tolist()
-    print(f"first generated ids: {sample}")
+    for r in range(max(args.rounds, 1)):
+        schedule = observe_round(r)
+        prompts = jax.random.randint(
+            jax.random.PRNGKey(1 + r), (args.batch, args.prompt_len), 0,
+            cfg.vocab_size,
+        )
+        caches = model.init_cache(args.batch, max_len)
+
+        t0 = time.perf_counter()
+        logits, caches = prefill(params, prompts, caches, schedule=schedule)
+        logits.block_until_ready()
+        t_prefill = time.perf_counter() - t0
+
+        token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out = [token]
+        # warm up decode compile before timing
+        _, _ = decode(
+            params, token, caches, jnp.int32(args.prompt_len),
+            schedule=schedule,
+        )
+        t0 = time.perf_counter()
+        for i in range(args.new_tokens):
+            logits, caches = decode(
+                params, token, caches, jnp.int32(args.prompt_len + i),
+                schedule=schedule,
+            )
+            token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            out.append(token)
+        jax.block_until_ready(token)
+        t_decode = time.perf_counter() - t0
+
+        toks = args.new_tokens * args.batch
+        print(f"arch={cfg.name} batch={args.batch} prompt={args.prompt_len}")
+        print(f"prefill: {t_prefill*1e3:.1f} ms")
+        print(
+            f"decode:  {toks} tokens in {t_decode*1e3:.1f} ms "
+            f"({toks/t_decode:.1f} tok/s)"
+        )
+        sample = jnp.stack(out, axis=1)[0, :10].tolist()
+        print(f"first generated ids: {sample}")
+
+    if runtime is not None:
+        s = runtime.summary()
+        recompiles = max(0, getattr(prefill, "_cache_size", lambda: 1)() - 1)
+        recompiles += max(0, getattr(decode, "_cache_size", lambda: 1)() - 1)
+        print(
+            f"controller: {s['replan_events']} re-plan events "
+            f"({s['warm_hits']} warm / {s['cold_plans']} cold plans), "
+            f"{recompiles} recompiles across swaps"
+        )
 
 
 if __name__ == "__main__":

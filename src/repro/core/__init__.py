@@ -38,7 +38,13 @@ from repro.core.runtime import (
     ScheduleRuntime,
     routing_to_traffic,
 )
-from repro.core.schedule import A2ASchedule, order_phases, plan_schedule, ring_schedule
+from repro.core.schedule import (
+    A2ASchedule,
+    ScheduleTable,
+    order_phases,
+    plan_schedule,
+    ring_schedule,
+)
 from repro.core.selector import Proposal, ScheduleEntry, ScheduleSelector
 from repro.core.simulator import (
     SimResult,
@@ -66,6 +72,7 @@ __all__ = [
     "ScheduleEntry",
     "ScheduleRuntime",
     "ScheduleSelector",
+    "ScheduleTable",
     "SimResult",
     "StackedPhases",
     "WORKLOADS",

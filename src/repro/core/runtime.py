@@ -18,16 +18,17 @@ and tells the training loop *when to swap* the compiled step function:
   with per-layer ``WarmState`` replay: at steady state (support
   unchanged) the re-plan is LAP-free, so a drift event costs milliseconds
   of host work, not a cold solve per layer.
-* **swap** — the returned ``Decision`` carries a compile-cache key (the
-  per-group current entries); the training loop swaps / rebuilds the
-  jitted step function only when the key changes, and a *compile* only
-  happens on a library miss (library hits reuse cached executables).
+* **swap** — the runtime folds the per-layer plans into a fixed-shape
+  ``ScheduleTable`` (``table()``): traced input to the jitted step, so a
+  swap is just passing the new arrays — **zero recompiles by
+  construction** (the per-assignment compile cache is gone).  The
+  ``Decision`` still carries a key (per-group current entry names) so
+  callers can log/count swaps.
 
 Grouping: ``group_by="layer"`` (default) plans one schedule per MoE
-layer (requires the model's unrolled per-layer schedule path);
-``group_by="model"`` shares one schedule across all MoE layers (the
-scan-friendly layout) while still tracking per-layer traffic and warm
-states.
+layer — per-layer tables ride the stack's ``lax.scan``, train, prefill,
+and decode alike; ``group_by="model"`` shares one schedule across all
+MoE layers while still tracking per-layer traffic and warm states.
 """
 
 from __future__ import annotations
@@ -39,7 +40,7 @@ import numpy as np
 
 from repro.core.decompose import decompose_batch
 from repro.core.maxweight import WarmState, warm_state_of
-from repro.core.schedule import plan_schedule
+from repro.core.schedule import ScheduleTable, plan_schedule
 from repro.core.selector import (
     DEFAULT_PLAN_KWARGS,
     Proposal,
@@ -69,12 +70,17 @@ class ControllerConfig:
         (see ``ScheduleSelector``).
       cooldown: observations after a re-plan during which further misses
         are suppressed (the EMA needs a few steps to settle after a
-        regime change; each miss costs a recompile).
-      group_by: "layer" (one schedule per MoE layer) or "model" (one
-        shared schedule; scan-friendly).
+        regime change; each miss costs a fresh plan).
+      group_by: "layer" (one schedule per MoE layer; per-layer table rows
+        ride the stack's scan) or "model" (one shared schedule).
       min_fill: decomposition min_fill (defer near-empty pairs).
       plan_kwargs: forwarded to ``plan_schedule`` (slack/quantum/min_cap).
       max_library: LRU bound per group library.
+      k_max: phase-slot budget of the emitted ``ScheduleTable`` (its
+        static K dim).  Table shapes must never change — a shape change
+        is a recompile — so plans with more phases are clipped to their
+        heaviest ``k_max`` (counted in ``phase_clips``).  Default:
+        ``n_ranks`` (a full 1-factorization's worth of slots).
     """
 
     n_ranks: int
@@ -88,6 +94,7 @@ class ControllerConfig:
     min_fill: float = 0.1
     plan_kwargs: dict | None = None
     max_library: int = 16
+    k_max: int | None = None
 
     def __post_init__(self):
         if self.n_experts % self.n_ranks:
@@ -103,10 +110,11 @@ class Decision:
     """One ``observe`` outcome for the training loop.
 
     ``changed`` — the per-group schedule assignment moved; the caller
-    must swap to the step function keyed by ``key`` (compiling it only
-    if the key is new, i.e. a library miss happened somewhere).
-    ``replanned`` — this observation triggered the (single) batched
-    re-plan.  ``actions`` — per-group "keep"/"switch"/"miss".
+    should fetch the refreshed ``table()`` and pass it to its (unchanged)
+    jitted step — the swap is new arrays, never a new executable.
+    ``key`` identifies the assignment (per-group current entry names) for
+    logging.  ``replanned`` — this observation triggered the (single)
+    batched re-plan.  ``actions`` — per-group "keep"/"switch"/"miss".
     """
 
     changed: bool
@@ -178,12 +186,19 @@ class ScheduleRuntime:
         self._warm: list[WarmState | None] = [None] * n_moe_layers
         self._group_warm: list[WarmState | None] = [None] * len(self.groups)
         self._key: tuple = ()
+        # array-native schedule cache: rebuilt (same shapes) on assignment
+        # change, swapped into the jitted step without recompiling
+        self._k_max = cfg.k_max or cfg.n_ranks
+        self._table: ScheduleTable | None = None
+        self._table_key: tuple | None = None
+        self._clipped_entries: set[str] = set()
         # counters / telemetry
         self.steps = 0
         self.replan_events = 0
         self.decompose_calls = 0
         self.warm_hits = 0
         self.cold_plans = 0
+        self.phase_clips = 0  # plans that exceeded the k_max slot budget
         self.observe_s = 0.0  # cumulative host time inside observe()
         self.replan_s = 0.0  # cumulative host time inside re-plan events
         self.last_event: dict | None = None
@@ -203,18 +218,47 @@ class ScheduleRuntime:
 
     @property
     def schedule_key(self) -> tuple:
-        """Compile-cache key: each group's current entry, by process-
-        unique uid (never reused, unlike id() after GC; -1 = unplanned)."""
+        """Assignment identity: each group's current entry name (entry
+        names are unique per runtime — ``plan{event}.g{group}``).  Purely
+        for change detection and logs; nothing compiles against it."""
         return tuple(
-            sel.current.uid if sel.current is not None else -1
+            sel.current.name if sel.current is not None else ""
             for sel in self.selectors
         )
 
-    def live_entry_ids(self) -> set:
-        """uids of every entry still in a library — compile caches keyed
-        on ``schedule_key`` can drop keys referencing anything else (the
-        LRU eviction's whole point is bounding live executables)."""
-        return {e.uid for sel in self.selectors for e in sel.library}
+    def table(self) -> ScheduleTable:
+        """The current per-layer plans as one fixed-shape ``ScheduleTable``
+        ([L, k_max, n] leaves) — the traced step input.
+
+        Cached per assignment; every rebuild has identical leaf shapes
+        (phase dim pinned at ``cfg.k_max``), so the training loop passes
+        each new table into the SAME executable: drift re-plans are
+        compile-free by construction.  Plans wider than the slot budget
+        are clipped to their heaviest ``k_max`` phases (``phase_clips``).
+        """
+        scheds = self.schedules
+        if scheds is None:
+            raise ValueError(
+                "no schedules yet: prime the runtime or feed it a step's "
+                "routing counts first"
+            )
+        key = self.schedule_key
+        if self._table is None or self._table_key != key:
+            # count each clipped PLAN once (entries repeat across layers
+            # under group_by="model" and across rebuilds on swaps)
+            for name, sel in zip(key, self.selectors):
+                if (
+                    name not in self._clipped_entries
+                    and sel.current is not None
+                    and sel.current.schedule.num_phases > self._k_max
+                ):
+                    self._clipped_entries.add(name)
+                    self.phase_clips += 1
+            self._table = ScheduleTable.from_schedules(
+                scheds, k_max=self._k_max, clip=True
+            )
+            self._table_key = key
+        return self._table
 
     def _group_traffic(self, gi: int) -> np.ndarray:
         # Mean (not sum) over the group's layers: the schedule executes
@@ -364,6 +408,7 @@ class ScheduleRuntime:
             "warm_hits": self.warm_hits,
             "cold_plans": self.cold_plans,
             "switches": sum(s.switches for s in self.selectors),
+            "phase_clips": self.phase_clips,
             "library_sizes": [len(s.library) for s in self.selectors],
             "observe_us_per_step": (
                 round(self.observe_s / self.steps * 1e6, 2) if self.steps else 0.0

@@ -18,6 +18,8 @@ from __future__ import annotations
 
 import dataclasses
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.types import Decomposition
@@ -25,6 +27,7 @@ from repro.core.types import Decomposition
 __all__ = [
     "order_phases",
     "A2ASchedule",
+    "ScheduleTable",
     "phase_offsets",
     "plan_schedule",
     "plan_schedule_bvn",
@@ -187,6 +190,184 @@ class A2ASchedule:
                         f"{got[i]} != cumulative {expect[i]}"
                     )
                 cursor[src[sel], dst] += int(self.caps[k])
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class ScheduleTable:
+    """Array-native schedule stack: the traced twin of ``A2ASchedule``.
+
+    Where ``A2ASchedule`` is a *static* host-side plan (numpy arrays baked
+    into the executable at trace time), a ``ScheduleTable`` is a fixed-shape
+    pytree of device arrays that is **traced input** to the jitted step:
+
+      perms:    [L, K_max, n] int32 — perms[l, k, i] = destination of rank
+                i in phase k of MoE layer l (identity rows pad unused
+                phases).
+      caps:     [L, K_max]    int32 — per-pair token capacity per phase
+                (0 pads unused phases).
+      valid:    [L, K_max, n] bool  — pair (i, perms[l, k, i]) carries
+                planned traffic (False pads).
+      offsets:  [L, K_max, n] int32 — multi-phase-pair slot offsets (BvN);
+                zeros for single-phase-pair schedules.
+      n_phases: [L]           int32 — active phase count per layer (the
+                phase-count mask: entries at k >= n_phases[l] are padding).
+
+    Because every leaf has a static shape (padded to ``K_max``), the table
+    can (a) ride ``lax.scan`` over the layer stack — per-layer plans no
+    longer force the stack to unroll, (b) be swapped for a re-planned
+    table without recompiling — same shapes, same executable, and (c) be
+    sliced per layer *inside* a trace (``row(l)`` works with a traced
+    ``l``).  A sliced row keeps this class (leaves lose the leading L dim).
+    """
+
+    perms: jax.Array
+    caps: jax.Array
+    valid: jax.Array
+    offsets: jax.Array
+    n_phases: jax.Array
+
+    # ------------------------------------------------------------- pytree
+    def tree_flatten(self):
+        return (
+            (self.perms, self.caps, self.valid, self.offsets, self.n_phases),
+            None,
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+    # ------------------------------------------------------------- shapes
+    @property
+    def is_row(self) -> bool:
+        """True for a per-layer slice (no leading L dim)."""
+        return self.perms.ndim == 2
+
+    @property
+    def num_layers(self) -> int:
+        if self.is_row:
+            raise ValueError("row slice has no layer dim")
+        return int(self.perms.shape[0])
+
+    @property
+    def k_max(self) -> int:
+        return int(self.perms.shape[-2])
+
+    @property
+    def n(self) -> int:
+        return int(self.perms.shape[-1])
+
+    # ------------------------------------------------------- construction
+    @classmethod
+    def from_schedules(
+        cls,
+        schedules,
+        *,
+        k_max: int | None = None,
+        clip: bool = False,
+    ) -> "ScheduleTable":
+        """Stack per-layer ``A2ASchedule`` plans into one padded table.
+
+        ``k_max`` fixes the phase-slot budget (defaults to the largest
+        plan).  A plan with more phases than ``k_max`` raises unless
+        ``clip`` — then its lightest trailing phases are dropped
+        (max-weight orders phases by descending weight, so clipping sheds
+        the least traffic; the dropped demand shows up as planned drops).
+        """
+        schedules = list(schedules)
+        if not schedules:
+            raise ValueError("from_schedules needs at least one schedule")
+        n = schedules[0].n
+        need = max(s.num_phases for s in schedules)
+        if k_max is None:
+            k_max = need
+        elif need > k_max and not clip:
+            raise ValueError(
+                f"schedule needs {need} phases but the table holds {k_max}; "
+                "pass clip=True to shed trailing phases or grow k_max "
+                "(a k_max change is a recompile)"
+            )
+        L = len(schedules)
+        perms = np.broadcast_to(
+            np.arange(n, dtype=np.int32), (L, k_max, n)
+        ).copy()
+        caps = np.zeros((L, k_max), dtype=np.int32)
+        valid = np.zeros((L, k_max, n), dtype=bool)
+        offsets = np.zeros((L, k_max, n), dtype=np.int32)
+        n_phases = np.zeros((L,), dtype=np.int32)
+        for l, s in enumerate(schedules):
+            if s.n != n:
+                raise ValueError(f"layer {l}: fabric {s.n} != {n}")
+            k = min(s.num_phases, k_max)
+            perms[l, :k] = np.asarray(s.perms[:k], dtype=np.int32)
+            caps[l, :k] = np.asarray(s.caps[:k], dtype=np.int32)
+            valid[l, :k] = np.asarray(s.valid[:k], dtype=bool)
+            if s.offsets is not None:
+                offsets[l, :k] = np.asarray(s.offsets[:k], dtype=np.int32)
+            n_phases[l] = k
+        return cls(
+            perms=jnp.asarray(perms),
+            caps=jnp.asarray(caps),
+            valid=jnp.asarray(valid),
+            offsets=jnp.asarray(offsets),
+            n_phases=jnp.asarray(n_phases),
+        )
+
+    def update(self, schedules, *, clip: bool = True) -> "ScheduleTable":
+        """Re-planned table with *identical* leaf shapes — the swap path.
+
+        Same (L, K_max, n) by construction, so passing the result to a
+        jitted step reuses the existing executable (zero recompiles)."""
+        schedules = list(schedules)
+        if self.is_row:
+            raise ValueError("update() needs the full table, not a row")
+        if len(schedules) != self.num_layers:
+            raise ValueError(
+                f"got {len(schedules)} schedules for {self.num_layers} layers"
+            )
+        return ScheduleTable.from_schedules(
+            schedules, k_max=self.k_max, clip=clip
+        )
+
+    # -------------------------------------------------------------- views
+    def row(self, l) -> "ScheduleTable":
+        """Layer slice (works with a traced ``l`` — a dynamic gather)."""
+        if self.is_row:
+            raise ValueError("already a row")
+        return ScheduleTable(
+            perms=self.perms[l],
+            caps=self.caps[l],
+            valid=self.valid[l],
+            offsets=self.offsets[l],
+            n_phases=self.n_phases[l],
+        )
+
+    def pair_caps(self, e_local: int = 1, *, quantum: int = 8) -> jax.Array:
+        """Traced per-(src, dst) admitted capacity of a row, in per-expert
+        slot units: ``sum_k valid[k, i] * round8(ceil(caps[k] / e_local))``
+        scattered at ``(i, perms[k, i])``.  [n, n] int32.
+
+        This is the traced twin of ``A2ASchedule.cap_matrix`` with the EP
+        runtime's per-expert rescale folded in — the admission mask that
+        enforces the planned schedule's capacity semantics on the traced
+        execution path."""
+        if not self.is_row:
+            raise ValueError("pair_caps operates on a row slice")
+        k_max, n = self.perms.shape
+        per_expert = -(-self.caps // e_local)  # ceil
+        per_expert = jnp.maximum(
+            quantum, -(-per_expert // quantum) * quantum
+        ).astype(jnp.int32)
+        on = (jnp.arange(k_max) < self.n_phases)[:, None] & self.valid
+        upd = jnp.where(on, per_expert[:, None], 0)
+        src = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None, :], (k_max, n))
+        return (
+            jnp.zeros((n, n), jnp.int32)
+            .at[src.ravel(), self.perms.ravel()]
+            .add(upd.ravel())
+        )
 
 
 def _round_up(x, quantum: int):

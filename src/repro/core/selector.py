@@ -1,17 +1,19 @@
 """Online schedule selection under routing drift — the OCS-controller
 loop (paper §5: "decomposition-aware circuit scheduling" future work).
 
-JAX compiles static programs, so per-iteration re-decomposition (the
-paper's dynamic setting) maps to **selecting among precompiled
-schedules**: the controller maintains a small library of schedules planned
-for representative traffic regimes, observes the realized routing counts
-of recent steps (host-side, off the critical path), and switches the
-executable when the live traffic matches a different regime better.
+The controller maintains a small library of schedules planned for
+representative traffic regimes, observes the realized routing counts of
+recent steps (host-side, off the critical path), and switches schedules
+when the live traffic matches a different regime better.  Since PR 3 a
+schedule is *traced data* (``core.schedule.ScheduleTable``): the chosen
+entry's plan is folded into the table passed to the jitted step, so both
+switches and fresh plans are executable-neutral — the library bounds
+host-side planning state, and a miss costs one (warm-started) re-plan,
+never a recompile.
 
 This mirrors real OCS controllers (plan circuits from demand estimates,
-re-plan on drift) and costs one recompile only when the library misses —
-``ScheduleSelector.observe`` returns the chosen entry; the training loop
-swaps the jitted step function accordingly.
+re-plan on drift); ``ScheduleSelector.observe`` returns the chosen entry
+and the runtime rebuilds the table accordingly.
 
 ``observe`` runs every step, so its scoring is fully vectorized: each
 entry precomputes its ``[n, n]`` capacity matrix at plan time (planned
@@ -25,7 +27,6 @@ steady-state re-plan never solves an assignment problem.
 from __future__ import annotations
 
 import dataclasses
-import itertools
 
 import numpy as np
 
@@ -44,8 +45,6 @@ __all__ = [
 # runtime's batched re-plan (core/runtime) — keep them planning identically
 DEFAULT_PLAN_KWARGS = {"slack": 1.1, "quantum": 8, "min_cap": 8}
 
-_entry_uids = itertools.count()
-
 
 @dataclasses.dataclass
 class ScheduleEntry:
@@ -53,9 +52,6 @@ class ScheduleEntry:
     reference: np.ndarray  # traffic matrix the schedule was planned for
     schedule: A2ASchedule
     caps: np.ndarray | None = None  # [n, n] per-pair capacity (lazy)
-    # process-unique id: compile-cache keys must survive entry eviction
-    # (id() values can be reused by the allocator after GC)
-    uid: int = dataclasses.field(default_factory=_entry_uids.__next__)
 
     def __post_init__(self):
         if self.caps is None:
@@ -107,8 +103,8 @@ class Proposal:
     ``action`` is one of:
       * ``"keep"``   — the current entry still serves within tolerance
         (or nothing better is admissible under hysteresis/cooldown),
-      * ``"switch"`` — a library entry serves better; adopt it (compiled
-        executable already exists — a cheap swap),
+      * ``"switch"`` — a library entry serves better; adopt it (a table
+        rebuild from the stored plan — no planning work),
       * ``"miss"``   — no library entry serves within tolerance; the
         caller must plan a new schedule (``register`` it afterwards).
     ``entry`` is the entry to use for keep/switch (None on a miss with an
@@ -131,15 +127,16 @@ class ScheduleSelector:
       hysteresis: relative drop improvement a library entry must offer
         before the selector switches away from the current entry
         (0 = legacy behavior: any strictly better entry wins).  Damps
-        executable flapping between near-equivalent schedules.
+        schedule flapping between near-equivalent plans.
       cooldown: observations after a re-plan during which ``propose``
-        never returns a miss (it degrades to switch/keep) — re-plan storms
-        while the EMA settles after a drift event cost a recompile each.
-        0 = legacy behavior.
-      max_library: LRU bound on the schedule library (compiled executables
-        are expensive to keep alive; evicts the least-recently-used entry).
-        Floored at 2 — the current entry is never evicted, so a bound of 1
-        could not admit any replacement.
+        never returns a miss (it degrades to switch/keep) — re-plan
+        storms while the EMA settles after a drift event would otherwise
+        each pay a fresh plan.  0 = legacy behavior.
+      max_library: LRU bound on the schedule library (host memory: each
+        entry holds its reference traffic and [n, n] cap matrix; evicts
+        the least-recently-used entry).  Floored at 2 — the current entry
+        is never evicted, so a bound of 1 could not admit any
+        replacement.
     """
 
     def __init__(
@@ -299,7 +296,7 @@ class ScheduleSelector:
         """Feed one step's realized routing counts.
 
         Returns (entry to use next, changed?) — ``changed`` means the
-        caller must swap to that entry's compiled executable."""
+        caller must rebuild its schedule table from the new entry."""
         p = self.propose(traffic)
         entry = (
             self._plan(self.smoothed, f"plan{self.replans}")

@@ -42,6 +42,94 @@ def _kernel(x_ref, wg_ref, wu_ref, wd_ref, out_ref, acc_ref, *, n_fblocks):
         out_ref[0] = acc_ref[...].astype(out_ref.dtype)
 
 
+def _grouped_kernel(
+    meta_ref, x_ref, wg_ref, wu_ref, wd_ref, out_ref, acc_ref, *,
+    n_fblocks, n_cblocks,
+):
+    """Grouped-launch body: one kernel serves every expert group of the
+    whole (scheduled or dense) MoE buffer.  ``meta_ref`` is the group
+    metadata prologue — a scalar-prefetched [E * C/BC] table of per-row-
+    block occupancy counts (how many rows of the block hold real routed
+    tokens, derived from the schedule table's admitted slots).  Blocks
+    with zero occupancy skip all three MXU passes and emit zeros: padded
+    capacity stops costing compute, which is exactly the small-batch
+    fragmentation the per-phase launches suffered from."""
+    eb = pl.program_id(0)
+    cb = pl.program_id(1)
+    fb = pl.program_id(2)
+    occupied = meta_ref[eb * n_cblocks + cb] > 0
+
+    @pl.when(fb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(occupied)
+    def _compute():
+        x = x_ref[0]  # [BC, d]
+        g = jnp.dot(x, wg_ref[0], preferred_element_type=jnp.float32)
+        u = jnp.dot(x, wu_ref[0], preferred_element_type=jnp.float32)
+        h = (jax.nn.silu(g) * u).astype(x.dtype)
+        acc_ref[...] += jnp.dot(
+            h, wd_ref[0], preferred_element_type=jnp.float32
+        )
+
+    @pl.when(fb == n_fblocks - 1)
+    def _flush():
+        out_ref[0] = acc_ref[...].astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_c", "block_f", "interpret")
+)
+def moe_gemm_grouped_pallas(
+    x,
+    block_meta,
+    w_gate,
+    w_up,
+    w_down,
+    *,
+    block_c: int = 128,
+    block_f: int = 128,
+    interpret: bool = True,
+):
+    """One grouped launch over [E, C, d] with per-row-block skip metadata.
+
+    ``block_meta``: [E * (C // block_c)] int32 — occupancy count of each
+    (expert, row-block); 0 means the block holds no admitted tokens and
+    its compute is skipped (output rows are zeros).  Rows of partially
+    occupied blocks are all computed; callers weight outputs by the
+    combine gates, which are zero for non-admitted slots, so skipped or
+    computed garbage rows never reach the residual stream.
+    """
+    e, c, d = x.shape
+    f = w_gate.shape[-1]
+    bc = min(block_c, c)
+    bf = min(block_f, f)
+    assert c % bc == 0 and f % bf == 0, (c, bc, f, bf)
+    n_fblocks = f // bf
+    n_cblocks = c // bc
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(e, n_cblocks, n_fblocks),
+        in_specs=[
+            pl.BlockSpec((1, bc, d), lambda e, i, k, m: (e, i, 0)),
+            pl.BlockSpec((1, d, bf), lambda e, i, k, m: (e, 0, k)),
+            pl.BlockSpec((1, d, bf), lambda e, i, k, m: (e, 0, k)),
+            pl.BlockSpec((1, bf, d), lambda e, i, k, m: (e, k, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, d), lambda e, i, k, m: (e, i, 0)),
+        scratch_shapes=[pltpu.VMEM((bc, d), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _grouped_kernel, n_fblocks=n_fblocks, n_cblocks=n_cblocks
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((e, c, d), x.dtype),
+        interpret=interpret,
+    )(block_meta, x, w_gate, w_up, w_down)
+
+
 @functools.partial(
     jax.jit, static_argnames=("block_c", "block_f", "interpret")
 )

@@ -16,7 +16,12 @@ import functools
 
 import jax
 
-from repro.kernels.moe_gemm.kernel import moe_gemm_pallas
+import jax.numpy as jnp
+
+from repro.kernels.moe_gemm.kernel import (
+    moe_gemm_grouped_pallas,
+    moe_gemm_pallas,
+)
 from repro.kernels.moe_gemm.ref import moe_gemm_ref
 
 # Measured-good block shapes per (C, d, f) — the MoE launcher's common
@@ -110,13 +115,52 @@ def _differentiable_kernel(block_c: int, block_f: int, interpret: bool):
     return fn
 
 
-def moe_gemm(x, w_gate, w_up, w_down, *, block_c=None, block_f=None, interpret=None):
+@functools.lru_cache(maxsize=None)
+def _differentiable_grouped_kernel(block_c: int, block_f: int, interpret: bool):
+    """Grouped-launch forward (block-skip metadata prologue) + einsum-
+    oracle backward.  ``meta`` rides as a float32 array so the custom_vjp
+    can hand back an ordinary zero cotangent (occupancy counts carry no
+    gradient); the kernel consumes it as int32 scalar-prefetch."""
+
+    @jax.custom_vjp
+    def fn(meta, x, w_gate, w_up, w_down):
+        return moe_gemm_grouped_pallas(
+            x, meta.astype(jnp.int32), w_gate, w_up, w_down,
+            block_c=block_c, block_f=block_f, interpret=interpret,
+        )
+
+    def fwd(meta, x, w_gate, w_up, w_down):
+        return fn(meta, x, w_gate, w_up, w_down), (meta, x, w_gate, w_up, w_down)
+
+    def bwd(residuals, g):
+        meta, *primals = residuals
+        _, vjp = jax.vjp(moe_gemm_ref, *primals)
+        return (jnp.zeros_like(meta), *vjp(g))
+
+    fn.defvjp(fwd, bwd)
+    return fn
+
+
+def moe_gemm(
+    x, w_gate, w_up, w_down, *,
+    block_c=None, block_f=None, interpret=None, row_valid=None,
+):
     """Grouped expert SwiGLU: x [E, C, d] -> [E, C, d].
 
     ``block_c``/``block_f`` override the autotune table; ``interpret``
     defaults to True off-TPU.  Falls back to the einsum oracle when the
     shape cannot be tiled.  Differentiable: forward runs the kernel,
     backward goes through the einsum oracle's VJP.
+
+    ``row_valid`` ([E, C] bool) is the grouped-launch metadata: True rows
+    hold real admitted tokens.  It is reduced to per-row-block occupancy
+    counts (the kernel's scalar-prefetched group-metadata prologue) so
+    fully padded blocks skip their MXU passes.  The hint changes *which*
+    rows are computed, never the value of valid rows — invalid rows are
+    either zeros (skipped block) or garbage-that-gets-gated (partially
+    occupied block), and every caller weights combine output by gates
+    that are zero exactly on invalid slots.  The einsum fallback ignores
+    the hint (it computes everything).
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -132,6 +176,17 @@ def moe_gemm(x, w_gate, w_up, w_down, *, block_c=None, block_f=None, interpret=N
         block_f = block_f or picked[1]
     if c % min(block_c, c) or f % min(block_f, f):
         return moe_gemm_ref(x, w_gate, w_up, w_down)
+    bc = int(min(block_c, c))
+    if row_valid is not None:
+        meta = (
+            row_valid.reshape(e, c // bc, bc)
+            .sum(axis=-1)
+            .astype(jnp.float32)
+            .ravel()
+        )
+        return _differentiable_grouped_kernel(
+            int(block_c), int(block_f), bool(interpret)
+        )(meta, x, w_gate, w_up, w_down)
     return _differentiable_kernel(int(block_c), int(block_f), bool(interpret))(
         x, w_gate, w_up, w_down
     )

@@ -12,10 +12,10 @@ bucketing scheduler is host-side and orthogonal to the compiled steps.
 ``--controller`` closes the scheduler loop at serving granularity for
 MoE archs: a ``ScheduleRuntime`` observes per-round routing demand (the
 front-end's estimate, here synthesized with an injectable ``--drift``
-scenario), and re-plans between request rounds — schedule swaps land on
-round boundaries, where re-jitting the prefill/decode executables is
-safe.  Only ``scheduled`` dispatch bakes the schedule into the
-executables; other modes track decisions without re-jitting.
+scenario) and re-plans between request rounds.  Schedules are traced
+``ScheduleTable`` input to the prefill/decode executables, so a swap is
+just new table arrays into the SAME jits — prefill and decode pick up
+re-planned (even per-layer) schedules with zero recompiles.
 """
 
 from __future__ import annotations
@@ -54,7 +54,9 @@ def _make_controller(cfg, args, n_ranks: int):
             n_experts=cfg.moe.n_experts,
             ema=0.6,  # round-level demand estimates: react fast
             cooldown=1,
-            group_by="model",  # one shared schedule: prefill/decode scan
+            # per-layer plans ride the prefill/decode scans as table rows;
+            # round-level demand estimates are global, so share one plan
+            group_by="model",
         ),
         model.n_moe_layers,
     )
@@ -114,28 +116,28 @@ def main(argv=None) -> None:
         cfg.moe is not None and cfg.moe.dispatch == "scheduled"
     )
 
-    def serve_round(params, prompts, prefill, decode):
+    def serve_round(params, prompts, prefill, decode, schedule):
         caches = model.init_cache(args.batch, max_len, policy["cache_dtype"])
         t0 = time.perf_counter()
-        logits, caches = prefill(params, prompts, caches)
+        logits, caches = prefill(params, prompts, caches, schedule=schedule)
         jax.block_until_ready(logits)
         t_pre = time.perf_counter() - t0
         token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         t0 = time.perf_counter()
         for i in range(args.new_tokens):
             logits, caches = decode(
-                params, token, caches, jnp.int32(args.prompt_len + i)
+                params, token, caches, jnp.int32(args.prompt_len + i),
+                schedule=schedule,
             )
             token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         jax.block_until_ready(token)
         return t_pre, time.perf_counter() - t0
 
     def observe_round(r: int):
-        """Feed round r's demand estimate; returns True when the serving
-        executables must be rebuilt (schedule swap on a round boundary)."""
-        nonlocal model
+        """Feed round r's demand estimate; returns the (possibly
+        re-planned) schedule table — new arrays, never new executables."""
         if runtime is None:
-            return False
+            return None
         tokens = float(args.batch * args.prompt_len * cfg.moe.top_k)
         stats = np.broadcast_to(
             tokens * scenario.expert_probs(r)[None, None, :],
@@ -143,28 +145,27 @@ def main(argv=None) -> None:
         )
         decision = runtime.observe(stats)
         if decision.changed:
-            model = model.with_schedule(runtime.schedules)
             log.info(
                 "round %d: controller swap (%s)",
                 r,
                 "library miss" if decision.replanned else "library hit",
             )
-        return decision.changed and consumes_schedule
+        return runtime.table() if consumes_schedule else None
 
     def run():
-        nonlocal model
         params = model.init(jax.random.PRNGKey(0))
-        observe_round(0)  # plan before the first jit (round-0 schedule)
+        # jit ONCE: the schedule is a traced argument, so between-round
+        # re-planning swaps tables into these same two executables
         prefill = jax.jit(model.prefill, donate_argnums=(2,))
         decode = jax.jit(model.decode_step, donate_argnums=(2,))
+        schedule = observe_round(0)  # plan the round-0 schedule
         for r in range(args.rounds):
-            if r > 0 and observe_round(r):
-                prefill = jax.jit(model.prefill, donate_argnums=(2,))
-                decode = jax.jit(model.decode_step, donate_argnums=(2,))
+            if r > 0:
+                schedule = observe_round(r)
             prompts = jax.random.randint(
                 jax.random.PRNGKey(r), (args.batch, args.prompt_len), 0, cfg.vocab_size
             )
-            t_pre, t_dec = serve_round(params, prompts, prefill, decode)
+            t_pre, t_dec = serve_round(params, prompts, prefill, decode, schedule)
             toks = args.new_tokens * args.batch
             log.info(
                 "round %d: prefill %.1f ms (%.0f tok/s) | decode %.1f ms "
@@ -179,10 +180,12 @@ def main(argv=None) -> None:
             s = runtime.summary()
             log.info(
                 "controller: %d re-plan events, %d warm / %d cold plans, "
-                "observe %.0fus/round",
+                "%d recompiles, observe %.0fus/round",
                 s["replan_events"],
                 s["warm_hits"],
                 s["cold_plans"],
+                max(0, getattr(prefill, "_cache_size", lambda: 1)() - 1)
+                + max(0, getattr(decode, "_cache_size", lambda: 1)() - 1),
                 s["observe_us_per_step"],
             )
 

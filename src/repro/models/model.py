@@ -1,6 +1,8 @@
 """Model facade: embeddings -> stack -> norm -> logits, plus loss and
 serving entry points.  Pure-functional; ``Model`` only carries the config
-and the (static) A2A schedule for scheduled MoE dispatch.
+and a default MoE schedule (static ``A2ASchedule`` or traced
+``ScheduleTable``) — callers pass ``schedule=`` per call for
+recompile-free swaps.
 
 Inputs are dicts so modality frontends stay stubs (DESIGN.md §4):
   tokens      [B, S_tok] int32
@@ -14,7 +16,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.schedule import A2ASchedule
 from repro.models import stack
 from repro.models.layers import (
     cast,
@@ -31,27 +32,35 @@ from repro.parallel import shard
 
 
 class Model:
-    """``schedule`` is either one ``A2ASchedule`` shared by every MoE
-    layer, or a sequence with one schedule per MoE layer (layer order) —
-    the controller runtime's per-layer re-planning.  A sequence whose
-    entries are all the same object collapses to the shared form (keeps
-    the scan-friendly stack and the serving paths, which do not support
-    distinct per-layer schedules)."""
+    """``schedule`` (constructor default, overridable per call) is one
+    static ``A2ASchedule`` shared by every MoE layer, or a traced
+    ``ScheduleTable`` with one row per MoE layer — per-layer plans ride
+    the stack's ``lax.scan`` on the train, prefill, and decode paths.
+
+    Prefer passing the table as the *call-site* ``schedule=`` argument of
+    ``loss``/``forward``/``prefill``/``decode_step``: under ``jax.jit``
+    it is then ordinary traced input, so a re-planned table swaps into
+    the same executable with zero recompiles (a constructor-held table
+    is baked in as a constant — correctness is identical, but every swap
+    costs a retrace)."""
 
     def __init__(self, cfg: ModelConfig, schedule=None):
         self.cfg = cfg
-        if (
-            isinstance(schedule, (list, tuple))
-            and schedule
-            and all(s is schedule[0] for s in schedule)
-        ):
-            schedule = schedule[0]
+        if isinstance(schedule, (list, tuple)):
+            raise TypeError(
+                "per-layer schedules are a traced ScheduleTable now "
+                "(core.ScheduleTable.from_schedules)"
+            )
         self.schedule = schedule
 
     def with_schedule(self, schedule) -> "Model":
-        """A new facade over the same config with a different schedule
-        (the runtime's swap path — params are untouched)."""
+        """A new facade over the same config with a different default
+        schedule (params are untouched).  For recompile-free swaps pass
+        the schedule per call instead."""
         return Model(self.cfg, schedule)
+
+    def _sched(self, schedule):
+        return self.schedule if schedule is None else schedule
 
     @property
     def n_moe_layers(self) -> int:
@@ -90,35 +99,43 @@ class Model:
             logits = dense_apply(params["head"], x).astype(jnp.float32)
         return shard(logits, "batch", None, "vocab")
 
-    def forward(self, params, tokens, ext_embeds=None):
+    def forward(self, params, tokens, ext_embeds=None, *, schedule=None):
         """Training/eval forward: full-sequence logits [B, S, V] (f32)."""
         x = self._embed(params, tokens, ext_embeds)
-        x = stack.stack_train(params["stack"], self.cfg, x, self.schedule)
+        x = stack.stack_train(
+            params["stack"], self.cfg, x, self._sched(schedule)
+        )
         return self._logits(params, x)
 
-    def _hidden(self, params, tokens, ext_embeds=None, *, collect_stats=False):
+    def _hidden(
+        self, params, tokens, ext_embeds=None, *,
+        collect_stats=False, schedule=None,
+    ):
         x = self._embed(params, tokens, ext_embeds)
         return stack.stack_train(
-            params["stack"], self.cfg, x, self.schedule,
+            params["stack"], self.cfg, x, self._sched(schedule),
             collect_stats=collect_stats,
         )
 
-    def loss(self, params, batch: dict) -> jax.Array:
+    def loss(self, params, batch: dict, *, schedule=None) -> jax.Array:
         """Mean next-token CE over positions with targets >= 0.
 
         The [B, S, V] logits are never materialized: CE runs over sequence
         chunks with rematerialization (bwd recomputes each chunk's logits),
         bounding loss memory at [B, S/nc, V/tp] — essential for 150k-vocab
         models at 4k sequence lengths."""
-        hidden = self._hidden(params, batch["tokens"], batch.get("ext_embeds"))
+        hidden = self._hidden(
+            params, batch["tokens"], batch.get("ext_embeds"), schedule=schedule
+        )
         return self._ce(params, hidden, batch["targets"])
 
-    def loss_and_stats(self, params, batch: dict):
+    def loss_and_stats(self, params, batch: dict, *, schedule=None):
         """``loss`` plus per-layer realized routing counts
         ``[n_moe_layers, n_src, E]`` — the controller loop's observation
         (aux output; host-fetched off the critical path)."""
         hidden, stats = self._hidden(
-            params, batch["tokens"], batch.get("ext_embeds"), collect_stats=True
+            params, batch["tokens"], batch.get("ext_embeds"),
+            collect_stats=True, schedule=schedule,
         )
         return self._ce(params, hidden, batch["targets"]), stats
 
@@ -158,17 +175,17 @@ class Model:
     def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
         return stack.stack_cache(self.cfg, batch, max_len, dtype)
 
-    def prefill(self, params, tokens, caches, ext_embeds=None):
+    def prefill(self, params, tokens, caches, ext_embeds=None, *, schedule=None):
         """Process the prompt, fill caches.  Returns (last-token logits,
         caches, prompt_len)."""
         x = self._embed(params, tokens, ext_embeds)
         x, caches = stack.stack_prefill(
-            params["stack"], self.cfg, x, caches, self.schedule
+            params["stack"], self.cfg, x, caches, self._sched(schedule)
         )
         logits = self._logits(params, x[:, -1:, :])
         return logits[:, 0], caches
 
-    def decode_step(self, params, token, caches, step):
+    def decode_step(self, params, token, caches, step, *, schedule=None):
         """One decode step.  token: [B] int32; step: scalar position."""
         cfg = self.cfg
         x = embed_apply(params["embed"], token[:, None])
@@ -176,7 +193,7 @@ class Model:
             x = x + sinusoidal_pos(1, cfg.d_model, offset=step)[None]
         x = shard(x, "batch", None, "embed")
         x, caches = stack.stack_decode(
-            params["stack"], cfg, x, caches, step, self.schedule
+            params["stack"], cfg, x, caches, step, self._sched(schedule)
         )
         logits = self._logits(params, x)
         return logits[:, 0], caches

@@ -9,12 +9,23 @@
 * ``a2a`` — token-sharded EP (the paper's baseline): tokens sharded over
   the EP axis, one dense ``all_to_all`` dispatch + one combine.
 
-* ``scheduled`` — the paper's technique on TPU: the all-to-all is
-  decomposed host-side (max-weight / shift) into K ppermute phases with
-  per-phase capacities; each phase's block can enter expert compute while
-  the next phase's DMA flies (XLA overlap).  Skewed traffic ⇒ fewer,
-  denser phases ⇒ fewer collective bytes than ``a2a`` + larger expert
-  batches — exactly the paper's §3.2 argument, restated in ICI terms.
+* ``scheduled`` — the paper's technique on TPU.  Two executions of the
+  same plan:
+
+  - **static** (``A2ASchedule``): the all-to-all is decomposed host-side
+    (max-weight / shift) into K ppermute phases with per-phase
+    capacities baked into the executable; skewed traffic ⇒ fewer, denser
+    phases ⇒ fewer collective bytes than ``a2a`` (paper §3.2 in ICI
+    terms).  Changing the plan recompiles.
+  - **traced** (``ScheduleTable`` row): the plan is *data*.  The
+    schedule's capacity semantics are enforced by a traced admission
+    mask (gates of tokens beyond a pair's planned capacity are zeroed —
+    exactly the tokens the static path would leave unshipped), movement
+    is one dense all-to-all, and expert compute is ONE grouped
+    ``moe_gemm`` launch whose group-metadata prologue skips fully padded
+    row blocks.  Plans swap without recompiling and ride ``lax.scan``;
+    on a single device the same row drives a *virtual* fabric, so
+    scheduled capacity clipping is observable without a mesh.
 
 Routing: top-k softmax gating with capacity-factor token dropping
 (GShard-style), gates optionally renormalized over the selected k.
@@ -29,7 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.schedule import A2ASchedule, phase_offsets
+from repro.core.schedule import A2ASchedule, ScheduleTable, phase_offsets
 from repro.parallel import current_rules, shard, shard_map_compat
 from repro.parallel.collectives import (
     a2a_combine,
@@ -118,7 +129,12 @@ def _ungroup(y, pos, gate, t: int):
 
 
 def _expert_ffn(
-    params: dict, x: jax.Array, e_slice=None, *, use_pallas: bool = False
+    params: dict,
+    x: jax.Array,
+    e_slice=None,
+    *,
+    use_pallas: bool = False,
+    row_valid: jax.Array | None = None,
 ) -> jax.Array:
     """Batched SwiGLU over expert groups.  x: [E, C, d] -> [E, C, d].
 
@@ -126,7 +142,9 @@ def _expert_ffn(
     (the TPU hot spot; interpret mode off-TPU) with block sizes from its
     autotune table; shapes the kernel cannot tile fall back here.  The
     einsum form is the portable/XLA path and the kernel's correctness
-    oracle.
+    oracle.  ``row_valid`` ([E, C] bool) is the grouped launch's
+    block-skip metadata (rows holding real admitted tokens) — a compute
+    hint, never a value change on valid rows.
     """
     if e_slice is not None:  # already-local expert slices (inside shard_map)
         wg, wu, wd = e_slice
@@ -135,11 +153,62 @@ def _expert_ffn(
     if use_pallas:
         from repro.kernels.moe_gemm import moe_gemm
 
-        return moe_gemm(x, cast(wg), cast(wu), cast(wd))
+        return moe_gemm(x, cast(wg), cast(wu), cast(wd), row_valid=row_valid)
     g = jnp.einsum("ecd,edf->ecf", x, cast(wg))
     u = jnp.einsum("ecd,edf->ecf", x, cast(wu))
     h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
     return jnp.einsum("ecf,efd->ecd", h, cast(wd))
+
+
+def _rank_in_group(key: jax.Array) -> jax.Array:
+    """Arrival rank of each element within its group.
+
+    ``key``: [N] int group ids.  Returns [N] int32 — the element's index
+    among same-key elements in original order, i.e. exactly the bucket
+    slot ``_group`` will assign it.  One stable argsort + a cummax over
+    segment starts (no LAP, no segment loops).
+    """
+    n = key.shape[0]
+    order = jnp.argsort(key, stable=True)
+    sk = key[order]
+    idxs = jnp.arange(n, dtype=jnp.int32)
+    is_start = jnp.concatenate(
+        [jnp.ones((1,), bool), sk[1:] != sk[:-1]]
+    )
+    first = jax.lax.cummax(jnp.where(is_start, idxs, 0))
+    return jnp.zeros_like(idxs).at[order].set(idxs - first)
+
+
+def _admission(
+    idx: jax.Array,
+    gates: jax.Array,
+    row: ScheduleTable,
+    n_experts: int,
+    *,
+    src: jax.Array,
+) -> jax.Array:
+    """Enforce a traced schedule row's planned capacities on the gates.
+
+    ``idx``/``gates``: [T, k] routing choices; ``src``: [T*k] source rank
+    of each flattened choice (a constant inside the EP shard_map, the
+    virtual-fabric fold on a single device).  A choice is *admitted* if
+    its arrival rank within its (src, expert) bucket is below the pair's
+    planned per-expert capacity (``ScheduleTable.pair_caps``) — the same
+    prefix of slots the static ppermute path would ship; everything
+    beyond gets its gate zeroed, which is indistinguishable from the
+    static path returning zeros for unshipped slots.  Local (src == dst)
+    traffic never crosses the fabric and is never clipped.
+    """
+    n_v = row.n
+    e_local = n_experts // n_v
+    e_flat = idx.reshape(-1)
+    dst = e_flat // e_local
+    cap_pair = row.pair_caps(e_local)  # [n_v, n_v] per-expert slot units
+    big = jnp.int32(jnp.iinfo(jnp.int32).max)
+    cap_flat = jnp.where(src == dst, big, cap_pair[src, dst])
+    rank = _rank_in_group(src * jnp.int32(n_experts) + e_flat)
+    admitted = rank < cap_flat
+    return gates * admitted.reshape(gates.shape)
 
 
 def _ep_size() -> int:
@@ -162,20 +231,41 @@ def _routing_counts(idx: jax.Array, n_experts: int) -> jax.Array:
 
 # --------------------------------------------------------------- dense mode
 def _moe_dense(
-    params, cfg: ModelConfig, x: jax.Array, *, return_stats: bool = False
+    params,
+    cfg: ModelConfig,
+    x: jax.Array,
+    row: ScheduleTable | None = None,
+    *,
+    return_stats: bool = False,
 ):
+    """No-A2A EP.  With a traced schedule ``row`` the layer runs the plan
+    on a *virtual* fabric of ``row.n`` ranks (tokens map to virtual
+    sources by contiguous blocks, experts by contiguous placement — the
+    controller's single-device convention): the row's planned per-pair
+    capacities clip the gates exactly as the EP path would, so scheduled
+    semantics — including drift re-plans swapping tables with zero
+    recompiles — are observable without a mesh."""
     m = cfg.moe
     b, s, d = x.shape
     t = b * s
     xf = x.reshape(t, d)
     idx, gates = _router(params, cfg, xf)
+    if row is not None:
+        tok = jnp.arange(t * m.top_k, dtype=jnp.int32) // m.top_k
+        src = (tok * row.n) // t  # contiguous virtual source blocks
+        gates = _admission(idx, gates, row, m.n_experts, src=src)
     key = idx.reshape(-1)
     cap = _round8(math.ceil(t * m.top_k / m.n_experts * m.capacity_factor))
     buf, pos, gate = _group(xf, key, gates.reshape(-1), m.n_experts, cap)
     # capacity dim sharded over the DP axis ('fsdp'->data) so expert work
     # splits across data shards too, not just the expert axis
     buf = shard(buf, "expert", "fsdp", None)
-    y = _expert_ffn(params, buf, use_pallas=m.use_pallas)
+    # grouped-launch metadata: a slot is live iff its combine weight is
+    # nonzero (covers capacity padding AND admission-clipped slots)
+    y = _expert_ffn(
+        params, buf, use_pallas=m.use_pallas,
+        row_valid=(gate > 0) if m.use_pallas else None,
+    )
     y = shard(y, "expert", "fsdp", None)
     out = _ungroup(y, pos, gate, t)
     out = out.astype(x.dtype).reshape(b, s, d)
@@ -299,12 +389,28 @@ def _moe_ep(
                 offsets=offsets,
             )
             blocks = scheduled_dispatch(buf, sched, EP_AXIS)
-            # Per-phase expert compute: each received block enters the GEMM
-            # independently — the paper's overlap structure made explicit
-            # (phase k's compute can run while phase k+1's ppermute flies),
-            # and under 2D sharding the token gather is per-phase (bounded
-            # memory instead of gathering the whole concatenated buffer).
-            parts = [expert_compute(blk) for blk in blocks]
+            if two_d:
+                # 2D expert sharding keeps the per-phase compute: each
+                # phase's token gather over 'data' stays bounded by one
+                # phase's capacity (fusing would gather the whole
+                # concatenated buffer at once), and phase k's GEMM can
+                # still overlap phase k+1's ppermute.
+                parts = [expert_compute(blk) for blk in blocks]
+            else:
+                # Grouped expert compute: the received phase blocks
+                # concatenate along the capacity dim and enter ONE GEMM
+                # (a single Pallas launch under use_pallas) instead of
+                # K+1 per-phase launches — K phases no longer fragment
+                # the expert batch (the paper's Fig. 3 small-batch
+                # penalty, attacked at the kernel layer).  The trade: the
+                # fused GEMM waits for the last phase's ppermute, giving
+                # up the per-phase compute/DMA overlap — fragmented
+                # launches cost more than the overlap buys at the small
+                # per-phase batches this path exists for.
+                sizes = [int(blk.shape[1]) for blk in blocks]
+                y_cat = expert_compute(jnp.concatenate(blocks, axis=1))
+                bounds = np.cumsum(sizes)[:-1]
+                parts = jnp.split(y_cat, bounds, axis=1)
             back = scheduled_combine(parts, sched, EP_AXIS, c_max)
 
         y_loc = _ungroup(back, pos, gate, t_ep)  # [t_ep, d] f32
@@ -322,6 +428,143 @@ def _moe_ep(
         params["w_gate"],
         params["w_up"],
         params["w_down"],
+    )
+    if not return_stats:
+        return res
+    y, counts = res
+    return y, counts.sum(axis=0)  # [n, E]
+
+
+def _moe_ep_table(
+    params,
+    cfg: ModelConfig,
+    x: jax.Array,
+    row: ScheduleTable,
+    *,
+    return_stats: bool = False,
+):
+    """Token-sharded EP driven by a *traced* schedule row.
+
+    The row is ordinary shard_map input (replicated), so a re-planned
+    table reaches this executable without recompiling.  The planned
+    capacity semantics live in the admission mask (``_admission``); token
+    movement is one dense all-to-all over the statically sized buckets
+    (a traced plan cannot shrink buffer shapes — the dark-fiber byte
+    saving of the static ppermute path is traded for compile-freedom;
+    a TPU-native ragged all-to-all would recover it), and expert compute
+    is ONE grouped ``moe_gemm`` launch whose metadata prologue skips row
+    blocks with no admitted tokens.  The combine gates travel with the
+    tokens (an all-to-all of the [n, E_local, C] gate buffer) so the
+    receiver knows which rows are live.
+
+    Parity with the static path holds when every pair's planned
+    per-expert capacity fits the uniform capacity-factor bucket (the
+    shapes are fixed at trace time, so the bucket cannot grow to match a
+    hot pair the way the static path's ``c_max = max(cap_uni, per-pair
+    max)`` does): tokens the plan admits beyond the bucket are dropped
+    at grouping — the plan over-promised the capacity-factor envelope.
+    Size ``capacity_factor`` (or the planner's ``slack``) so plans stay
+    inside the bucket when exact static-path parity matters.
+
+    Under 2D expert sharding the whole ``[E_local, n*C, d]`` buffer is
+    gathered over 'data' at once — the same peak memory as the ``a2a``
+    mode's 2D path, but larger than the static scheduled path's
+    per-phase gathers (which stay bounded by one phase's capacity).
+    """
+    m = cfg.moe
+    ar = current_rules()
+    mesh = ar.mesh
+    n = _ep_size()
+    if row.n != n:
+        raise ValueError(f"schedule row plans {row.n} ranks, EP axis has {n}")
+    e_local = m.n_experts // n
+    b, s, d = x.shape
+
+    rule_b = ar.rules.get("batch") or ()
+    rule_b = (rule_b,) if isinstance(rule_b, str) else tuple(rule_b)
+    batch_axes = tuple(a for a in rule_b if a in mesh.axis_names)
+    from jax.sharding import PartitionSpec as P
+
+    two_d = bool(m.expert_2d) and "data" in mesh.axis_names
+    w_f_spec = P(EP_AXIS, None, "data") if two_d else P(EP_AXIS, None, None)
+    w_d_spec = P(EP_AXIS, "data", None) if two_d else P(EP_AXIS, None, None)
+    rep = P()  # schedule row: replicated everywhere
+    in_specs = (
+        P(batch_axes, EP_AXIS, None),
+        P(None, None),
+        w_f_spec,
+        w_f_spec,
+        w_d_spec,
+        rep, rep, rep, rep, rep,
+    )
+    out_specs = P(batch_axes, EP_AXIS, None)
+    if return_stats:
+        out_specs = (out_specs, P(batch_axes, EP_AXIS, None))
+
+    def body(xb, wr, wg, wu, wd, r_perms, r_caps, r_valid, r_offsets, r_nph):
+        r = ScheduleTable(r_perms, r_caps, r_valid, r_offsets, r_nph)
+        me = jax.lax.axis_index(EP_AXIS)
+        bl, s_loc, _ = xb.shape
+        t_ep = bl * s_loc
+        x_loc = xb.reshape(t_ep, d)
+        idx, gates = _router({"router": {"w": wr}}, cfg, x_loc)
+        src = jnp.full((t_ep * m.top_k,), me, jnp.int32)
+        gates = _admission(idx, gates, r, m.n_experts, src=src)
+        key = idx.reshape(-1)
+        # traced plans cannot change buffer shapes: every bucket gets the
+        # uniform capacity-factor cap (static), the plan clips within it
+        c_max = _round8(
+            math.ceil(t_ep * m.top_k / (n * e_local) * m.capacity_factor)
+        )
+        buf, pos, gate = _group(
+            x_loc, key, gates.reshape(-1), n * e_local, c_max
+        )
+        buf = buf.reshape(n, e_local, c_max, d)
+        gbuf = gate.reshape(n, e_local, c_max)
+
+        recv = a2a_dispatch(buf, EP_AXIS)  # [n(src), e_local, C, d]
+        recv_g = a2a_dispatch(gbuf, EP_AXIS)
+        grouped = recv.transpose(1, 0, 2, 3).reshape(e_local, n * c_max, d)
+        live = recv_g.transpose(1, 0, 2).reshape(e_local, n * c_max) > 0
+
+        if not two_d:
+            y = _expert_ffn(
+                None, grouped, e_slice=(wg, wu, wd), use_pallas=m.use_pallas,
+                row_valid=live if m.use_pallas else None,
+            )
+        else:
+            gathered = jax.lax.all_gather(grouped, "data", axis=1, tiled=True)
+            live_g = jax.lax.all_gather(live, "data", axis=1, tiled=True)
+            y_part = _expert_ffn(
+                None, gathered, e_slice=(wg, wu, wd), use_pallas=m.use_pallas,
+                row_valid=live_g if m.use_pallas else None,
+            )
+            y = jax.lax.psum_scatter(
+                y_part, "data", scatter_dimension=1, tiled=True
+            )
+
+        y = y.reshape(e_local, n, c_max, d).transpose(1, 0, 2, 3)
+        back = a2a_combine(y, EP_AXIS)
+        y_loc = _ungroup(back, pos, gate, t_ep)
+        out = y_loc.astype(xb.dtype).reshape(bl, s_loc, d)
+        if not return_stats:
+            return out
+        return out, _routing_counts(idx, m.n_experts)[None, None, :]
+
+    fn = shard_map_compat(
+        body, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False
+    )
+    res = fn(
+        x,
+        params["router"]["w"],
+        params["w_gate"],
+        params["w_up"],
+        params["w_down"],
+        row.perms,
+        row.caps,
+        row.valid,
+        row.offsets,
+        row.n_phases,
     )
     if not return_stats:
         return res
@@ -351,21 +594,36 @@ def moe_apply(
     cfg: ModelConfig,
     x: jax.Array,
     *,
-    schedule: A2ASchedule | None = None,
+    schedule: A2ASchedule | ScheduleTable | None = None,
     return_stats: bool = False,
 ):
-    """Apply the MoE FFN.  With ``return_stats`` the layer additionally
+    """Apply the MoE FFN.  ``schedule`` is either a static ``A2ASchedule``
+    (baked into the executable; ppermute phases) or a traced
+    ``ScheduleTable`` *row* (swap-without-recompile; admission mask + one
+    grouped launch).  With ``return_stats`` the layer additionally
     returns its realized routing counts ``[n_src, E]`` (f32; one row per
     EP source rank, a single row in dense mode) — the controller loop's
     observation signal, host-fetched off the critical path."""
     m = cfg.moe
     mode = m.dispatch
+    if isinstance(schedule, ScheduleTable) and not schedule.is_row:
+        raise ValueError(
+            "moe_apply consumes per-layer rows — pass table.row(l) (the "
+            "stack's scan slices rows automatically)"
+        )
     if _ep_size() == 1 or mode == "dense" or not _ep_feasible(cfg, x):
-        return _moe_dense(params, cfg, x, return_stats=return_stats)
+        row = schedule if isinstance(schedule, ScheduleTable) else None
+        return _moe_dense(params, cfg, x, row, return_stats=return_stats)
     if mode == "a2a":
         return _moe_ep(params, cfg, x, None, return_stats=return_stats)
     if mode == "scheduled":
         if schedule is None:
-            raise ValueError("scheduled dispatch needs an A2ASchedule")
+            raise ValueError(
+                "scheduled dispatch needs an A2ASchedule or ScheduleTable row"
+            )
+        if isinstance(schedule, ScheduleTable):
+            return _moe_ep_table(
+                params, cfg, x, schedule, return_stats=return_stats
+            )
         return _moe_ep(params, cfg, x, schedule, return_stats=return_stats)
     raise ValueError(f"unknown dispatch mode {mode!r}")

@@ -5,6 +5,13 @@ Jamba's 1-attention-per-7-mamba interleave with alternating MoE).  Params
 for period-position ``j`` are stacked over ``n_periods`` and consumed by
 ``lax.scan``; caches/states are stacked the same way and scanned as
 xs/ys.  Remat ('block') checkpoints each period.
+
+Per-layer MoE schedules ride the same scan: a ``ScheduleTable`` (fixed
+shape ``[L, K_max, n]`` pytree) reshapes to per-period rows and scans as
+xs alongside the params, so distinct per-layer plans cost O(period) HLO
+and swap without recompiling — on the train, prefill, AND decode paths.
+(The old static-``A2ASchedule``-per-layer form forced the stack to unroll
+and a compile per swap; it is gone.)
 """
 
 from __future__ import annotations
@@ -13,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core.schedule import ScheduleTable
 from repro.models import attention as attn
 from repro.models import mamba as mb
 from repro.models import rwkv as rk
@@ -183,6 +191,46 @@ def stack_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16) 
     return out
 
 
+def _schedule_rows(schedule, cfg: ModelConfig):
+    """Split ``schedule`` into (shared, rows-for-scan).
+
+    ``rows`` is the ``ScheduleTable`` reshaped to ``[n_periods, mpp, ...]``
+    leaves (mpp = MoE positions per period) so ``lax.scan`` slices one
+    period's rows per step; ``shared`` is the legacy single
+    ``A2ASchedule``/None broadcast to every MoE layer.  Sequences of
+    static schedules are gone — they forced the stack to unroll (HLO
+    O(depth)) and a recompile per swap.
+    """
+    if isinstance(schedule, (list, tuple)):
+        raise TypeError(
+            "per-layer schedules are a traced ScheduleTable now "
+            "(core.ScheduleTable.from_schedules); static per-layer "
+            "A2ASchedule sequences forced the stack to unroll"
+        )
+    if not isinstance(schedule, ScheduleTable):
+        return schedule, None
+    positions = moe_positions(cfg)
+    expected = cfg.n_periods * len(positions)
+    if schedule.num_layers != expected:
+        raise ValueError(
+            f"table has {schedule.num_layers} rows for {expected} MoE layers"
+        )
+    rows = jax.tree.map(
+        lambda a: a.reshape(cfg.n_periods, len(positions), *a.shape[1:]),
+        schedule,
+    )
+    return None, rows
+
+
+def _position_schedule(prow, shared, positions, j):
+    """Schedule for period-position ``j``: its table row (leaves indexed
+    inside the scanned period) or the shared static schedule."""
+    if prow is not None and j in positions:
+        i = positions.index(j)
+        return jax.tree.map(lambda a: a[i], prow)
+    return shared
+
+
 def stack_train(
     params: dict,
     cfg: ModelConfig,
@@ -190,27 +238,32 @@ def stack_train(
     schedule,
     *,
     collect_stats: bool = False,
+    unroll: bool = False,
 ):
     """Run the training stack.
 
-    ``schedule`` is either one ``A2ASchedule``/None shared by every MoE
-    layer (scan path: HLO is O(period)) or a sequence with one schedule
-    per MoE layer in layer order (the controller's per-layer re-planning;
-    schedules are static so the stack unrolls — HLO O(depth)).
+    ``schedule`` is None, one static ``A2ASchedule`` shared by every MoE
+    layer, or a ``ScheduleTable`` with one row per MoE layer (layer
+    order).  All three ride ``lax.scan`` — the table's rows scan as xs
+    alongside the stacked params, so per-layer plans keep HLO O(period)
+    and re-planned tables swap into the same executable.
+
+    ``unroll`` runs the same per-period body as a Python loop (HLO
+    O(depth)) — the scan path's parity oracle and a compile-count
+    debugging aid, not a production path.
 
     With ``collect_stats`` returns ``(x, stats)`` where stats is the
     ``[n_moe_layers, n_src, E]`` realized routing counts in layer order.
     """
-    if isinstance(schedule, (list, tuple)):
-        return _stack_train_unrolled(
-            params, cfg, x, tuple(schedule), collect_stats
-        )
+    shared, rows = _schedule_rows(schedule, cfg)
+    positions = moe_positions(cfg)
 
-    def period_fn(x, pparams):
+    def period_fn(x, pparams, prow):
         stats = []
         for j in range(cfg.period):
             x, st = block_train(
-                pparams[f"pos{j}"], cfg, j, x, schedule,
+                pparams[f"pos{j}"], cfg, j, x,
+                _position_schedule(prow, shared, positions, j),
                 collect_stats=collect_stats,
             )
             if st is not None:
@@ -222,14 +275,27 @@ def stack_train(
 
     from repro.parallel import shard
 
-    def scan_fn(carry, pparams):
+    x = shard(x, "batch", "seq_act", "embed")
+    if unroll:
+        stats_flat = []
+        for p in range(cfg.n_periods):
+            pparams = jax.tree.map(lambda a: a[p], params)
+            prow = None if rows is None else jax.tree.map(lambda a: a[p], rows)
+            x, sts = period_fn(x, pparams, prow)
+            x = shard(x, "batch", "seq_act", "embed")
+            stats_flat.extend(sts)
+        if not collect_stats:
+            return x
+        return x, jnp.stack(stats_flat)
+
+    def scan_fn(carry, xs):
         # the scan carry is the saved (checkpointed) residual: keep it
         # sequence-sharded under the 'seq_act' rule (no-op by default)
-        out, stats = period_fn(carry, pparams)
+        pparams, prow = xs
+        out, stats = period_fn(carry, pparams, prow)
         return shard(out, "batch", "seq_act", "embed"), stats
 
-    x = shard(x, "batch", "seq_act", "embed")
-    x, stats = jax.lax.scan(scan_fn, x, params)
+    x, stats = jax.lax.scan(scan_fn, x, (params, rows))
     if not collect_stats:
         return x
     # stats: tuple (per MoE period position) of [n_periods, n_src, E];
@@ -238,76 +304,39 @@ def stack_train(
     return x, jnp.stack(flat)
 
 
-def _stack_train_unrolled(
-    params: dict,
-    cfg: ModelConfig,
-    x: jax.Array,
-    schedules: tuple,
-    collect_stats: bool,
-):
-    """Per-layer schedules: unrolled over periods (schedules are static
-    compile-time values, so they cannot ride through ``lax.scan``)."""
-    from repro.parallel import shard
-
-    positions = moe_positions(cfg)
-    expected = cfg.n_periods * len(positions)
-    if len(schedules) != expected:
-        raise ValueError(
-            f"got {len(schedules)} schedules for {expected} MoE layers"
-        )
-    x = shard(x, "batch", "seq_act", "embed")
-    stats = []
-    si = 0
-    for p in range(cfg.n_periods):
-        pparams = jax.tree.map(lambda a: a[p], params)
-        scheds = {j: schedules[si + k] for k, j in enumerate(positions)}
-        si += len(positions)
-
-        def period_fn(x, pp, scheds=scheds):
-            sts = []
-            for j in range(cfg.period):
-                x, st = block_train(
-                    pp[f"pos{j}"], cfg, j, x, scheds.get(j),
-                    collect_stats=collect_stats,
-                )
-                if st is not None:
-                    sts.append(st)
-            return x, tuple(sts)
-
-        fn = jax.checkpoint(period_fn) if cfg.remat == "block" else period_fn
-        x, sts = fn(x, pparams)
-        x = shard(x, "batch", "seq_act", "embed")
-        stats.extend(sts)
-    if not collect_stats:
-        return x
-    return x, jnp.stack(stats)
-
-
 def stack_prefill(params, cfg: ModelConfig, x, caches, schedule):
+    shared, rows = _schedule_rows(schedule, cfg)
+    positions = moe_positions(cfg)
+
     def scan_fn(carry, inp):
-        pparams, pcache = inp
+        pparams, pcache, prow = inp
         new = {}
         for j in range(cfg.period):
             carry, c = block_prefill(
-                pparams[f"pos{j}"], cfg, j, carry, pcache[f"pos{j}"], schedule
+                pparams[f"pos{j}"], cfg, j, carry, pcache[f"pos{j}"],
+                _position_schedule(prow, shared, positions, j),
             )
             new[f"pos{j}"] = c
         return carry, new
 
-    x, caches = jax.lax.scan(scan_fn, x, (params, caches))
+    x, caches = jax.lax.scan(scan_fn, x, (params, caches, rows))
     return x, caches
 
 
 def stack_decode(params, cfg: ModelConfig, x, caches, step, schedule):
+    shared, rows = _schedule_rows(schedule, cfg)
+    positions = moe_positions(cfg)
+
     def scan_fn(carry, inp):
-        pparams, pcache = inp
+        pparams, pcache, prow = inp
         new = {}
         for j in range(cfg.period):
             carry, c = block_decode(
-                pparams[f"pos{j}"], cfg, j, carry, pcache[f"pos{j}"], step, schedule
+                pparams[f"pos{j}"], cfg, j, carry, pcache[f"pos{j}"], step,
+                _position_schedule(prow, shared, positions, j),
             )
             new[f"pos{j}"] = c
         return carry, new
 
-    x, caches = jax.lax.scan(scan_fn, x, (params, caches))
+    x, caches = jax.lax.scan(scan_fn, x, (params, caches, rows))
     return x, caches

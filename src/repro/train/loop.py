@@ -72,9 +72,10 @@ def train_loop(
       loop: the step function emits per-layer realized routing counts,
       the loop host-fetches the *previous* step's counts (never blocking
       on in-flight work) and feeds them to ``runtime.observe``; when the
-      decision swaps schedules, the jitted step function is swapped too —
-      compiled executables are cached per schedule assignment, so only a
-      library miss compiles.
+      decision swaps schedules, the loop fetches the re-planned
+      ``ScheduleTable`` and passes it to the SAME jitted step — the
+      schedule is traced input, so drift swaps perform zero recompiles
+      (asserted via the executable cache size in ``controller.compiles``).
     stats_hook: optional fn(step, stats) -> stats applied to the observed
       routing counts before ``runtime.observe`` (drift injection in tests
       and the drift-scenario examples).
@@ -96,28 +97,33 @@ def train_loop(
             donate_argnums=(0, 1, 2),
         )
 
-    if runtime is not None and runtime.schedules is not None:
-        model = model.with_schedule(runtime.schedules)
     moe_cfg = getattr(model.cfg, "moe", None)
-    if (
-        moe_cfg is not None
-        and moe_cfg.dispatch == "scheduled"
-        and model.schedule is None
-    ):
-        # fail fast: this is a config error, not a transient fault — left
-        # to the step function it would trace-fail max_failures+1 times
+    consumes_schedule = moe_cfg is not None and moe_cfg.dispatch == "scheduled"
+    schedule = None
+    if runtime is not None and consumes_schedule:
+        # fail fast: config errors, not transient faults — left to the
+        # step function they would trace-fail max_failures+1 times.  The
+        # runtime MUST be primed here even if the model carries a static
+        # schedule: the step compiles against the table's pytree
+        # structure from step 0, so a later None -> table transition
+        # would retrace — the recompile the traced path exists to avoid.
+        if runtime.schedules is None:
+            raise ValueError(
+                "scheduled dispatch with a runtime needs a primed "
+                "runtime before the first step (ScheduleRuntime.prime), "
+                "so drift swaps stay compile-free from step 0"
+            )
+        schedule = runtime.table()
+    elif consumes_schedule and model.schedule is None:
         raise ValueError(
             "scheduled dispatch needs a schedule before the first step: "
             "prime the runtime (ScheduleRuntime.prime) or pass a Model "
-            "with an initial A2ASchedule"
+            "with an initial schedule"
         )
+    # ONE executable for the whole run: the schedule is traced input
+    # (ScheduleTable), so controller swaps pass new arrays into the same
+    # compiled step.  There is no per-assignment compile cache anymore.
     step_fn = build_step(model)
-    # compiled step per schedule assignment: a drift event whose selectors
-    # land on library entries reuses the executable (swap, no compile).
-    # Only scheduled dispatch bakes the schedule into the executable —
-    # dense/a2a steps are schedule-independent and never rebuilt.
-    consumes_schedule = moe_cfg is not None and moe_cfg.dispatch == "scheduled"
-    step_cache = {runtime.schedule_key: step_fn} if runtime is not None else {}
     manager = CheckpointManager(loop_cfg.ckpt_dir, keep=loop_cfg.keep)
 
     def fresh_state():
@@ -144,7 +150,13 @@ def train_loop(
     consecutive_failures = 0  # the retry budget (resets on progress)
     last_failure_step = -1
     step = start_step
-    swaps = compiles = 0
+    swaps = 0
+    cache_fn = getattr(step_fn, "_cache_size", lambda: 1)
+    # executable count at the first swap: any growth beyond it is a
+    # swap-attributable recompile.  (The first couple of steps may compile
+    # twice anyway while donated-param shardings converge on a mesh —
+    # that's jit warmup, not the controller's doing.)
+    pre_swap_cache = None
     pending_routing = None  # previous step's routing counts (device)
     t_last = time.perf_counter()
     steps_since_log = 0
@@ -162,20 +174,12 @@ def train_loop(
                     stats = stats_hook(step, stats)
                 decision = runtime.observe(stats)
                 if decision.changed:
-                    model = model.with_schedule(runtime.schedules)
                     swaps += 1
                     if consumes_schedule:
-                        if decision.key not in step_cache:
-                            step_cache[decision.key] = build_step(model)
-                            compiles += 1
-                        step_fn = step_cache[decision.key]
-                        # drop executables whose entries were LRU-evicted
-                        # from every library (they can never be swapped
-                        # back in; keeps live executables bounded)
-                        live = runtime.live_entry_ids()
-                        for k in list(step_cache):
-                            if k != decision.key and not set(k) <= live:
-                                del step_cache[k]
+                        if pre_swap_cache is None:
+                            pre_swap_cache = cache_fn()
+                        # new table arrays, same shapes, same executable
+                        schedule = runtime.table()
                     log.info(
                         "step %d: controller swap (%s; %s)",
                         step,
@@ -184,7 +188,7 @@ def train_loop(
                     )
             batch = shard_batch(stream.batch(step))
             params, opt_state, ef_state, metrics = step_fn(
-                state["params"], state["opt"], state["ef"], batch
+                state["params"], state["opt"], state["ef"], batch, schedule
             )
             state = {"params": params, "opt": opt_state, "ef": ef_state}
             if runtime is not None:
@@ -234,6 +238,14 @@ def train_loop(
         "final_loss": history[-1]["loss"] if history else float("nan"),
     }
     if runtime is not None:
+        # honest compile count, read off the jit executable cache:
+        # growth after the first swap is a swap-driven recompile.  With
+        # traced schedule tables this must stay 0 (regression-tested).
+        compiles = (
+            max(0, cache_fn() - pre_swap_cache)
+            if pre_swap_cache is not None
+            else 0
+        )
         out["controller"] = {
             **runtime.summary(),
             "swaps": swaps,

@@ -137,17 +137,24 @@ def make_train_step(
     collect_routing adds the per-layer realized MoE routing counts
     ``[n_moe_layers, n_src, E]`` to metrics as ``metrics["routing"]``
     (summed over microbatches) — the controller loop's observation.
+
+    The returned step takes the MoE schedule as an optional trailing
+    argument: ``train_step(params, opt_state, ef_state, batch, schedule)``.
+    A ``ScheduleTable`` passed there is *traced* input — the controller
+    swaps in a re-planned table (same leaf shapes) without recompiling.
+    ``None`` (dense/a2a dispatch, or a static schedule held by the model)
+    keeps the legacy behavior.
     """
 
-    def loss_fn(params, batch):
+    def loss_fn(params, batch, schedule):
         if collect_routing:
-            return model.loss_and_stats(params, batch)
-        return model.loss(params, batch), None
+            return model.loss_and_stats(params, batch, schedule=schedule)
+        return model.loss(params, batch, schedule=schedule), None
 
-    def grads_of(params, batch):
+    def grads_of(params, batch, schedule):
         if microbatches == 1:
             (loss, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(
-                params, batch
+                params, batch, schedule
             )
             return loss, aux, g
         b = batch["tokens"].shape[0]
@@ -160,7 +167,7 @@ def make_train_step(
         def step(carry, mbatch):
             loss_acc, g_acc = carry
             (loss, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(
-                params, mbatch
+                params, mbatch, schedule
             )
             g_acc = jax.tree.map(jnp.add, g_acc, g)
             return (loss_acc + loss, g_acc), aux
@@ -178,8 +185,8 @@ def make_train_step(
         scale = 1.0 / microbatches
         return loss * scale, aux, jax.tree.map(lambda g: g * scale, grads)
 
-    def train_step(params, opt_state, ef_state, batch):
-        loss, aux, grads = grads_of(params, batch)
+    def train_step(params, opt_state, ef_state, batch, schedule=None):
+        loss, aux, grads = grads_of(params, batch, schedule)
         if grad_compress == "ef8":
             grads, ef_state = ef_int8_compress(grads, ef_state)
         params, opt_state, stats = optimizer.update(grads, opt_state, params)

@@ -54,6 +54,75 @@ def test_moe_gemm_zero_padding_rows():
     assert float(jnp.abs(out).max()) == 0.0
 
 
+# ------------------------------------------------- grouped launch (metadata)
+def _grouped_inputs(e=4, c=128, d=64, f=128, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    x = jax.random.normal(ks[0], (e, c, d)) * 0.5
+    wg = jax.random.normal(ks[1], (e, d, f)) * 0.05
+    wu = jax.random.normal(ks[2], (e, d, f)) * 0.05
+    wd = jax.random.normal(ks[3], (e, f, d)) * 0.05
+    return x, wg, wu, wd
+
+
+def test_moe_gemm_grouped_valid_rows_match_ref():
+    """The group-metadata prologue is a compute-skip hint: valid rows are
+    bit-for-bit the ungrouped kernel's values; fully invalid row blocks
+    are zeros."""
+    x, wg, wu, wd = _grouped_inputs()
+    counts = [128, 64, 0, 8]  # full / half / empty / one-block prefix
+    rv = np.zeros((4, 128), bool)
+    for i, ct in enumerate(counts):
+        rv[i, :ct] = True
+    rv = jnp.asarray(rv)
+    out = moe_gemm(x, wg, wu, wd, row_valid=rv, block_c=64, block_f=64)
+    ref = moe_gemm_ref(x, wg, wu, wd)
+    np.testing.assert_allclose(
+        np.asarray(out * rv[..., None], np.float32),
+        np.asarray(ref * rv[..., None], np.float32),
+        rtol=2e-5, atol=2e-5,
+    )
+    assert float(jnp.abs(out[2]).max()) == 0.0  # empty group skipped
+    assert float(jnp.abs(out[3, 64:]).max()) == 0.0  # empty tail block
+
+
+def test_moe_gemm_grouped_partial_block_computes_everything():
+    """Rows of a partially occupied block are all computed (callers gate
+    invalid slots to zero) — the hint never changes valid-row values."""
+    x, wg, wu, wd = _grouped_inputs(seed=1)
+    rv = jnp.zeros((4, 128), bool).at[:, :8].set(True)  # 8 of 64 per block
+    out = moe_gemm(x, wg, wu, wd, row_valid=rv, block_c=64, block_f=64)
+    ref = moe_gemm_ref(x, wg, wu, wd)
+    np.testing.assert_allclose(
+        np.asarray(out[:, :64], np.float32),
+        np.asarray(ref[:, :64], np.float32),
+        rtol=2e-5, atol=2e-5,
+    )
+    assert float(jnp.abs(out[:, 64:]).max()) == 0.0
+
+
+def test_moe_gemm_grouped_grads_match_oracle():
+    """custom_vjp: grouped forward, einsum-oracle backward — grads of a
+    gate-masked loss match the pure-oracle grads."""
+    x, wg, wu, wd = _grouped_inputs(seed=2)
+    rv = jnp.zeros((4, 128), bool).at[:, :64].set(True)
+    mask = rv[..., None].astype(x.dtype)
+
+    def loss_kernel(x, wg, wu, wd):
+        y = moe_gemm(x, wg, wu, wd, row_valid=rv, block_c=64, block_f=64)
+        return ((y * mask) ** 2).sum()
+
+    def loss_ref(x, wg, wu, wd):
+        return ((moe_gemm_ref(x, wg, wu, wd) * mask) ** 2).sum()
+
+    gk = jax.grad(loss_kernel, argnums=(0, 1, 2, 3))(x, wg, wu, wd)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2, 3))(x, wg, wu, wd)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            rtol=1e-4, atol=1e-4,
+        )
+
+
 # ----------------------------------------------------------- flash attention
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize(

@@ -1,0 +1,397 @@
+"""Array-native schedule tests: the traced ``ScheduleTable`` (PR 3).
+
+Covers the tentpole properties end to end:
+  * table construction/padding/clipping and the traced ``pair_caps``
+    admission matrix vs the host-side ``A2ASchedule.cap_matrix`` oracle,
+  * scan-vs-unrolled numerics parity on the seed MoE configs (per-layer
+    tables riding ``lax.scan``),
+  * prefill/decode parity with the training stack under *distinct*
+    per-layer schedules,
+  * the zero-recompile regression: a drift-event schedule swap must not
+    grow any executable cache,
+  * virtual-fabric admission semantics (scheduled capacity clipping
+    observable on a single device).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.configs.base import ModelConfig, MoECfg
+from repro.core import (
+    A2ASchedule,
+    ControllerConfig,
+    ScheduleRuntime,
+    ScheduleTable,
+    decompose,
+    plan_schedule,
+)
+from repro.models import Model, moe, stack
+
+N_V = 4  # virtual fabric ranks
+
+
+def _plans(n_layers: int, seed: int = 0, scale: float = 500.0):
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n_layers):
+        m = rng.random((N_V, N_V)) * scale
+        np.fill_diagonal(m, 0)
+        out.append(plan_schedule(decompose(m, "maxweight")))
+    return out
+
+
+def _moe_cfg(n_layers: int = 3, dispatch: str = "scheduled", **moe_kw):
+    return ModelConfig(
+        name="tbl-test",
+        family="moe",
+        n_layers=n_layers,
+        d_model=32,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=64,
+        vocab_size=128,
+        moe=MoECfg(
+            n_experts=8, top_k=2, d_ff_expert=32, dispatch=dispatch, **moe_kw
+        ),
+        remat="none",
+    )
+
+
+class TestScheduleTable:
+    def test_roundtrip_and_padding(self):
+        scheds = _plans(3)
+        t = ScheduleTable.from_schedules(scheds, k_max=N_V)
+        assert (t.num_layers, t.k_max, t.n) == (3, N_V, N_V)
+        for l, s in enumerate(scheds):
+            k = s.num_phases
+            assert int(t.n_phases[l]) == k
+            np.testing.assert_array_equal(np.asarray(t.perms[l, :k]), s.perms)
+            np.testing.assert_array_equal(np.asarray(t.caps[l, :k]), s.caps)
+            np.testing.assert_array_equal(np.asarray(t.valid[l, :k]), s.valid)
+            # padding: invalid everywhere, zero caps
+            assert not np.asarray(t.valid[l, k:]).any()
+            assert not np.asarray(t.caps[l, k:]).any()
+
+    def test_clip_raises_without_flag(self):
+        scheds = _plans(2)
+        k = max(s.num_phases for s in scheds)
+        assert k > 1
+        with pytest.raises(ValueError, match="clip"):
+            ScheduleTable.from_schedules(scheds, k_max=1)
+        t = ScheduleTable.from_schedules(scheds, k_max=1, clip=True)
+        assert t.k_max == 1 and int(t.n_phases.max()) == 1
+
+    def test_update_preserves_shapes_and_checks_layers(self):
+        t = ScheduleTable.from_schedules(_plans(3), k_max=N_V)
+        t2 = t.update(_plans(3, seed=1))
+        assert all(
+            a.shape == b.shape
+            for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(t2))
+        )
+        with pytest.raises(ValueError, match="layers"):
+            t.update(_plans(2))
+
+    def test_pair_caps_matches_host_oracle(self):
+        for e_local in (1, 2):
+            for s in _plans(3, seed=2):
+                row = ScheduleTable.from_schedules([s]).row(0)
+                got = np.asarray(row.pair_caps(e_local))
+                per_expert = -(-s.caps.astype(np.int64) // e_local)
+                per_expert = np.maximum(8, -(-per_expert // 8) * 8)
+                want = s.cap_matrix(caps=per_expert)
+                np.testing.assert_array_equal(got, want)
+
+    def test_row_slicing_traced(self):
+        t = ScheduleTable.from_schedules(_plans(3))
+        f = jax.jit(lambda tbl, l: tbl.row(l).caps)
+        np.testing.assert_array_equal(
+            np.asarray(f(t, jnp.int32(2))), np.asarray(t.caps[2])
+        )
+
+    def test_static_sequences_rejected(self):
+        scheds = _plans(2)
+        with pytest.raises(TypeError, match="ScheduleTable"):
+            Model(_moe_cfg(), tuple(scheds))
+        cfg = _moe_cfg(n_layers=2)
+        with pytest.raises(TypeError, match="ScheduleTable"):
+            stack.stack_train({}, cfg, jnp.zeros((1, 4, 32)), list(scheds))
+
+    def test_moe_apply_rejects_full_table(self):
+        cfg = _moe_cfg()
+        t = ScheduleTable.from_schedules(_plans(3))
+        params = moe.moe_init(jax.random.PRNGKey(0), cfg)
+        with pytest.raises(ValueError, match="row"):
+            moe.moe_apply(params, cfg, jnp.zeros((1, 4, 32)), schedule=t)
+
+
+class TestScanUnrollParity:
+    """Per-layer tables through ``lax.scan`` == the unrolled oracle, on
+    the seed MoE configs (distinct plans per layer)."""
+
+    @pytest.mark.parametrize(
+        "arch", ["mixtral-8x7b", "qwen3-moe-235b-a22b"]
+    )
+    def test_seed_config_parity(self, arch):
+        cfg = smoke_config(arch)
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, dispatch="scheduled")
+        )
+        model = Model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        table = ScheduleTable.from_schedules(
+            _plans(model.n_moe_layers, scale=50.0), k_max=N_V, clip=True
+        )
+        x = jax.random.normal(
+            jax.random.PRNGKey(1), (2, 16, cfg.d_model), jnp.float32
+        )
+        y_scan, st_scan = stack.stack_train(
+            params["stack"], cfg, x, table, collect_stats=True
+        )
+        y_unroll, st_unroll = stack.stack_train(
+            params["stack"], cfg, x, table, collect_stats=True, unroll=True
+        )
+        np.testing.assert_allclose(
+            np.asarray(y_scan), np.asarray(y_unroll), atol=1e-5, rtol=1e-5
+        )
+        np.testing.assert_allclose(np.asarray(st_scan), np.asarray(st_unroll))
+
+    def test_tight_caps_still_match(self):
+        """Parity must hold when the plan actually clips tokens (the
+        admission mask is layer-dependent data riding the scan)."""
+        cfg = _moe_cfg(n_layers=4)
+        model = Model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        table = ScheduleTable.from_schedules(
+            [
+                plan_schedule(
+                    decompose(m, "maxweight"), min_cap=1, quantum=1
+                )
+                for m in (
+                    np.where(np.eye(N_V, dtype=bool), 0, r)
+                    for r in np.random.default_rng(3).random((4, N_V, N_V))
+                )
+            ],
+            k_max=N_V,
+            clip=True,
+        )
+        x = jax.random.normal(
+            jax.random.PRNGKey(2), (4, 64, cfg.d_model), jnp.float32
+        )
+        y_scan = stack.stack_train(params["stack"], cfg, x, table)
+        y_unroll = stack.stack_train(
+            params["stack"], cfg, x, table, unroll=True
+        )
+        np.testing.assert_allclose(
+            np.asarray(y_scan), np.asarray(y_unroll), atol=1e-5, rtol=1e-5
+        )
+        # and the plan is actually binding: generous caps change the output
+        y_free = stack.stack_train(params["stack"], cfg, x, None)
+        assert not np.allclose(
+            np.asarray(y_scan), np.asarray(y_free), atol=1e-5
+        )
+
+
+class TestPrefillDecodeParity:
+    def test_prefill_and_decode_match_forward(self, monkeypatch):
+        """Distinct per-layer schedules on the serving paths: prefill
+        logits == training-stack forward logits at the last prompt
+        position, and one decode step == forward on the extended
+        sequence.  f32 compute/caches (test_archs convention) so any
+        mismatch is a logic bug, not bf16 rounding; generous capacity so
+        no tokens drop (capacity dropping is batch-dependent by design —
+        a decode token competes with 1 step's tokens, a forward token
+        with the whole sequence)."""
+        import repro.models.layers as layers
+
+        monkeypatch.setattr(layers, "COMPUTE_DTYPE", jnp.float32)
+        cfg = _moe_cfg(n_layers=3, capacity_factor=8.0)
+        model = Model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        table = ScheduleTable.from_schedules(_plans(3, seed=4))
+        tokens = jax.random.randint(
+            jax.random.PRNGKey(5), (2, 12), 0, cfg.vocab_size
+        )
+        logits_fwd = model.forward(params, tokens, schedule=table)
+
+        caches = model.init_cache(2, 16, jnp.float32)
+        logits_pre, caches = model.prefill(
+            params, tokens, caches, schedule=table
+        )
+        np.testing.assert_allclose(
+            np.asarray(logits_pre),
+            np.asarray(logits_fwd[:, -1]),
+            atol=1e-4,
+            rtol=1e-4,
+        )
+
+        nxt = jnp.argmax(logits_pre, axis=-1).astype(jnp.int32)
+        logits_dec, _ = model.decode_step(
+            params, nxt, caches, jnp.int32(12), schedule=table
+        )
+        ext = jnp.concatenate([tokens, nxt[:, None]], axis=1)
+        logits_fwd2 = model.forward(params, ext, schedule=table)
+        np.testing.assert_allclose(
+            np.asarray(logits_dec),
+            np.asarray(logits_fwd2[:, -1]),
+            atol=1e-4,
+            rtol=1e-4,
+        )
+
+
+class TestVirtualFabricAdmission:
+    """Scheduled capacity semantics on one device (the controller's
+    virtual-rank convention)."""
+
+    def setup_method(self):
+        self.cfg = _moe_cfg(capacity_factor=8.0)
+        self.params = moe.moe_init(jax.random.PRNGKey(0), self.cfg)
+        self.x = jax.random.normal(
+            jax.random.PRNGKey(1), (8, 64, 32), jnp.float32
+        )
+
+    def test_generous_plan_equals_dense(self):
+        traffic = np.full((N_V, N_V), 1000.0)
+        np.fill_diagonal(traffic, 0)
+        row = ScheduleTable.from_schedules(
+            [plan_schedule(decompose(traffic, "maxweight"))]
+        ).row(0)
+        y_row = moe.moe_apply(self.params, self.cfg, self.x, schedule=row)
+        y_dense = moe._moe_dense(self.params, self.cfg, self.x)
+        np.testing.assert_allclose(
+            np.asarray(y_row), np.asarray(y_dense), atol=1e-6
+        )
+
+    def test_tight_plan_clips(self):
+        tiny = np.full((N_V, N_V), 1.0)
+        np.fill_diagonal(tiny, 0)
+        row = ScheduleTable.from_schedules(
+            [plan_schedule(decompose(tiny, "maxweight"), min_cap=1, quantum=1)]
+        ).row(0)
+        y_row = moe.moe_apply(self.params, self.cfg, self.x, schedule=row)
+        y_dense = moe._moe_dense(self.params, self.cfg, self.x)
+        assert not np.allclose(np.asarray(y_row), np.asarray(y_dense), atol=1e-6)
+
+    def test_admission_matches_shipped_prefix(self):
+        """The admission mask admits exactly the per-(pair, expert) slot
+        prefix the static ppermute path would ship."""
+        s = _plans(1, seed=6)[0]
+        row = ScheduleTable.from_schedules([s]).row(0)
+        e_local = self.cfg.moe.n_experts // N_V
+        cap = np.asarray(row.pair_caps(e_local))
+        per_expert = np.maximum(
+            8, -(--(-s.caps.astype(np.int64) // e_local) // 8) * 8
+        )
+        np.testing.assert_array_equal(cap, s.cap_matrix(caps=per_expert))
+
+
+class TestZeroRecompileSwap:
+    def test_drift_swap_zero_compiles_in_train_loop(self, tmp_path):
+        """THE tentpole regression: a drift-event schedule swap during
+        scheduled-dispatch training performs zero recompiles — the
+        re-planned table enters the same executable."""
+        from repro.data import DataConfig
+        from repro.train import TrainLoopConfig, train_loop
+
+        cfg = _moe_cfg(n_layers=2)
+        model = Model(cfg)
+        rt = ScheduleRuntime(
+            ControllerConfig(
+                n_ranks=N_V, n_experts=8, ema=1.0, cooldown=2
+            ),
+            model.n_moe_layers,
+        )
+        tokens = 8 * 32 * 2
+        rt.prime(np.full((N_V, N_V), tokens / N_V**2))
+        base = np.linspace(1.0, 2.0, 8)
+        base /= base.sum()
+        shift_at = 6
+
+        def drift_hook(step, stats):
+            probs = base if step < shift_at else base[::-1] ** 4 / (
+                (base[::-1] ** 4).sum()
+            )
+            totals = stats.sum(axis=(1, 2), keepdims=True)
+            return np.broadcast_to(probs[None, None, :], stats.shape) * totals
+
+        res = train_loop(
+            model,
+            DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=8),
+            TrainLoopConfig(
+                steps=14, ckpt_dir=str(tmp_path), ckpt_every=20,
+                peak_lr=1e-3, warmup=4, log_every=5,
+            ),
+            runtime=rt,
+            stats_hook=drift_hook,
+        )
+        ctl = res["controller"]
+        assert ctl["swaps"] >= 1, ctl  # the drift actually swapped plans
+        assert ctl["compiles"] == 0, ctl  # ...without a single recompile
+        assert np.isfinite(res["final_loss"])
+
+    def test_jit_cache_stable_across_table_updates(self):
+        cfg = _moe_cfg(n_layers=2)
+        model = Model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        tokens = jax.random.randint(
+            jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab_size
+        )
+        batch = {"tokens": tokens, "targets": tokens}
+        f = jax.jit(lambda p, b, s: model.loss(p, b, schedule=s))
+        t1 = ScheduleTable.from_schedules(_plans(2, seed=7), k_max=N_V, clip=True)
+        l1 = f(params, batch, t1)
+        t2 = t1.update(_plans(2, seed=8))
+        l2 = f(params, batch, t2)
+        assert f._cache_size() == 1
+        assert np.isfinite(float(l1)) and np.isfinite(float(l2))
+
+    def test_runtime_table_cached_per_assignment(self):
+        rt = ScheduleRuntime(
+            ControllerConfig(n_ranks=N_V, n_experts=8, ema=1.0, cooldown=0),
+            2,
+        )
+        with pytest.raises(ValueError, match="prime"):
+            rt.table()
+        rt.prime(np.full((N_V, N_V), 100.0))
+        t1 = rt.table()
+        assert rt.table() is t1  # cached while the assignment is stable
+        rt.observe(
+            np.broadcast_to(
+                np.linspace(1, 64, 8)[None, None, :] ** 3, (2, 1, 8)
+            ).copy()
+        )
+        t2 = rt.table()
+        assert t2 is not t1
+        assert all(
+            a.shape == b.shape
+            for a, b in zip(jax.tree.leaves(t1), jax.tree.leaves(t2))
+        )
+
+
+class TestGroupedLaunchInStack:
+    def test_use_pallas_grouped_matches_einsum(self, monkeypatch):
+        """The grouped single-launch kernel path (metadata prologue) must
+        match the einsum path through a full scheduled forward (f32 so
+        the comparison is kernel logic, not bf16 rounding)."""
+        import repro.models.layers as layers
+
+        monkeypatch.setattr(layers, "COMPUTE_DTYPE", jnp.float32)
+        cfg = _moe_cfg(n_layers=2)
+        cfg_p = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, use_pallas=True)
+        )
+        model, model_p = Model(cfg), Model(cfg_p)
+        params = model.init(jax.random.PRNGKey(0))
+        table = ScheduleTable.from_schedules(_plans(2, seed=9))
+        tokens = jax.random.randint(
+            jax.random.PRNGKey(2), (2, 16), 0, cfg.vocab_size
+        )
+        y = model.forward(params, tokens, schedule=table)
+        y_p = model_p.forward(params, tokens, schedule=table)
+        np.testing.assert_allclose(
+            np.asarray(y), np.asarray(y_p), atol=2e-4, rtol=2e-4
+        )
