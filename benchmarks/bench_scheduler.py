@@ -384,12 +384,84 @@ def bench_grouped_launch(reps: int = 30) -> dict:
     }
 
 
+def bench_bytes_moved() -> dict:
+    """Dark-fiber bytes per dispatch mode for one skewed MoE layer.
+
+    Derived (not timed) from the plan — the number a circuit fabric /
+    ragged all-to-all actually carries per rank per layer:
+
+    * **monolithic** — the legacy traced path: every remote pair padded
+      to the uniform bucket, and to be drop-free the bucket must cover
+      the hottest planned pair (``max(cap_uni, pair max)``, what the
+      static path does): ``(n-1) * that`` slots per rank.
+    * **phase_env** — phase-pipelined traced dispatch: per participating
+      phase, the static envelope slot size; dark pairs ship nothing.
+    * **static_ppermute** — the plan's own caps (the lower bound the
+      static path achieves by baking the plan into the executable).
+
+    The phase path gives up (envelope − caps) padding per phase relative
+    to static — the price of swap-without-recompile — but recovers the
+    bulk of the monolithic path's ``(n-1)``-pair padding.
+    """
+    from repro.core import (
+        a2a_dispatch_tokens,
+        decompose,
+        phase_dispatch_tokens,
+        phase_envelope,
+        plan_schedule,
+    )
+
+    n, d_model, dtype_bytes = 16, 4096, 2
+    tokens_per_rank = 2048
+    # heavily skewed demand (dirichlet alpha 0.05) — the regime where the
+    # paper's decomposition matters: a few hot pairs, many near-dark ones
+    rng = np.random.default_rng(7)
+    router = RouterConfig("bench-bytes", n * 4, 2)
+    regime = traffic_matrix(
+        rng, router, np.full(n, tokens_per_rank), n_ranks=n, skew_alpha=0.05
+    )
+    sched = plan_schedule(decompose(regime, "maxweight", min_fill=0.1))
+    env = phase_envelope([sched], sched.num_phases, slack=1.5)
+
+    cap_uni = max(8, -(-tokens_per_rank // n // 8) * 8)  # capacity factor 1.0
+    cap_nodrop = max(cap_uni, int(sched.pair_capacity()))
+    mono = a2a_dispatch_tokens(n, cap_nodrop)
+    phase = phase_dispatch_tokens(sched.valid, env)
+    static = phase_dispatch_tokens(sched.valid, sched.caps)
+    token_b = d_model * dtype_bytes
+    to_mb = lambda t: round(float(np.mean(t)) * token_b / 2**20, 3)
+    out = {
+        "n": n,
+        "phases": sched.num_phases,
+        "tokens_per_rank": tokens_per_rank,
+        "d_model": d_model,
+        "monolithic_mb_per_rank": to_mb(mono),
+        "phase_env_mb_per_rank": to_mb(phase),
+        "static_ppermute_mb_per_rank": to_mb(static),
+        "saving_vs_monolithic": round(
+            1.0 - float(np.mean(phase)) / mono, 3
+        ),
+        "envelope_overhead_vs_static": round(
+            float(np.mean(phase)) / max(float(np.mean(static)), 1e-9), 3
+        ),
+        "derived": True,  # modeled circuit bytes, not a wire measurement
+    }
+    assert out["phase_env_mb_per_rank"] < out["monolithic_mb_per_rank"], out
+    assert (
+        out["static_ppermute_mb_per_rank"] <= out["phase_env_mb_per_rank"]
+    ), out
+    return out
+
+
 def run() -> dict:
+    from benchmarks.bench_schema import validate_document, validate_entry
+
     results = {
         "observe_steady_state": bench_observe(),
         "maxweight_batch": bench_maxweight(),
         "controller": bench_controller(),
         "grouped_launch": bench_grouped_launch(),
+        "bytes_moved": bench_bytes_moved(),
     }
     results["meta"] = {
         "unit_note": "observe in us/step; decomposition in ms per re-plan "
@@ -410,17 +482,26 @@ def run() -> dict:
                 prior = json.load(f).get("history", [])
         except (json.JSONDecodeError, OSError):
             prior = []
-    results["history"] = prior + [
-        {
-            "timestamp": results["meta"]["timestamp"],
-            "git_sha": results["meta"]["git_sha"],
-            "tier1_tests": results["meta"]["tier1_tests"],
-            "observe_steady_state": results["observe_steady_state"],
-            "maxweight_batch": results["maxweight_batch"],
-            "controller": results["controller"],
-            "grouped_launch": results["grouped_launch"],
-        }
-    ]
+    entry = {
+        "timestamp": results["meta"]["timestamp"],
+        "git_sha": results["meta"]["git_sha"],
+        "tier1_tests": results["meta"]["tier1_tests"],
+        "observe_steady_state": results["observe_steady_state"],
+        "maxweight_batch": results["maxweight_batch"],
+        "controller": results["controller"],
+        "grouped_launch": results["grouped_launch"],
+        "bytes_moved": results["bytes_moved"],
+    }
+    # schema-gate the append BEFORE touching the file: a malformed entry
+    # must fail the bench (and CI), never corrupt the trajectory
+    errors = validate_entry(entry, "new entry", require_current=True)
+    results["history"] = prior + [entry]
+    errors += validate_document({"history": results["history"]})
+    if errors:
+        raise RuntimeError(
+            "refusing to append malformed benchmark history:\n  "
+            + "\n  ".join(errors)
+        )
     with open(OUT_PATH, "w") as f:
         json.dump(results, f, indent=2)
     obs, mw = results["observe_steady_state"], results["maxweight_batch"]
@@ -449,6 +530,13 @@ def run() -> dict:
         f"derived: meta would skip "
         f"{gl['meta_skip_fraction_at_40pct_occupancy']:.0%} of row blocks "
         f"at 40% occupancy)"
+    )
+    bm = results["bytes_moved"]
+    print(
+        f"bytes moved (n={bm['n']}, {bm['phases']} phases, derived): "
+        f"monolithic {bm['monolithic_mb_per_rank']}MB/rank -> phase-env "
+        f"{bm['phase_env_mb_per_rank']}MB ({bm['saving_vs_monolithic']:.0%} "
+        f"saved; static ppermute floor {bm['static_ppermute_mb_per_rank']}MB)"
     )
     print(f"wrote {os.path.abspath(OUT_PATH)} ({len(results['history'])} history entries)")
     return results

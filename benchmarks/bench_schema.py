@@ -1,0 +1,138 @@
+"""Schema validation for ``BENCH_scheduler.json`` — the PR-over-PR
+benchmark trajectory must stay machine-readable.
+
+The history list is append-only and consumed by trend tooling, so a
+malformed append (missing section, wrong type, NaN) should fail CI at
+the bench that produced it, not corrupt the trajectory silently.
+``bench_scheduler`` validates every entry *before* writing; CI
+additionally runs this module as a standalone check over the committed
+file (``python -m benchmarks.bench_schema [path]``, exit 1 on errors).
+
+Plain-Python validator on purpose: no jsonschema dependency in the
+container, and the spec is small enough to read.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+import sys
+
+# (key, required, allowed types).  Sections added later (bytes_moved in
+# PR 4) are optional so pre-existing history entries keep validating;
+# *new* appends are checked with require_current=True, which promotes
+# them to required.
+_ENTRY_FIELDS: list[tuple[str, bool, tuple]] = [
+    ("timestamp", True, (str,)),
+    ("git_sha", False, (str, type(None))),
+    ("tier1_tests", False, (int, type(None))),
+    ("observe_steady_state", True, (dict,)),
+    ("maxweight_batch", True, (dict,)),
+    ("controller", True, (dict,)),
+    ("grouped_launch", False, (dict,)),
+    ("bytes_moved", False, (dict,)),
+]
+
+# required numeric fields per section: the numbers the trend lines plot
+_SECTION_NUMBERS: dict[str, list[str]] = {
+    "observe_steady_state": ["seed_us_per_step", "fast_us_per_step", "speedup"],
+    "maxweight_batch": ["seed_ms", "fast_warm_ms", "speedup"],
+    "controller": ["total_us_per_step", "replan_events"],
+    "grouped_launch": ["per_phase_us", "grouped_us", "speedup"],
+    "bytes_moved": [
+        "monolithic_mb_per_rank",
+        "phase_env_mb_per_rank",
+        "static_ppermute_mb_per_rank",
+        "saving_vs_monolithic",
+    ],
+}
+
+
+def _is_number(v) -> bool:
+    return (
+        isinstance(v, (int, float))
+        and not isinstance(v, bool)
+        and math.isfinite(v)
+    )
+
+
+def validate_entry(
+    entry, where: str = "entry", *, require_current: bool = False
+) -> list[str]:
+    """Errors for one history entry ([] = valid).
+
+    ``require_current`` also demands the sections newer than the oldest
+    history format (what a freshly produced entry must carry)."""
+    errs: list[str] = []
+    if not isinstance(entry, dict):
+        return [f"{where}: not an object"]
+    for key, required, types in _ENTRY_FIELDS:
+        if key not in entry:
+            if required or require_current:
+                errs.append(f"{where}: missing required key {key!r}")
+            continue
+        if not isinstance(entry[key], types):
+            errs.append(
+                f"{where}.{key}: expected {'/'.join(t.__name__ for t in types)},"
+                f" got {type(entry[key]).__name__}"
+            )
+    for section, fields in _SECTION_NUMBERS.items():
+        sec = entry.get(section)
+        if not isinstance(sec, dict):
+            continue  # presence/type already reported above
+        for f in fields:
+            if f not in sec:
+                errs.append(f"{where}.{section}: missing {f!r}")
+            elif not _is_number(sec[f]):
+                errs.append(
+                    f"{where}.{section}.{f}: not a finite number "
+                    f"({sec[f]!r})"
+                )
+    return errs
+
+
+def validate_document(doc) -> list[str]:
+    """Errors for the whole ``BENCH_scheduler.json`` document."""
+    errs: list[str] = []
+    if not isinstance(doc, dict):
+        return ["document: not an object"]
+    hist = doc.get("history")
+    if not isinstance(hist, list) or not hist:
+        return ["document: history must be a non-empty list"]
+    for i, entry in enumerate(hist):
+        errs.extend(validate_entry(entry, where=f"history[{i}]"))
+    # timestamps must be monotone non-decreasing (append-only trajectory)
+    stamps = [
+        e.get("timestamp") for e in hist if isinstance(e, dict)
+    ]
+    if all(isinstance(s, str) for s in stamps):
+        if any(a > b for a, b in zip(stamps, stamps[1:])):
+            errs.append("history: timestamps are not non-decreasing")
+    return errs
+
+
+def main(argv: list[str]) -> int:
+    path = argv[1] if len(argv) > 1 else os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_scheduler.json",
+    )
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"FAIL: cannot parse {path}: {e}")
+        return 1
+    errs = validate_document(doc)
+    if errs:
+        print(f"FAIL: {path} has {len(errs)} schema violation(s):")
+        for e in errs:
+            print(f"  - {e}")
+        return 1
+    n = len(doc.get("history", []))
+    print(f"OK: {path} valid ({n} history entries)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -11,6 +11,11 @@ recompiled.  This smoke guards both properties:
    as a depth-2 model — one traced period body regardless of depth.
 2. **Zero-recompile swaps**: calling the jitted loss with a re-planned
    table (same shapes) must not grow the executable cache.
+3. **Phase-envelope policy** (PR 4): tables carrying a phase envelope
+   swap compile-free while plans fit the envelope (the envelope is
+   static pytree aux, so it IS the cache key), and growing the envelope
+   retraces exactly once — the one deliberate recompile of the
+   phase-pipelined dispatch path.
 
 Exit code != 0 on regression, so CI fails fast.
 
@@ -48,7 +53,7 @@ def _model(n_layers: int):
     )
 
 
-def _table(n_layers: int, n_ranks: int = 4, seed: int = 0):
+def _table(n_layers: int, n_ranks: int = 4, seed: int = 0, envelope=None):
     from repro.core import ScheduleTable, decompose, plan_schedule
 
     rng = np.random.default_rng(seed)
@@ -57,7 +62,9 @@ def _table(n_layers: int, n_ranks: int = 4, seed: int = 0):
         m = rng.random((n_ranks, n_ranks)) * 500
         np.fill_diagonal(m, 0)
         scheds.append(plan_schedule(decompose(m, "maxweight")))
-    return ScheduleTable.from_schedules(scheds, k_max=n_ranks, clip=True)
+    return ScheduleTable.from_schedules(
+        scheds, k_max=n_ranks, clip=True, envelope=envelope
+    )
 
 
 def _dots_and_whiles(model, table) -> tuple[int, int]:
@@ -105,8 +112,35 @@ def main() -> int:
     if cache != 1:
         print("FAIL: a schedule-table swap recompiled the step")
         return 1
+
+    # phase-envelope policy: swaps within the envelope reuse the
+    # executable; an envelope growth retraces exactly once
+    g = jax.jit(lambda p, b, s: model.loss(p, b, schedule=s))
+    # one shared envelope generous enough for both swap tables
+    caps = np.maximum(
+        np.asarray(_table(4, seed=1).caps).max(axis=0),
+        np.asarray(_table(4, seed=2).caps).max(axis=0),
+    )
+    env = tuple(int(-(-int(v) // 8) * 8) for v in caps)
+    g(params, batch, _table(4, seed=1, envelope=env))
+    g(params, batch, _table(4, seed=2, envelope=env))
+    # direct call on purpose: a getattr fallback would return the pass
+    # value if jax ever drops the attr, making the guard vacuous
+    cache_env = g._cache_size()
+    print(f"executable cache after in-envelope swap: {cache_env}")
+    if cache_env != 1:
+        print("FAIL: a swap within the phase envelope recompiled the step")
+        return 1
+    grown = tuple(v + 8 for v in env)
+    g(params, batch, _table(4, seed=2, envelope=grown))
+    cache_grow = g._cache_size()
+    print(f"executable cache after envelope growth: {cache_grow}")
+    if cache_grow != 2:
+        print("FAIL: an envelope growth must retrace exactly once")
+        return 1
     print("OK: depth-L scan traces one layer body; table swaps are "
-          "compile-free")
+          "compile-free (in-envelope swaps included; envelope growth "
+          "retraces once)")
     return 0
 
 

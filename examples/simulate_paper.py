@@ -145,8 +145,90 @@ def controller_under_drift(kind: str = "shift", steps: int = 60) -> None:
     )
 
 
+# ------------------------------------------------ phase-pipelined dispatch
+def phase_pipeline_report(n: int = 16, tokens_per_rank: int = 4096) -> None:
+    """Bytes-moved and makespan of the traced dispatch modes (PR 4).
+
+    Compares, per MoE layer and rank, on one skewed traffic draw:
+
+    * **monolithic** — the legacy traced path: one padded all-to-all
+      (every remote pair at the no-drop bucket), then ONE fused grouped
+      GEMM (zero comm/compute overlap).
+    * **phase-pipelined** — per-phase envelope-sized transfers feeding
+      per-phase grouped GEMM launches: phase k's compute overlaps phase
+      k+1's dispatch (3-stage flow-shop recurrence).
+    * **static ppermute** — the same pipeline at the plan's exact caps
+      (the static path's floor; what compile-freedom costs is the
+      envelope/caps gap).
+
+    Both compute models run: the knee model charges the ~250us launch
+    floor per phase — pipelining many tiny phases can LOSE to the fused
+    launch (the paper's "don't forget the compute"), which is exactly
+    why the phase envelope and the grouped kernel's block-skip metadata
+    coexist.
+    """
+    from repro.core import (
+        CommModel,
+        a2a_dispatch_tokens,
+        decompose,
+        knee_model,
+        linear_model,
+        phase_dispatch_tokens,
+        phase_envelope,
+        pipeline_makespan,
+        plan_schedule,
+    )
+    from repro.core.traffic import RouterConfig, traffic_matrix
+
+    rng = np.random.default_rng(0)
+    router = RouterConfig("sim-phase", n * 4, 2)
+    traffic = traffic_matrix(
+        rng, router, np.full(n, tokens_per_rank), n_ranks=n, skew_alpha=0.05
+    )
+    sched = plan_schedule(decompose(traffic, "maxweight", min_fill=0.1))
+    env = phase_envelope([sched], sched.num_phases, slack=1.5)
+    comm = CommModel.from_hardware(link_gbps=400, d_model=4096)
+    cap_uni = max(8, -(-tokens_per_rank // n // 8) * 8)
+    cap_nodrop = max(cap_uni, int(sched.pair_capacity()))
+
+    token_mb = 4096 * 2 / 2**20
+    rows = []
+    for name, caps in (("phase-pipelined", env), ("static ppermute", sched.caps)):
+        per_rank = float(np.mean(phase_dispatch_tokens(sched.valid, caps)))
+        d_us = comm.comm_us(np.asarray(caps, dtype=float))
+        for cname, cm in (("knee", knee_model()), ("linear", linear_model())):
+            c_us = cm(np.asarray(caps, dtype=float))
+            piped, serial = pipeline_makespan(d_us, c_us, d_us)
+            rows.append((name, cname, per_rank * token_mb, piped, serial))
+    mono_tokens = a2a_dispatch_tokens(n, cap_nodrop)
+    for cname, cm in (("knee", knee_model()), ("linear", linear_model())):
+        piped, serial = pipeline_makespan(
+            np.array([comm.comm_us(float(mono_tokens))]),
+            np.array([cm(float(mono_tokens))]),
+            np.array([comm.comm_us(float(mono_tokens))]),
+        )
+        rows.append(("monolithic a2a", cname, mono_tokens * token_mb, piped, serial))
+
+    print(
+        f"\n=== phase-pipelined traced dispatch (n={n}, "
+        f"{sched.num_phases} phases, skewed draw) — per rank per layer ==="
+    )
+    print(
+        f"{'mode':<18}{'compute':>8}{'MB moved':>10}"
+        f"{'pipelined us':>14}{'serialized us':>15}"
+    )
+    for name, cname, mb, piped, serial in rows:
+        print(f"{name:<18}{cname:>8}{mb:>10.1f}{piped:>14.0f}{serial:>15.0f}")
+    print(
+        "-> the envelope recovers most of the monolithic padding bytes; "
+        "overlap hides dispatch behind compute, but the knee's per-launch "
+        "floor taxes many tiny phases — size k_max/envelope with both in view"
+    )
+
+
 def main() -> None:
     figures_3_and_4()
+    phase_pipeline_report()
     for kind in ("shift", "hotspot", "skew"):
         controller_under_drift(kind)
 

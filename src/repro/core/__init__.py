@@ -15,9 +15,12 @@ from repro.core.bvn import bvn_coefficients, bvn_decompose, bvn_decompose_batch
 from repro.core.cost_models import (
     CommModel,
     ComputeModel,
+    a2a_dispatch_tokens,
     fit_knee,
     knee_model,
     linear_model,
+    phase_dispatch_tokens,
+    pipeline_makespan,
 )
 from repro.core.decompose import STRATEGIES, decompose, decompose_batch
 from repro.core.drift import DRIFT_KINDS, DriftScenario
@@ -42,6 +45,7 @@ from repro.core.schedule import (
     A2ASchedule,
     ScheduleTable,
     order_phases,
+    phase_envelope,
     plan_schedule,
     ring_schedule,
 )
@@ -77,6 +81,7 @@ __all__ = [
     "StackedPhases",
     "WORKLOADS",
     "WarmState",
+    "a2a_dispatch_tokens",
     "bvn_coefficients",
     "bvn_decompose",
     "bvn_decompose_batch",
@@ -92,6 +97,9 @@ __all__ = [
     "maxweight_decompose",
     "maxweight_decompose_batch",
     "order_phases",
+    "phase_dispatch_tokens",
+    "phase_envelope",
+    "pipeline_makespan",
     "plan_schedule",
     "ring_a2a_tokens",
     "ring_schedule",

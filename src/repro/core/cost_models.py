@@ -26,7 +26,16 @@ import dataclasses
 
 import numpy as np
 
-__all__ = ["ComputeModel", "knee_model", "linear_model", "fit_knee", "CommModel"]
+__all__ = [
+    "ComputeModel",
+    "knee_model",
+    "linear_model",
+    "fit_knee",
+    "CommModel",
+    "a2a_dispatch_tokens",
+    "phase_dispatch_tokens",
+    "pipeline_makespan",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -114,3 +123,74 @@ class CommModel:
         t = np.asarray(tokens, dtype=np.float64)
         out = t / self.tokens_per_us
         return float(out) if out.ndim == 0 else out
+
+
+# --------------------------------------------------- dispatch byte accounting
+def a2a_dispatch_tokens(n: int, cap_slots: int) -> int:
+    """Per-rank token *slots* a monolithic padded all-to-all ships.
+
+    Every remote pair gets a full ``cap_slots`` bucket regardless of
+    planned traffic — ``(n - 1) * cap_slots`` slots cross the fabric per
+    rank.  This is the traced path's legacy cost (and its dark-fiber
+    waste: padding bytes ride circuits the plan left idle).  Multiply by
+    ``d_model * dtype_bytes`` for bytes.
+    """
+    return (n - 1) * int(cap_slots)
+
+
+def phase_dispatch_tokens(valid: np.ndarray, caps: np.ndarray) -> np.ndarray:
+    """Per-rank token slots phase-major dispatch ships.  [n] int64.
+
+    ``valid``: [K, n] phase participation; ``caps``: [K] per-pair slot
+    sizes (planned caps for the static ppermute path, envelope slot sizes
+    for the pipelined traced path).  A rank pays only the phases it
+    participates in — dark pairs ship nothing, which is exactly the
+    circuit-bytes saving the decomposition exists for.  (The CPU/ICI
+    *emulation* of a traced phase rides a dense all_to_all with one live
+    slot; on a circuit fabric or with a ragged all-to-all only these
+    bytes cross, so this is the number the bench tracks.)
+    """
+    v = np.asarray(valid, dtype=bool)
+    c = np.asarray(caps, dtype=np.int64)
+    return (v * c[:, None]).sum(axis=0)
+
+
+def pipeline_makespan(
+    dispatch_us: np.ndarray,
+    compute_us: np.ndarray,
+    combine_us: np.ndarray | None = None,
+) -> tuple[float, float]:
+    """(pipelined, serialized) makespan of a dispatch-compute-combine
+    phase chain, in us.
+
+    Pipelined: the paper's overlap model — phase k's compute starts when
+    both its dispatch and phase k-1's compute are done (one dispatch
+    channel, one compute engine, one combine channel; the classic 3-stage
+    flow shop):
+
+        d_k = d_{k-1} + dispatch_k
+        c_k = max(c_{k-1}, d_k) + compute_k
+        b_k = max(b_{k-1}, c_k) + combine_k
+
+    Serialized: the same phases with zero overlap (all dispatch, then all
+    compute, then all combine) — the monolithic/fused extreme is the
+    special case of a single phase holding the totals.  The gap between
+    the two is what phase-pipelining buys; the knee compute model (250us
+    floor per launch) is what it *costs* at small phase batches — the
+    paper's "don't forget the compute" tension, now queryable.
+    """
+    d = np.asarray(dispatch_us, dtype=np.float64)
+    c = np.asarray(compute_us, dtype=np.float64)
+    b = (
+        np.zeros_like(d)
+        if combine_us is None
+        else np.asarray(combine_us, dtype=np.float64)
+    )
+    d_done = np.cumsum(d)
+    c_done = 0.0
+    b_done = 0.0
+    for k in range(len(d)):
+        c_done = max(c_done, d_done[k]) + c[k]
+        b_done = max(b_done, c_done) + b[k]
+    serialized = float(d.sum() + c.sum() + b.sum())
+    return float(b_done), serialized

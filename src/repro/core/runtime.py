@@ -40,7 +40,7 @@ import numpy as np
 
 from repro.core.decompose import decompose_batch
 from repro.core.maxweight import WarmState, warm_state_of
-from repro.core.schedule import ScheduleTable, plan_schedule
+from repro.core.schedule import ScheduleTable, phase_envelope, plan_schedule
 from repro.core.selector import (
     DEFAULT_PLAN_KWARGS,
     Proposal,
@@ -81,6 +81,13 @@ class ControllerConfig:
         is a recompile — so plans with more phases are clipped to their
         heaviest ``k_max`` (counted in ``phase_clips``).  Default:
         ``n_ranks`` (a full 1-factorization's worth of slots).
+      envelope_slack: headroom multiplier on the phase envelope the
+        runtime derives from its plans (the static per-phase buffer bound
+        of phase-pipelined dispatch).  The envelope only ever *grows*,
+        and each growth is a recompile (``envelope_growths``) — slack
+        buys re-plans that land inside the current envelope, at the cost
+        of proportionally padded phase buffers.  0 disables the envelope
+        entirely (legacy monolithic dispatch).
     """
 
     n_ranks: int
@@ -95,6 +102,7 @@ class ControllerConfig:
     plan_kwargs: dict | None = None
     max_library: int = 16
     k_max: int | None = None
+    envelope_slack: float = 1.5
 
     def __post_init__(self):
         if self.n_experts % self.n_ranks:
@@ -176,6 +184,7 @@ class ScheduleRuntime:
                 cooldown=cfg.cooldown,
                 plan_kwargs=cfg.plan_kwargs,
                 max_library=cfg.max_library,
+                on_evict=self._on_evict,
             )
             for _ in self.groups
         ]
@@ -192,6 +201,11 @@ class ScheduleRuntime:
         self._table: ScheduleTable | None = None
         self._table_key: tuple | None = None
         self._clipped_entries: set[str] = set()
+        # phase envelope: the static per-phase buffer bound of the
+        # phase-pipelined dispatch.  Monotone: it only grows (each growth
+        # invalidates the executable — counted), so swaps whose plans fit
+        # stay compile-free.  None until the first table build.
+        self._envelope: np.ndarray | None = None
         # counters / telemetry
         self.steps = 0
         self.replan_events = 0
@@ -199,9 +213,18 @@ class ScheduleRuntime:
         self.warm_hits = 0
         self.cold_plans = 0
         self.phase_clips = 0  # plans that exceeded the k_max slot budget
+        self.envelope_growths = 0  # envelope grew => deliberate recompile
+        self.admitted_dropped = 0.0  # plan-admitted tokens cut at grouping
         self.observe_s = 0.0  # cumulative host time inside observe()
         self.replan_s = 0.0  # cumulative host time inside re-plan events
         self.last_event: dict | None = None
+
+    def _on_evict(self, entry) -> None:
+        """Selector LRU eviction hook: forget the entry's clipped-plan
+        mark, so a plan later re-registered under a reused name is
+        re-counted instead of silently skipped (``phase_clips`` would
+        otherwise drift low over long runs)."""
+        self._clipped_entries.discard(entry.name)
 
     # ---------------------------------------------------------------- state
     @property
@@ -226,15 +249,47 @@ class ScheduleRuntime:
             for sel in self.selectors
         )
 
+    def envelope(self) -> np.ndarray | None:
+        """The current phase envelope (token units, [k_max]), or None
+        before the first table / with ``envelope_slack == 0``."""
+        return None if self._envelope is None else self._envelope.copy()
+
+    def _fit_envelope(self, scheds) -> tuple[int, ...] | None:
+        """Grow-only envelope policy: the envelope must cover every
+        current plan's per-slot caps.  First build sizes it with
+        ``envelope_slack`` headroom; later plans that still exceed it
+        grow it (again with slack) and count an ``envelope_growth`` —
+        the ONE deliberate recompile of the traced path.  Plans always
+        *fit* afterwards, so phase-pipelined dispatch never drops an
+        admitted token."""
+        if not self.cfg.envelope_slack:
+            return None
+        # one pass over the plans: the raw (unslacked) per-slot max drives
+        # the growth test, and the slacked need derives from it directly
+        raw = phase_envelope(scheds, self._k_max, slack=1.0)
+        need = np.where(
+            raw > 0,
+            -(-np.ceil(raw * self.cfg.envelope_slack).astype(np.int64) // 8) * 8,
+            0,
+        )
+        if self._envelope is None:
+            self._envelope = need
+        elif (raw > self._envelope).any():
+            self._envelope = np.maximum(self._envelope, need)
+            self.envelope_growths += 1
+        return tuple(int(v) for v in self._envelope)
+
     def table(self) -> ScheduleTable:
         """The current per-layer plans as one fixed-shape ``ScheduleTable``
         ([L, k_max, n] leaves) — the traced step input.
 
         Cached per assignment; every rebuild has identical leaf shapes
-        (phase dim pinned at ``cfg.k_max``), so the training loop passes
-        each new table into the SAME executable: drift re-plans are
-        compile-free by construction.  Plans wider than the slot budget
-        are clipped to their heaviest ``k_max`` phases (``phase_clips``).
+        (phase dim pinned at ``cfg.k_max``) and — unless the envelope had
+        to grow — the identical static envelope, so the training loop
+        passes each new table into the SAME executable: drift re-plans
+        are compile-free by construction.  Plans wider than the slot
+        budget are clipped to their heaviest ``k_max`` phases
+        (``phase_clips``).
         """
         scheds = self.schedules
         if scheds is None:
@@ -245,7 +300,8 @@ class ScheduleRuntime:
         key = self.schedule_key
         if self._table is None or self._table_key != key:
             # count each clipped PLAN once (entries repeat across layers
-            # under group_by="model" and across rebuilds on swaps)
+            # under group_by="model" and across rebuilds on swaps; the
+            # mark is pruned when the selector evicts the entry)
             for name, sel in zip(key, self.selectors):
                 if (
                     name not in self._clipped_entries
@@ -254,8 +310,9 @@ class ScheduleRuntime:
                 ):
                     self._clipped_entries.add(name)
                     self.phase_clips += 1
+            envelope = self._fit_envelope(scheds)
             self._table = ScheduleTable.from_schedules(
-                scheds, k_max=self._k_max, clip=True
+                scheds, k_max=self._k_max, clip=True, envelope=envelope
             )
             self._table_key = key
         return self._table
@@ -266,9 +323,20 @@ class ScheduleRuntime:
         return self._smoothed[self.groups[gi]].mean(axis=0)
 
     # -------------------------------------------------------------- observe
-    def observe(self, stats: np.ndarray) -> Decision:
-        """Feed one step's realized routing counts ``[L, n_src, E]``."""
+    def observe(self, stats, dropped: np.ndarray | None = None) -> Decision:
+        """Feed one step's realized routing counts ``[L, n_src, E]``.
+
+        ``stats`` may also be the MoE stats pytree the forward emits
+        (``{"routing": ..., "dropped": ...}``); ``dropped`` (any shape,
+        summed) accumulates into ``admitted_dropped`` — the
+        plan-admitted-but-cut token counter ``metrics()`` surfaces."""
         t0 = time.perf_counter()
+        if isinstance(stats, dict):
+            if dropped is None:
+                dropped = stats.get("dropped")
+            stats = stats["routing"]
+        if dropped is not None:
+            self.admitted_dropped += float(np.asarray(dropped).sum())
         mats = routing_to_traffic(
             stats, n_ranks=self.cfg.n_ranks, n_experts=self.cfg.n_experts
         )
@@ -417,5 +485,23 @@ class ScheduleRuntime:
                 round(self.replan_s / self.replan_events * 1e3, 3)
                 if self.replan_events
                 else 0.0
+            ),
+        }
+
+    def metrics(self) -> dict:
+        """``summary()`` plus the dispatch-health telemetry: the
+        plan-admitted-but-dropped token count (nonzero = the executing
+        path cut tokens the schedule promised — the monolithic path's
+        over-promise divergence, observable instead of silent), the
+        phase envelope state, and how often growing it forced the one
+        deliberate recompile."""
+        return {
+            **self.summary(),
+            "admitted_dropped": self.admitted_dropped,
+            "envelope_growths": self.envelope_growths,
+            "envelope": (
+                None
+                if self._envelope is None
+                else [int(v) for v in self._envelope]
             ),
         }

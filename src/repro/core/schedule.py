@@ -28,6 +28,7 @@ __all__ = [
     "order_phases",
     "A2ASchedule",
     "ScheduleTable",
+    "phase_envelope",
     "phase_offsets",
     "plan_schedule",
     "plan_schedule_bvn",
@@ -219,6 +220,17 @@ class ScheduleTable:
     table without recompiling — same shapes, same executable, and (c) be
     sliced per layer *inside* a trace (``row(l)`` works with a traced
     ``l``).  A sliced row keeps this class (leaves lose the leading L dim).
+
+    ``envelope`` is the table's *static* per-phase-slot capacity bound
+    (token units, same as ``caps``; ``None`` = no bound): phase slot ``k``
+    of any plan swapped into this table is promised at most
+    ``envelope[k]`` tokens per pair.  It is pytree **aux data**, so it is
+    part of the executable's cache key — the phase-pipelined dispatch
+    sizes its per-phase buffers from it, plans swap freely *within* the
+    envelope (same aux, same executable), and growing the envelope is the
+    one deliberate recompile (``ScheduleRuntime`` owns that policy).
+    Plans whose caps exceed the envelope are clamped by the admission
+    mask (``phase_slot_caps``), never silently dropped at grouping.
     """
 
     perms: jax.Array
@@ -226,18 +238,18 @@ class ScheduleTable:
     valid: jax.Array
     offsets: jax.Array
     n_phases: jax.Array
+    envelope: tuple[int, ...] | None = None
 
     # ------------------------------------------------------------- pytree
     def tree_flatten(self):
         return (
             (self.perms, self.caps, self.valid, self.offsets, self.n_phases),
-            None,
+            self.envelope,
         )
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        del aux
-        return cls(*children)
+        return cls(*children, envelope=aux)
 
     # ------------------------------------------------------------- shapes
     @property
@@ -267,6 +279,7 @@ class ScheduleTable:
         *,
         k_max: int | None = None,
         clip: bool = False,
+        envelope=None,
     ) -> "ScheduleTable":
         """Stack per-layer ``A2ASchedule`` plans into one padded table.
 
@@ -275,6 +288,13 @@ class ScheduleTable:
         ``clip`` — then its lightest trailing phases are dropped
         (max-weight orders phases by descending weight, so clipping sheds
         the least traffic; the dropped demand shows up as planned drops).
+
+        ``envelope`` fixes the static per-phase-slot capacity bound:
+        ``"auto"`` derives it from these plans (``phase_envelope``), a
+        sequence pins it explicitly (length ``k_max``), ``None`` leaves
+        the table unbounded (the traced MoE path then falls back to the
+        monolithic padded all-to-all instead of phase-pipelined
+        dispatch).
         """
         schedules = list(schedules)
         if not schedules:
@@ -307,19 +327,35 @@ class ScheduleTable:
             if s.offsets is not None:
                 offsets[l, :k] = np.asarray(s.offsets[:k], dtype=np.int32)
             n_phases[l] = k
+        if isinstance(envelope, str):
+            if envelope != "auto":
+                raise ValueError(f"unknown envelope mode {envelope!r}")
+            envelope = phase_envelope(schedules, k_max)
+        if envelope is not None:
+            envelope = tuple(int(v) for v in np.asarray(envelope).ravel())
+            if len(envelope) != k_max:
+                raise ValueError(
+                    f"envelope has {len(envelope)} slots for k_max={k_max}"
+                )
+            if any(v < 0 for v in envelope):
+                raise ValueError("envelope entries must be >= 0")
         return cls(
             perms=jnp.asarray(perms),
             caps=jnp.asarray(caps),
             valid=jnp.asarray(valid),
             offsets=jnp.asarray(offsets),
             n_phases=jnp.asarray(n_phases),
+            envelope=envelope,
         )
 
     def update(self, schedules, *, clip: bool = True) -> "ScheduleTable":
         """Re-planned table with *identical* leaf shapes — the swap path.
 
-        Same (L, K_max, n) by construction, so passing the result to a
-        jitted step reuses the existing executable (zero recompiles)."""
+        Same (L, K_max, n) by construction and the SAME envelope (the
+        envelope is static aux: keeping it is what keeps the executable),
+        so passing the result to a jitted step reuses the existing
+        executable (zero recompiles).  New plans whose caps exceed the
+        envelope are clamped by admission, not resized."""
         schedules = list(schedules)
         if self.is_row:
             raise ValueError("update() needs the full table, not a row")
@@ -328,7 +364,7 @@ class ScheduleTable:
                 f"got {len(schedules)} schedules for {self.num_layers} layers"
             )
         return ScheduleTable.from_schedules(
-            schedules, k_max=self.k_max, clip=clip
+            schedules, k_max=self.k_max, clip=clip, envelope=self.envelope
         )
 
     # -------------------------------------------------------------- views
@@ -342,24 +378,61 @@ class ScheduleTable:
             valid=self.valid[l],
             offsets=self.offsets[l],
             n_phases=self.n_phases[l],
+            envelope=self.envelope,
         )
 
-    def pair_caps(self, e_local: int = 1, *, quantum: int = 8) -> jax.Array:
-        """Traced per-(src, dst) admitted capacity of a row, in per-expert
-        slot units: ``sum_k valid[k, i] * round8(ceil(caps[k] / e_local))``
-        scattered at ``(i, perms[k, i])``.  [n, n] int32.
+    def envelope_slots(self, e_local: int = 1, *, quantum: int = 8):
+        """Static per-phase-slot buffer sizes in per-expert slot units.
 
-        This is the traced twin of ``A2ASchedule.cap_matrix`` with the EP
-        runtime's per-expert rescale folded in — the admission mask that
-        enforces the planned schedule's capacity semantics on the traced
-        execution path."""
-        if not self.is_row:
-            raise ValueError("pair_caps operates on a row slice")
-        k_max, n = self.perms.shape
+        The phase-pipelined dispatch's buffer geometry: slot ``k`` holds
+        ``max(quantum, round_up(ceil(envelope[k] / e_local), quantum))``
+        rows per expert (0 where the envelope itself is 0 — that phase
+        slot is dark and costs neither bytes nor compute).  Python ints:
+        these are *shapes*, fixed per executable.
+        """
+        if self.envelope is None:
+            raise ValueError("table has no envelope")
+        out = []
+        for v in self.envelope:
+            if v == 0:
+                out.append(0)
+                continue
+            per_expert = -(-v // e_local)  # ceil
+            out.append(max(quantum, -(-per_expert // quantum) * quantum))
+        return tuple(int(v) for v in out)
+
+    def phase_slot_caps(self, e_local: int = 1, *, quantum: int = 8) -> jax.Array:
+        """Traced per-phase planned capacity in per-expert slot units:
+        ``round_up(ceil(caps[k] / e_local), quantum)`` (min ``quantum``),
+        clamped to the static envelope when the table carries one.
+        [K_max] int32.  The clamp is what makes phase-pipelined dispatch
+        drop-free by construction: admission and buffer sizing both read
+        these values, so every admitted token has a phase slot."""
         per_expert = -(-self.caps // e_local)  # ceil
         per_expert = jnp.maximum(
             quantum, -(-per_expert // quantum) * quantum
         ).astype(jnp.int32)
+        if self.envelope is not None:
+            env = jnp.asarray(
+                self.envelope_slots(e_local, quantum=quantum), jnp.int32
+            )
+            per_expert = jnp.minimum(per_expert, env)
+        return per_expert
+
+    def pair_caps(self, e_local: int = 1, *, quantum: int = 8) -> jax.Array:
+        """Traced per-(src, dst) admitted capacity of a row, in per-expert
+        slot units: ``sum_k valid[k, i] * phase_slot_caps[k]`` scattered at
+        ``(i, perms[k, i])``.  [n, n] int32.
+
+        This is the traced twin of ``A2ASchedule.cap_matrix`` with the EP
+        runtime's per-expert rescale folded in — the admission mask that
+        enforces the planned schedule's capacity semantics on the traced
+        execution path.  With an envelope, per-phase caps are clamped to
+        it (see ``phase_slot_caps``)."""
+        if not self.is_row:
+            raise ValueError("pair_caps operates on a row slice")
+        k_max, n = self.perms.shape
+        per_expert = self.phase_slot_caps(e_local, quantum=quantum)
         on = (jnp.arange(k_max) < self.n_phases)[:, None] & self.valid
         upd = jnp.where(on, per_expert[:, None], 0)
         src = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None, :], (k_max, n))
@@ -373,6 +446,31 @@ class ScheduleTable:
 def _round_up(x, quantum: int):
     """Ceil to a multiple of ``quantum`` (scalar int or int array)."""
     return -(-np.asarray(x) // quantum) * quantum
+
+
+def phase_envelope(
+    schedules,
+    k_max: int,
+    *,
+    slack: float = 1.0,
+    quantum: int = 8,
+) -> np.ndarray:
+    """Per-phase-slot capacity envelope covering a set of plans.
+
+    ``envelope[k] = round_up(slack * max_plans caps[k])`` (token units) —
+    the static bound ``ScheduleTable`` bakes into the executable so plans
+    can swap without recompiling as long as their phase caps fit.
+    Max-weight orders phases by descending weight, so slot ``k`` across
+    plans compares like with like; ``slack`` buys headroom against the
+    next re-plan being a little heavier (an envelope *growth* is a
+    recompile).  [k_max] int64; slots no plan uses stay 0 (dark).
+    """
+    env = np.zeros(k_max, dtype=np.int64)
+    for s in schedules:
+        k = min(s.num_phases, k_max)
+        env[:k] = np.maximum(env[:k], np.asarray(s.caps[:k], dtype=np.int64))
+    grown = _round_up(np.ceil(env * float(slack)).astype(np.int64), quantum)
+    return np.where(env > 0, grown, 0).astype(np.int64)
 
 
 def phase_offsets(

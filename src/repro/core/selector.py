@@ -137,6 +137,11 @@ class ScheduleSelector:
         the least-recently-used entry).  Floored at 2 — the current entry
         is never evicted, so a bound of 1 could not admit any
         replacement.
+      on_evict: optional callback ``fn(entry)`` fired when the LRU bound
+        evicts an entry — owners tracking per-entry state (e.g. the
+        runtime's clipped-plan set keyed by entry name) must prune it
+        here, or a plan re-registered under a reused name is silently
+        treated as already-seen and its metrics drift.
     """
 
     def __init__(
@@ -150,6 +155,7 @@ class ScheduleSelector:
         cooldown: int = 0,
         plan_kwargs: dict | None = None,
         max_library: int = 16,
+        on_evict=None,
     ):
         self.n = n
         self.strategy = strategy
@@ -161,6 +167,7 @@ class ScheduleSelector:
         self.plan_kwargs = dict(DEFAULT_PLAN_KWARGS)
         if plan_kwargs:
             self.plan_kwargs.update(plan_kwargs)
+        self.on_evict = on_evict
         self.library: list[ScheduleEntry] = []
         self.current: ScheduleEntry | None = None
         self.smoothed: np.ndarray | None = None
@@ -225,6 +232,8 @@ class ScheduleSelector:
         self._last_used.pop(id(victim), None)
         self._caps_stack = None
         self.evictions += 1
+        if self.on_evict is not None:
+            self.on_evict(victim)
 
     def _score_library(self, off: np.ndarray) -> np.ndarray:
         """Planned drop rate of every library entry in one stacked pass."""

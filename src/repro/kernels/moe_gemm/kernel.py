@@ -24,6 +24,23 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
+def _compiler_params(interpret: bool):
+    """Mosaic grid semantics: expert and row-block dims are parallel, the
+    F (accumulation) dim is sequential.  This is the double-buffer hook
+    for phase-pipelined dispatch: Mosaic pipelines block copies across
+    grid steps (fetch block k+1's VMEM tiles while block k is on the
+    MXU), so each phase's envelope-sized launch overlaps its own HBM
+    traffic — and, marked parallel, independent row blocks of the next
+    phase's launch need not serialize behind this one.  Interpret mode
+    (CPU) has no Mosaic pipeline; passing params there is a no-op risk
+    surface, so we skip it."""
+    if interpret:
+        return None
+    return pltpu.TPUCompilerParams(
+        dimension_semantics=("parallel", "parallel", "arbitrary")
+    )
+
+
 def _kernel(x_ref, wg_ref, wu_ref, wd_ref, out_ref, acc_ref, *, n_fblocks):
     fb = pl.program_id(2)
 
@@ -120,6 +137,10 @@ def moe_gemm_grouped_pallas(
         out_specs=pl.BlockSpec((1, bc, d), lambda e, i, k, m: (e, i, 0)),
         scratch_shapes=[pltpu.VMEM((bc, d), jnp.float32)],
     )
+    kwargs = {}
+    params = _compiler_params(interpret)
+    if params is not None:
+        kwargs["compiler_params"] = params
     return pl.pallas_call(
         functools.partial(
             _grouped_kernel, n_fblocks=n_fblocks, n_cblocks=n_cblocks
@@ -127,6 +148,7 @@ def moe_gemm_grouped_pallas(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((e, c, d), x.dtype),
         interpret=interpret,
+        **kwargs,
     )(block_meta, x, w_gate, w_up, w_down)
 
 
@@ -150,6 +172,10 @@ def moe_gemm_pallas(
     assert c % bc == 0 and f % bf == 0, (c, bc, f, bf)
     n_fblocks = f // bf
     grid = (e, c // bc, n_fblocks)
+    kwargs = {}
+    params = _compiler_params(interpret)
+    if params is not None:
+        kwargs["compiler_params"] = params
     return pl.pallas_call(
         functools.partial(_kernel, n_fblocks=n_fblocks),
         grid=grid,
@@ -163,4 +189,5 @@ def moe_gemm_pallas(
         out_shape=jax.ShapeDtypeStruct((e, c, d), x.dtype),
         scratch_shapes=[pltpu.VMEM((bc, d), jnp.float32)],
         interpret=interpret,
+        **kwargs,
     )(x, w_gate, w_up, w_down)

@@ -141,6 +141,29 @@ def _differentiable_grouped_kernel(block_c: int, block_f: int, interpret: bool):
     return fn
 
 
+def row_block_meta(row_valid, block_c: int):
+    """Fold an ``[E, C]`` slot-validity mask into the grouped kernel's
+    scalar-prefetch metadata: per-(expert, row-block) occupancy counts,
+    ``[E * C/block_c]`` (f32 so the custom_vjp hands back an ordinary
+    zero cotangent).
+
+    This is the *phase-block* metadata hook of the pipelined dispatch:
+    each phase's envelope-sized block carries its own occupancy table, so
+    a phase launch skips the MXU passes of row blocks the schedule left
+    dark (envelope padding), exactly like the fused launch skips
+    capacity padding.  Validity must be the explicit admitted-slot mask,
+    never the gate sign — a zero-gate admitted token still occupies its
+    row.
+    """
+    e, c = row_valid.shape
+    return (
+        row_valid.reshape(e, c // block_c, block_c)
+        .sum(axis=-1)
+        .astype(jnp.float32)
+        .ravel()
+    )
+
+
 def moe_gemm(
     x, w_gate, w_up, w_down, *,
     block_c=None, block_f=None, interpret=None, row_valid=None,
@@ -178,12 +201,7 @@ def moe_gemm(
         return moe_gemm_ref(x, w_gate, w_up, w_down)
     bc = int(min(block_c, c))
     if row_valid is not None:
-        meta = (
-            row_valid.reshape(e, c // bc, bc)
-            .sum(axis=-1)
-            .astype(jnp.float32)
-            .ravel()
-        )
+        meta = row_block_meta(row_valid, bc)
         return _differentiable_grouped_kernel(
             int(block_c), int(block_f), bool(interpret)
         )(meta, x, w_gate, w_up, w_down)

@@ -130,9 +130,11 @@ class Model:
         return self._ce(params, hidden, batch["targets"])
 
     def loss_and_stats(self, params, batch: dict, *, schedule=None):
-        """``loss`` plus per-layer realized routing counts
-        ``[n_moe_layers, n_src, E]`` — the controller loop's observation
-        (aux output; host-fetched off the critical path)."""
+        """``loss`` plus the per-layer MoE stats pytree: ``routing``
+        ``[n_moe_layers, n_src, E]`` realized counts — the controller
+        loop's observation (aux output; host-fetched off the critical
+        path) — and ``dropped`` ``[n_moe_layers, n_src]`` admitted-but-cut
+        token counts."""
         hidden, stats = self._hidden(
             params, batch["tokens"], batch.get("ext_embeds"),
             collect_stats=True, schedule=schedule,

@@ -84,13 +84,20 @@ def _router(params: dict, cfg: ModelConfig, x: jax.Array):
     return idx.astype(jnp.int32), gates
 
 
-def _group(x, key, gates, n_buckets: int, cap: int):
+def _group(x, key, gates, n_buckets: int, cap: int, admitted=None):
     """Pack tokens into per-bucket slots.
 
-    x: [T, d]; key: [T*k] bucket id per (token, choice); gates: [T*k].
+    x: [T, d]; key: [T*k] bucket id per (token, choice); gates: [T*k];
+    admitted: [T*k] bool — choices the schedule plan admits (None = all).
     Returns (buf [n_buckets, cap, d], pos [n_buckets, cap] int32 (-1 pad),
-    gate [n_buckets, cap]).  Tokens beyond a bucket's capacity are dropped
-    (standard capacity-factor semantics).
+    gate [n_buckets, cap], live [n_buckets, cap] bool).  Tokens beyond a
+    bucket's capacity are dropped (standard capacity-factor semantics).
+
+    ``live`` is the *explicit* slot-validity mask: a slot is live iff it
+    holds a real admitted token — independent of the gate value, so an
+    admitted choice whose router gate is exactly 0.0 still counts as live
+    (it must reach expert compute and the drop accounting; the old
+    ``gate > 0`` liveness inference conflated it with padding).
     """
     tk = key.shape[0]
     t = x.shape[0]
@@ -102,19 +109,44 @@ def _group(x, key, gates, n_buckets: int, cap: int):
         [jnp.zeros(1, counts.dtype), jnp.cumsum(counts)[:-1]]
     )
     rank = jnp.arange(tk) - starts[skey]
-    valid = rank < cap
-    slot = jnp.where(valid, skey * cap + rank, n_buckets * cap)
+    fits = rank < cap
+    slot = jnp.where(fits, skey * cap + rank, n_buckets * cap)
     buf = jnp.zeros((n_buckets * cap + 1, x.shape[1]), x.dtype)
     buf = buf.at[slot].set(x[token_of[order]])
     pos = jnp.full((n_buckets * cap + 1,), -1, jnp.int32)
     pos = pos.at[slot].set(token_of[order])
     gat = jnp.zeros((n_buckets * cap + 1,), jnp.float32)
     gat = gat.at[slot].set(gates[order])
+    adm = (
+        jnp.ones((tk,), bool) if admitted is None else admitted.reshape(-1)
+    )
+    liv = jnp.zeros((n_buckets * cap + 1,), bool)
+    liv = liv.at[slot].set(adm[order])
     return (
         buf[:-1].reshape(n_buckets, cap, -1),
         pos[:-1].reshape(n_buckets, cap),
         gat[:-1].reshape(n_buckets, cap),
+        liv[:-1].reshape(n_buckets, cap),
     )
+
+
+def _pack_slots(x, slot, gates, admitted, n_slots: int):
+    """Direct-slot twin of ``_group`` for precomputed slot assignments.
+
+    ``slot``: [T*k] int32 flat slot per (token, choice) — collision-free
+    for kept choices by construction (ranks are unique per bucket);
+    ``n_slots`` is the dump slot for cut choices.  Returns flat
+    (buf [n_slots, d], pos [n_slots] (-1 pad), gate [n_slots],
+    live [n_slots] bool) — ``live`` marks slots holding real *admitted*
+    tokens (explicit validity, not the gate sign)."""
+    tk = slot.shape[0]
+    t = x.shape[0]
+    token_of = jnp.arange(tk, dtype=jnp.int32) // (tk // t)
+    buf = jnp.zeros((n_slots + 1, x.shape[1]), x.dtype).at[slot].set(x[token_of])
+    pos = jnp.full((n_slots + 1,), -1, jnp.int32).at[slot].set(token_of)
+    gat = jnp.zeros((n_slots + 1,), jnp.float32).at[slot].set(gates)
+    liv = jnp.zeros((n_slots + 1,), bool).at[slot].set(admitted)
+    return buf[:-1], pos[:-1], gat[:-1], liv[:-1]
 
 
 def _ungroup(y, pos, gate, t: int):
@@ -186,18 +218,24 @@ def _admission(
     n_experts: int,
     *,
     src: jax.Array,
-) -> jax.Array:
+):
     """Enforce a traced schedule row's planned capacities on the gates.
 
     ``idx``/``gates``: [T, k] routing choices; ``src``: [T*k] source rank
     of each flattened choice (a constant inside the EP shard_map, the
     virtual-fabric fold on a single device).  A choice is *admitted* if
     its arrival rank within its (src, expert) bucket is below the pair's
-    planned per-expert capacity (``ScheduleTable.pair_caps``) — the same
-    prefix of slots the static ppermute path would ship; everything
-    beyond gets its gate zeroed, which is indistinguishable from the
-    static path returning zeros for unshipped slots.  Local (src == dst)
-    traffic never crosses the fabric and is never clipped.
+    planned per-expert capacity (``ScheduleTable.pair_caps``, clamped to
+    the table's phase envelope when it carries one) — the same prefix of
+    slots the static ppermute path would ship; everything beyond gets its
+    gate zeroed, which is indistinguishable from the static path
+    returning zeros for unshipped slots.  Local (src == dst) traffic
+    never crosses the fabric and is never clipped.
+
+    Returns ``(gates, admitted)`` — the masked gates AND the [T*k] bool
+    admission mask itself, so callers can track admitted tokens
+    explicitly (liveness and drop accounting must not be inferred from
+    the gate sign: a gate can legitimately be exactly 0.0).
     """
     n_v = row.n
     e_local = n_experts // n_v
@@ -208,7 +246,96 @@ def _admission(
     cap_flat = jnp.where(src == dst, big, cap_pair[src, dst])
     rank = _rank_in_group(src * jnp.int32(n_experts) + e_flat)
     admitted = rank < cap_flat
-    return gates * admitted.reshape(gates.shape)
+    return gates * admitted.reshape(gates.shape), admitted
+
+
+def _phase_serving(row: ScheduleTable, e_local: int, me):
+    """Rank ``me``'s phase-major serving plan from a traced schedule row.
+
+    Returns (per-phase arrays, length K_max):
+      on_k    [K] bool  — rank ``me`` participates in phase k,
+      dst_k   [K] int32 — its destination that phase (identity padding
+                          elsewhere),
+      serve   [K] int32 — per-expert slots phase k carries for the pair
+                          (``phase_slot_caps`` clamped to the envelope,
+                          zero when off),
+      cum     [K, n]    — inclusive per-destination cumulative slots,
+      cum_lo  [K, n]    — exclusive (phase start offset per destination).
+
+    ``cum[-1]`` is exactly ``pair_caps(e_local)[me]`` — admission and the
+    phase slotting read the same numbers, which is what makes the
+    pipelined path drop-free by construction (every admitted choice's
+    in-bucket rank falls inside some phase's [cum_lo, cum) window).
+    BvN-style multi-phase pairs fall out for free: their later phases
+    pick up the next slice of the pair's rank range.
+    """
+    k_max, n = row.perms.shape
+    kk = jnp.arange(k_max)
+    on_k = (kk < row.n_phases) & row.valid[:, me]
+    dst_k = row.perms[:, me]
+    serve = jnp.where(on_k, row.phase_slot_caps(e_local), 0).astype(jnp.int32)
+    serve_mat = (
+        jnp.zeros((k_max, n), jnp.int32).at[kk, dst_k].add(serve)
+    )
+    cum = jnp.cumsum(serve_mat, axis=0)
+    return on_k, dst_k, serve, cum, cum - serve_mat
+
+
+def _phase_slot_assign(
+    row: ScheduleTable,
+    e_local: int,
+    me,
+    e_flat: jax.Array,
+    rank: jax.Array,
+    *,
+    c_local: int,
+):
+    """Assign every routing choice a flat slot in the phase-major buffer.
+
+    Layout: ``[phase-0 block | ... | phase-(K-1) block | local block]``
+    where phase k's block is ``[e_local, env_k]`` slots (``env_k`` the
+    static envelope slot size) and the local block ``[e_local, c_local]``.
+    ``e_flat``: [T*k] expert ids; ``rank``: arrival rank within expert.
+
+    Returns (slot [T*k] int32 — the dump slot for cut choices, admitted
+    [T*k] bool, bases tuple of static python ints, env_slots tuple,
+    n_slots int, on_k [K] bool, dst_k [K] int32 — the serving plan, so
+    the dispatch loop doesn't recompute it).  Remote choices are admitted
+    iff their rank fits the pair's total planned (envelope-clamped)
+    slots — and then always land inside their phase block: the envelope
+    sized the buffer from the same numbers, so the monolithic path's
+    over-promise drop cannot happen.
+    """
+    env_slots = row.envelope_slots(e_local)
+    k_max, n = row.perms.shape
+    bases = []
+    off = 0
+    for ck in env_slots:
+        bases.append(off)
+        off += e_local * ck
+    s_remote = off
+    n_slots = s_remote + e_local * c_local
+    on_k, dst_k, serve, cum, cum_lo = _phase_serving(row, e_local, me)
+
+    dst = e_flat // e_local
+    le = e_flat % e_local
+    local = dst == me
+    admitted = local | (rank < cum[-1][dst])
+    # phase of a remote choice: the k whose [cum_lo, cum) window holds its
+    # rank — count the phases whose inclusive cum it has already passed
+    ph = (rank[None, :] >= cum[:, dst]).sum(axis=0)
+    ph_c = jnp.clip(ph, 0, k_max - 1)
+    base_arr = jnp.asarray(bases, jnp.int32)
+    env_arr = jnp.asarray(env_slots, jnp.int32)
+    slot_in = rank - cum_lo[ph_c, dst]
+    remote_slot = base_arr[ph_c] + le * env_arr[ph_c] + slot_in
+    local_slot = s_remote + le * c_local + rank
+    slot = jnp.where(
+        local,
+        jnp.where(rank < c_local, local_slot, n_slots),
+        jnp.where(admitted, remote_slot, n_slots),
+    ).astype(jnp.int32)
+    return slot, admitted, tuple(bases), env_slots, n_slots, on_k, dst_k
 
 
 def _ep_size() -> int:
@@ -227,6 +354,26 @@ def _routing_counts(idx: jax.Array, n_experts: int) -> jax.Array:
     return (
         jnp.zeros((n_experts,), jnp.float32).at[idx.reshape(-1)].add(1.0)
     )
+
+
+def _stats(counts: jax.Array, admitted, live) -> dict:
+    """The MoE layer's aux-stats pytree: realized routing ``counts`` plus
+    the admitted-but-cut drop counter.
+
+    ``dropped`` = choices the schedule plan admitted that grouping still
+    cut (no slot in the shape-static bucket) — the silent divergence the
+    monolithic traced path suffers when a plan over-promises the uniform
+    capacity-factor bucket; phase-pipelined dispatch drives it to zero by
+    construction (local capacity-factor overflow is still counted).  Both
+    are f32 and gradient-free."""
+    adm = jnp.asarray(admitted).sum().astype(jnp.float32)
+    packed = jnp.asarray(live).sum().astype(jnp.float32)
+    dropped = jax.lax.stop_gradient(adm - packed)
+    # match the routing counts' leading (source-shard) dims
+    return {
+        "routing": counts,
+        "dropped": dropped.reshape((1,) * (counts.ndim - 1)),
+    }
 
 
 # --------------------------------------------------------------- dense mode
@@ -250,29 +397,37 @@ def _moe_dense(
     t = b * s
     xf = x.reshape(t, d)
     idx, gates = _router(params, cfg, xf)
+    admitted = None
     if row is not None:
         tok = jnp.arange(t * m.top_k, dtype=jnp.int32) // m.top_k
         src = (tok * row.n) // t  # contiguous virtual source blocks
-        gates = _admission(idx, gates, row, m.n_experts, src=src)
+        gates, admitted = _admission(idx, gates, row, m.n_experts, src=src)
     key = idx.reshape(-1)
     cap = _round8(math.ceil(t * m.top_k / m.n_experts * m.capacity_factor))
-    buf, pos, gate = _group(xf, key, gates.reshape(-1), m.n_experts, cap)
+    buf, pos, gate, live = _group(
+        xf, key, gates.reshape(-1), m.n_experts, cap, admitted=admitted
+    )
     # capacity dim sharded over the DP axis ('fsdp'->data) so expert work
     # splits across data shards too, not just the expert axis
     buf = shard(buf, "expert", "fsdp", None)
-    # grouped-launch metadata: a slot is live iff its combine weight is
-    # nonzero (covers capacity padding AND admission-clipped slots)
+    # grouped-launch metadata: explicit slot validity (real admitted
+    # token), NOT the gate sign — a zero-gate admitted slot stays live
     y = _expert_ffn(
         params, buf, use_pallas=m.use_pallas,
-        row_valid=(gate > 0) if m.use_pallas else None,
+        row_valid=live if m.use_pallas else None,
     )
     y = shard(y, "expert", "fsdp", None)
     out = _ungroup(y, pos, gate, t)
     out = out.astype(x.dtype).reshape(b, s, d)
     if not return_stats:
         return out
-    # single source shard: [1, E]
-    return out, _routing_counts(idx, m.n_experts)[None, :]
+    # single source shard: routing [1, E], dropped [1]
+    adm = (
+        jnp.ones((t * m.top_k,), bool) if admitted is None else admitted
+    )
+    return out, _stats(
+        _routing_counts(idx, m.n_experts)[None, :], adm, live
+    )
 
 
 # ----------------------------------------------------------- EP (A2A) modes
@@ -320,8 +475,15 @@ def _moe_ep(
     if return_stats:
         # routing counts: each (batch shard, EP rank) contributes a
         # [1, 1, E] row; globally [batch_shards, n, E], summed over the
-        # batch axis outside the shard_map.
-        out_specs = (out_specs, P(batch_axes, EP_AXIS, None))
+        # batch axis outside the shard_map.  Dropped counts ride the same
+        # layout without the expert dim.
+        out_specs = (
+            out_specs,
+            {
+                "routing": P(batch_axes, EP_AXIS, None),
+                "dropped": P(batch_axes, EP_AXIS),
+            },
+        )
 
     def body(xb, wr, wg, wu, wd):
         bl, s_loc, _ = xb.shape
@@ -349,7 +511,7 @@ def _moe_ep(
                 c_max = max(cap_uni, int(per_pair.max()))
             else:
                 c_max = max(cap_uni, int(phase_caps.max()))
-        buf, pos, gate = _group(
+        buf, pos, gate, live = _group(
             x_loc, key, gates.reshape(-1), n * e_local, c_max
         )
         buf = buf.reshape(n, e_local, c_max, d)
@@ -417,7 +579,11 @@ def _moe_ep(
         out = y_loc.astype(xb.dtype).reshape(bl, s_loc, d)
         if not return_stats:
             return out
-        return out, _routing_counts(idx, m.n_experts)[None, None, :]
+        return out, _stats(
+            _routing_counts(idx, m.n_experts)[None, None, :],
+            jnp.ones((t_ep * m.top_k,), bool),  # no plan: all choices admitted
+            live,
+        )
 
     fn = shard_map_compat(
         body, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False
@@ -431,8 +597,8 @@ def _moe_ep(
     )
     if not return_stats:
         return res
-    y, counts = res
-    return y, counts.sum(axis=0)  # [n, E]
+    y, stats = res
+    return y, jax.tree.map(lambda a: a.sum(axis=0), stats)  # [n, E] / [n]
 
 
 def _moe_ep_table(
@@ -446,30 +612,45 @@ def _moe_ep_table(
     """Token-sharded EP driven by a *traced* schedule row.
 
     The row is ordinary shard_map input (replicated), so a re-planned
-    table reaches this executable without recompiling.  The planned
-    capacity semantics live in the admission mask (``_admission``); token
-    movement is one dense all-to-all over the statically sized buckets
-    (a traced plan cannot shrink buffer shapes — the dark-fiber byte
-    saving of the static ppermute path is traded for compile-freedom;
-    a TPU-native ragged all-to-all would recover it), and expert compute
-    is ONE grouped ``moe_gemm`` launch whose metadata prologue skips row
-    blocks with no admitted tokens.  The combine gates travel with the
-    tokens (an all-to-all of the [n, E_local, C] gate buffer) so the
-    receiver knows which rows are live.
+    table reaches this executable without recompiling.  Two executions,
+    chosen *statically* by whether the table carries a phase envelope:
 
-    Parity with the static path holds when every pair's planned
-    per-expert capacity fits the uniform capacity-factor bucket (the
-    shapes are fixed at trace time, so the bucket cannot grow to match a
-    hot pair the way the static path's ``c_max = max(cap_uni, per-pair
-    max)`` does): tokens the plan admits beyond the bucket are dropped
-    at grouping — the plan over-promised the capacity-factor envelope.
-    Size ``capacity_factor`` (or the planner's ``slack``) so plans stay
-    inside the bucket when exact static-path parity matters.
+    **Phase-pipelined (envelope set — the production path).**  Dispatch
+    is phase-major: the K_max phase slots are statically unrolled, phase
+    k moving a bucket sized to the static per-phase envelope
+    ``envelope_slots[k]`` (derived by the runtime from the library's max
+    planned pair capacity; growing it is the one recompile, swaps within
+    it are free).  Each received phase block enters its own grouped
+    ``moe_gemm`` launch immediately, so phase k's expert GEMM overlaps
+    phase k+1's all-to-all — the paper's dispatch-compute-combine
+    pipeline on the traced path.  Admission and buffer sizing read the
+    same envelope-clamped ``phase_slot_caps``, so **every admitted token
+    has a slot by construction**: the monolithic path's over-promise
+    drop cannot happen, and bytes moved shrink from ``(n-1) * c_uniform``
+    padded buckets to the sum of planned phase envelopes (dark pairs ship
+    nothing).  On this emulated fabric each phase rides a dense
+    ``all_to_all`` with a single live destination slot (a traced perm
+    cannot drive ``ppermute``'s static pair list); a circuit fabric / a
+    TPU ragged all-to-all carries only the live pair's bytes — the cost
+    model and the bytes-moved bench account circuit bytes.
 
-    Under 2D expert sharding the whole ``[E_local, n*C, d]`` buffer is
-    gathered over 'data' at once — the same peak memory as the ``a2a``
-    mode's 2D path, but larger than the static scheduled path's
-    per-phase gathers (which stay bounded by one phase's capacity).
+    **Monolithic (no envelope — legacy).**  One dense all-to-all over
+    uniform capacity-factor buckets; the plan clips via the admission
+    mask.  Parity with the static path holds only while every pair's
+    planned per-expert capacity fits the uniform bucket — a plan that
+    over-promises it gets admitted tokens cut at grouping.  That cut is
+    now *observable*: the stats aux counts admitted-but-dropped tokens
+    (``ScheduleRuntime.metrics()`` surfaces them).
+
+    A slot-validity mask travels with the tokens (an all-to-all of the
+    ``[n, E_local, C]`` bool buffer) so the receiver knows which rows are
+    live — explicit validity, not the combine-gate sign: an admitted
+    choice with a 0.0 router gate still reaches expert compute.
+
+    Under 2D expert sharding the phase path gathers one phase block over
+    'data' at a time (peak memory bounded by one envelope slot, like the
+    static scheduled path); the monolithic path gathers the whole
+    ``[E_local, n*C, d]`` buffer at once.
     """
     m = cfg.moe
     ar = current_rules()
@@ -499,9 +680,132 @@ def _moe_ep_table(
     )
     out_specs = P(batch_axes, EP_AXIS, None)
     if return_stats:
-        out_specs = (out_specs, P(batch_axes, EP_AXIS, None))
+        out_specs = (
+            out_specs,
+            {
+                "routing": P(batch_axes, EP_AXIS, None),
+                "dropped": P(batch_axes, EP_AXIS),
+            },
+        )
+    envelope = row.envelope  # static: selects the dispatch shape
 
-    def body(xb, wr, wg, wu, wd, r_perms, r_caps, r_valid, r_offsets, r_nph):
+    def expert_phase(wg, wu, wd, blk, live_blk):
+        """Expert FFN over one (phase or local) block [E_local, C, d];
+        under 2D sharding the gather/scatter stays bounded by the block."""
+        row_valid = live_blk if m.use_pallas else None
+        if not two_d:
+            return _expert_ffn(
+                None, blk, e_slice=(wg, wu, wd), use_pallas=m.use_pallas,
+                row_valid=row_valid,
+            )
+        gathered = jax.lax.all_gather(blk, "data", axis=1, tiled=True)
+        if row_valid is not None:
+            row_valid = jax.lax.all_gather(
+                live_blk, "data", axis=1, tiled=True
+            )
+        y_part = _expert_ffn(
+            None, gathered, e_slice=(wg, wu, wd), use_pallas=m.use_pallas,
+            row_valid=row_valid,
+        )
+        return jax.lax.psum_scatter(
+            y_part, "data", scatter_dimension=1, tiled=True
+        )
+
+    def body_phase(xb, wr, wg, wu, wd, r_perms, r_caps, r_valid, r_offsets, r_nph):
+        """Phase-major dispatch: statically unrolled over the K_max phase
+        slots (sizes are static envelope shapes; participation, targets
+        and caps stay traced row data, so swaps never recompile)."""
+        r = ScheduleTable(
+            r_perms, r_caps, r_valid, r_offsets, r_nph, envelope=envelope
+        )
+        me = jax.lax.axis_index(EP_AXIS)
+        bl, s_loc, _ = xb.shape
+        t_ep = bl * s_loc
+        x_loc = xb.reshape(t_ep, d)
+        idx, gates = _router({"router": {"w": wr}}, cfg, x_loc)
+        e_flat = idx.reshape(-1)
+        rank = _rank_in_group(e_flat)
+        # local bucket: uniform capacity-factor cap, floored at the
+        # largest envelope slot so a hot local pair never fares worse
+        # than a remote one (the static path gives local c_max too)
+        cap_uni = _round8(
+            math.ceil(t_ep * m.top_k / (n * e_local) * m.capacity_factor)
+        )
+        env_slots = r.envelope_slots(e_local)
+        c_local = max(cap_uni, max(env_slots) if env_slots else cap_uni)
+        slot, admitted, bases, env_slots, n_slots, on_k, dst_k = (
+            _phase_slot_assign(r, e_local, me, e_flat, rank, c_local=c_local)
+        )
+        gates = gates * admitted.reshape(gates.shape)
+        buf, pos, gate, live = _pack_slots(
+            x_loc, slot, gates.reshape(-1), admitted, n_slots
+        )
+        s_remote = n_slots - e_local * c_local
+
+        on_all = (jnp.arange(r.k_max) < r.n_phases)[:, None] & r.valid
+        ridx = jnp.arange(n, dtype=jnp.int32)
+        y_flat = jnp.zeros((n_slots, d), x_loc.dtype)
+        for k in range(r.k_max):
+            ck = env_slots[k]
+            if ck == 0:
+                continue  # dark phase slot: no bytes, no compute
+            lo, hi = bases[k], bases[k] + e_local * ck
+            region = buf[lo:hi].reshape(e_local, ck, d)
+            vregion = live[lo:hi].reshape(e_local, ck)
+            # one live destination slot (dst_k[k]) in an all_to_all-shaped
+            # buffer: the emulation of a circuit holding pair me->dst
+            send = (
+                jnp.zeros((n, e_local, ck, d), region.dtype)
+                .at[dst_k[k]]
+                .add(jnp.where(on_k[k], region, 0))
+            )
+            vsend = (
+                jnp.zeros((n, e_local, ck), jnp.float32)
+                .at[dst_k[k]]
+                .add(jnp.where(on_k[k], vregion.astype(jnp.float32), 0.0))
+            )
+            recv = a2a_dispatch(send, EP_AXIS)
+            vrecv = a2a_dispatch(vsend, EP_AXIS)
+            blk = recv.sum(axis=0)  # exactly one live source (or zeros)
+            vblk = vrecv.sum(axis=0) > 0
+            # phase k's GEMM: independent of phase k+1's all-to-all, so
+            # XLA overlaps the DMA with the MXU work (the pipeline)
+            y_k = expert_phase(wg, wu, wd, blk, vblk)
+            # return path: receiver j sends its processed block back to
+            # the rank that targeted it (the inverse permutation)
+            inv = (
+                jnp.zeros((n,), jnp.int32).at[r.perms[k]].set(ridx)
+            )
+            got_any = (
+                jnp.zeros((n,), jnp.int32)
+                .at[r.perms[k]]
+                .add(on_all[k].astype(jnp.int32))
+            )[me] > 0
+            back_send = (
+                jnp.zeros((n, e_local, ck, d), y_k.dtype)
+                .at[inv[me]]
+                .add(jnp.where(got_any, y_k, 0))
+            )
+            back = a2a_combine(back_send, EP_AXIS).sum(axis=0)
+            y_flat = y_flat.at[lo:hi].set(
+                jnp.where(on_k[k], back, 0).reshape(e_local * ck, d)
+            )
+        # local block: never crosses the fabric
+        lbuf = buf[s_remote:].reshape(e_local, c_local, d)
+        llive = live[s_remote:].reshape(e_local, c_local)
+        y_local = expert_phase(wg, wu, wd, lbuf, llive)
+        y_flat = y_flat.at[s_remote:].set(
+            y_local.reshape(e_local * c_local, d)
+        )
+        y_loc = _ungroup(y_flat, pos, gate, t_ep)
+        out = y_loc.astype(xb.dtype).reshape(bl, s_loc, d)
+        if not return_stats:
+            return out
+        return out, _stats(
+            _routing_counts(idx, m.n_experts)[None, None, :], admitted, live
+        )
+
+    def body_mono(xb, wr, wg, wu, wd, r_perms, r_caps, r_valid, r_offsets, r_nph):
         r = ScheduleTable(r_perms, r_caps, r_valid, r_offsets, r_nph)
         me = jax.lax.axis_index(EP_AXIS)
         bl, s_loc, _ = xb.shape
@@ -509,32 +813,33 @@ def _moe_ep_table(
         x_loc = xb.reshape(t_ep, d)
         idx, gates = _router({"router": {"w": wr}}, cfg, x_loc)
         src = jnp.full((t_ep * m.top_k,), me, jnp.int32)
-        gates = _admission(idx, gates, r, m.n_experts, src=src)
+        gates, admitted = _admission(idx, gates, r, m.n_experts, src=src)
         key = idx.reshape(-1)
         # traced plans cannot change buffer shapes: every bucket gets the
         # uniform capacity-factor cap (static), the plan clips within it
         c_max = _round8(
             math.ceil(t_ep * m.top_k / (n * e_local) * m.capacity_factor)
         )
-        buf, pos, gate = _group(
-            x_loc, key, gates.reshape(-1), n * e_local, c_max
+        buf, pos, gate, live = _group(
+            x_loc, key, gates.reshape(-1), n * e_local, c_max,
+            admitted=admitted,
         )
         buf = buf.reshape(n, e_local, c_max, d)
-        gbuf = gate.reshape(n, e_local, c_max)
+        vbuf = live.reshape(n, e_local, c_max).astype(jnp.float32)
 
         recv = a2a_dispatch(buf, EP_AXIS)  # [n(src), e_local, C, d]
-        recv_g = a2a_dispatch(gbuf, EP_AXIS)
+        recv_v = a2a_dispatch(vbuf, EP_AXIS)
         grouped = recv.transpose(1, 0, 2, 3).reshape(e_local, n * c_max, d)
-        live = recv_g.transpose(1, 0, 2).reshape(e_local, n * c_max) > 0
+        live_r = recv_v.transpose(1, 0, 2).reshape(e_local, n * c_max) > 0
 
         if not two_d:
             y = _expert_ffn(
                 None, grouped, e_slice=(wg, wu, wd), use_pallas=m.use_pallas,
-                row_valid=live if m.use_pallas else None,
+                row_valid=live_r if m.use_pallas else None,
             )
         else:
             gathered = jax.lax.all_gather(grouped, "data", axis=1, tiled=True)
-            live_g = jax.lax.all_gather(live, "data", axis=1, tiled=True)
+            live_g = jax.lax.all_gather(live_r, "data", axis=1, tiled=True)
             y_part = _expert_ffn(
                 None, gathered, e_slice=(wg, wu, wd), use_pallas=m.use_pallas,
                 row_valid=live_g if m.use_pallas else None,
@@ -549,10 +854,13 @@ def _moe_ep_table(
         out = y_loc.astype(xb.dtype).reshape(bl, s_loc, d)
         if not return_stats:
             return out
-        return out, _routing_counts(idx, m.n_experts)[None, None, :]
+        return out, _stats(
+            _routing_counts(idx, m.n_experts)[None, None, :], admitted, live
+        )
 
     fn = shard_map_compat(
-        body, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False
+        body_phase if envelope is not None else body_mono,
+        mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False,
     )
     res = fn(
         x,
@@ -568,8 +876,8 @@ def _moe_ep_table(
     )
     if not return_stats:
         return res
-    y, counts = res
-    return y, counts.sum(axis=0)  # [n, E]
+    y, stats = res
+    return y, jax.tree.map(lambda a: a.sum(axis=0), stats)  # [n, E] / [n]
 
 
 def _ep_feasible(cfg: ModelConfig, x: jax.Array) -> bool:
@@ -599,11 +907,16 @@ def moe_apply(
 ):
     """Apply the MoE FFN.  ``schedule`` is either a static ``A2ASchedule``
     (baked into the executable; ppermute phases) or a traced
-    ``ScheduleTable`` *row* (swap-without-recompile; admission mask + one
-    grouped launch).  With ``return_stats`` the layer additionally
-    returns its realized routing counts ``[n_src, E]`` (f32; one row per
+    ``ScheduleTable`` *row* (swap-without-recompile; with a phase
+    envelope the EP path runs phase-pipelined dispatch, without one the
+    legacy monolithic all-to-all + admission mask).  With
+    ``return_stats`` the layer additionally returns a stats dict:
+    ``routing`` ``[n_src, E]`` realized routing counts (f32; one row per
     EP source rank, a single row in dense mode) — the controller loop's
-    observation signal, host-fetched off the critical path."""
+    observation signal, host-fetched off the critical path — and
+    ``dropped`` ``[n_src]``, the count of plan-admitted tokens cut at
+    grouping (the over-promise divergence, zero by construction on the
+    phase-pipelined path apart from local capacity-factor overflow)."""
     m = cfg.moe
     mode = m.dispatch
     if isinstance(schedule, ScheduleTable) and not schedule.is_row:

@@ -253,7 +253,9 @@ def stack_train(
     debugging aid, not a production path.
 
     With ``collect_stats`` returns ``(x, stats)`` where stats is the
-    ``[n_moe_layers, n_src, E]`` realized routing counts in layer order.
+    per-layer MoE stats pytree in layer order: ``routing``
+    ``[n_moe_layers, n_src, E]`` realized routing counts and ``dropped``
+    ``[n_moe_layers, n_src]`` admitted-but-cut token counts.
     """
     shared, rows = _schedule_rows(schedule, cfg)
     positions = moe_positions(cfg)
@@ -286,7 +288,7 @@ def stack_train(
             stats_flat.extend(sts)
         if not collect_stats:
             return x
-        return x, jnp.stack(stats_flat)
+        return x, jax.tree.map(lambda *ls: jnp.stack(ls), *stats_flat)
 
     def scan_fn(carry, xs):
         # the scan carry is the saved (checkpointed) residual: keep it
@@ -298,10 +300,15 @@ def stack_train(
     x, stats = jax.lax.scan(scan_fn, x, (params, rows))
     if not collect_stats:
         return x
-    # stats: tuple (per MoE period position) of [n_periods, n_src, E];
-    # flatten to [n_moe_layers, n_src, E] in global layer order.
-    flat = [leaf[p] for p in range(cfg.n_periods) for leaf in stats]
-    return x, jnp.stack(flat)
+    # stats: tuple (per MoE period position) of stat pytrees with leading
+    # [n_periods, ...] leaves; flatten to [n_moe_layers, ...] leaves in
+    # global layer order.
+    flat = [
+        jax.tree.map(lambda a, p=p: a[p], st)
+        for p in range(cfg.n_periods)
+        for st in stats
+    ]
+    return x, jax.tree.map(lambda *ls: jnp.stack(ls), *flat)
 
 
 def stack_prefill(params, cfg: ModelConfig, x, caches, schedule):

@@ -168,11 +168,16 @@ def train_loop(
                 # Observe the PREVIOUS step's realized routing: its device
                 # computation already finished, so the host fetch never
                 # blocks on in-flight work (off the critical path).
-                stats = np.asarray(pending_routing, dtype=np.float64)
+                stats = np.asarray(
+                    pending_routing["routing"], dtype=np.float64
+                )
+                dropped = np.asarray(
+                    pending_routing["dropped"], dtype=np.float64
+                )
                 pending_routing = None
                 if stats_hook is not None:
                     stats = stats_hook(step, stats)
-                decision = runtime.observe(stats)
+                decision = runtime.observe(stats, dropped=dropped)
                 if decision.changed:
                     swaps += 1
                     if consumes_schedule:
@@ -192,7 +197,7 @@ def train_loop(
             )
             state = {"params": params, "opt": opt_state, "ef": ef_state}
             if runtime is not None:
-                pending_routing = metrics.pop("routing")
+                pending_routing = metrics.pop("moe_stats")
             if step >= last_failure_step:
                 # progressed past the failing step: the fault was transient
                 consecutive_failures = 0
@@ -247,7 +252,7 @@ def train_loop(
             else 0
         )
         out["controller"] = {
-            **runtime.summary(),
+            **runtime.metrics(),
             "swaps": swaps,
             "compiles": compiles,
         }

@@ -134,9 +134,11 @@ def make_train_step(
     (memory ~ 1/microbatches of activations on top of remat).
     grad_compress='ef8' applies int8 error-feedback compression to grads
     before the optimizer (see repro.optim.compression).
-    collect_routing adds the per-layer realized MoE routing counts
-    ``[n_moe_layers, n_src, E]`` to metrics as ``metrics["routing"]``
-    (summed over microbatches) — the controller loop's observation.
+    collect_routing adds the per-layer MoE stats pytree to metrics as
+    ``metrics["moe_stats"]`` (summed over microbatches): ``routing``
+    ``[n_moe_layers, n_src, E]`` realized routing counts — the controller
+    loop's observation — and ``dropped`` ``[n_moe_layers, n_src]``
+    admitted-but-cut token counts (the over-promise drop signal).
 
     The returned step takes the MoE schedule as an optional trailing
     argument: ``train_step(params, opt_state, ef_state, batch, schedule)``.
@@ -192,7 +194,7 @@ def make_train_step(
         params, opt_state, stats = optimizer.update(grads, opt_state, params)
         metrics = {"loss": loss, **stats}
         if collect_routing:
-            metrics["routing"] = aux
+            metrics["moe_stats"] = aux
         return params, opt_state, ef_state, metrics
 
     return train_step

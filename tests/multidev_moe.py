@@ -94,14 +94,18 @@ def main() -> None:
         print("OK a2a == dense")
 
         # --- EP routing stats match the host-side router replication ------
-        y_st, stats = jax.jit(
+        y_st, stats_tree = jax.jit(
             lambda p, x: moe.moe_apply(p, cfg_a2a, x, return_stats=True)
         )(params, x)
         np.testing.assert_allclose(
             np.asarray(y_st), np.asarray(y_a2a), rtol=1e-5, atol=1e-5
         )
+        stats = stats_tree["routing"]
         n_ep, e = 4, cfg.moe.n_experts
         assert stats.shape == (n_ep, e), stats.shape
+        assert stats_tree["dropped"].shape == (n_ep,)
+        # generous capacity: nothing is cut at grouping
+        assert float(np.asarray(stats_tree["dropped"]).sum()) == 0.0
         # source rank i holds sequence chunk i (the EP shard_map is
         # sequence-sharded); replicate its router on the host
         s_loc = x.shape[1] // n_ep
@@ -180,6 +184,97 @@ def main() -> None:
                 np.asarray(ga), np.asarray(gd), rtol=2e-4, atol=2e-4
             )
         print("OK grad(traced-table) == grad(dense)")
+
+        # --- over-promising plan: phase-pipelined traced dispatch -----------
+        # Concentrated routing makes the plan promise a hot pair ~2x the
+        # uniform capacity-factor bucket.  The static path grows its
+        # buckets (c_max = max(cap_uni, pair max)) and ships everything;
+        # the monolithic traced path silently cut the overflow (now it
+        # counts it); the phase-pipelined path sizes per-phase buffers
+        # from the envelope and must match the static path exactly.
+        cfg_op = make_cfg("scheduled")
+        cfg_op = dataclasses.replace(
+            cfg_op, moe=dataclasses.replace(cfg_op.moe, capacity_factor=1.0)
+        )
+        wr = np.zeros((cfg_op.d_model, cfg_op.moe.n_experts))
+        wr[:, 6], wr[:, 7] = 0.1, 0.05  # everything routes to rank 3
+        params_op = {**params, "router": {"w": jnp.asarray(wr, jnp.float32)}}
+        # batch is sharded over data=2 as well, so per-shard demand is
+        # (b/2 * s/4) * top_k — size s so one expert's demand beats the
+        # uniform bucket on every shard
+        x2 = (
+            jnp.abs(jax.random.normal(jax.random.PRNGKey(9), (4, 32, cfg_op.d_model)))
+            + 0.5
+        )
+        traffic2 = traffic_from_routing(params_op, cfg_op, x2, n=4)
+        sched_op = plan_schedule(
+            decompose(traffic2, "maxweight"), slack=1.2, quantum=8
+        )
+        t_ep2 = (x2.shape[0] // 2) * (x2.shape[1] // 4)  # per (data, model) shard
+        # uniform capacity-factor bucket (per expert), as _moe_ep_table sizes it
+        cap_uni = max(8, -(-int(np.ceil(t_ep2 * 2 / 8)) // 8) * 8)
+        per_exp = -(-sched_op.caps.astype(np.int64) // 2)  # per-expert ceil
+        per_exp = np.maximum(8, -(-per_exp // 8) * 8)
+        assert per_exp.max() > cap_uni, (
+            f"plan must over-promise the bucket ({per_exp.max()} <= {cap_uni})"
+        )
+        y_op_static = jax.jit(
+            lambda p, x: moe.moe_apply(p, cfg_op, x, schedule=sched_op)
+        )(params_op, x2)
+        tbl_env = ScheduleTable.from_schedules(
+            [sched_op], k_max=4, clip=True, envelope="auto"
+        )
+        apply_env = jax.jit(
+            lambda p, x, r: moe.moe_apply(p, cfg_op, x, schedule=r, return_stats=True)
+        )
+        y_op_phase, st_phase = apply_env(params_op, x2, tbl_env.row(0))
+        np.testing.assert_allclose(
+            np.asarray(y_op_phase), np.asarray(y_op_static), rtol=1e-5, atol=1e-5
+        )
+        assert float(np.asarray(st_phase["dropped"]).sum()) == 0.0, (
+            "phase-pipelined dispatch must not drop admitted tokens"
+        )
+        # the monolithic (no-envelope) path drops the overflow — and says so
+        tbl_mono = ScheduleTable.from_schedules([sched_op], k_max=4, clip=True)
+        y_op_mono, st_mono = jax.jit(
+            lambda p, x, r: moe.moe_apply(p, cfg_op, x, schedule=r, return_stats=True)
+        )(params_op, x2, tbl_mono.row(0))
+        assert float(np.asarray(st_mono["dropped"]).sum()) > 0.0, (
+            "monolithic over-promise cut must be observable"
+        )
+        assert not np.allclose(
+            np.asarray(y_op_mono), np.asarray(y_op_static), atol=1e-5
+        ), "monolithic path should diverge on an over-promising plan"
+        # swaps within the envelope reuse the executable
+        sched_alt = plan_schedule(
+            decompose(traffic2 * 0.7, "maxweight"), slack=1.2, quantum=8
+        )
+        tbl_alt = tbl_env.update([sched_alt])
+        apply_env(params_op, x2, tbl_alt.row(0))
+        assert apply_env._cache_size() == 1, "phase-path table swap recompiled"
+        # grads through the phase-pipelined path match the static path
+        g_phase = jax.jit(
+            jax.grad(
+                lambda p, x: (
+                    moe.moe_apply(p, cfg_op, x, schedule=tbl_env.row(0)) ** 2
+                ).sum()
+            )
+        )(params_op, x2)
+        g_static = jax.jit(
+            jax.grad(
+                lambda p, x: (moe.moe_apply(p, cfg_op, x, schedule=sched_op) ** 2).sum()
+            )
+        )(params_op, x2)
+        for ga, gs in zip(jax.tree.leaves(g_phase), jax.tree.leaves(g_static)):
+            np.testing.assert_allclose(
+                np.asarray(ga), np.asarray(gs), rtol=2e-4, atol=2e-4
+            )
+        print(
+            f"OK phase-pipelined traced dispatch == static on over-promising "
+            f"plan (pair cap {int(per_exp.max())} vs bucket {cap_uni}; "
+            f"monolithic dropped {float(np.asarray(st_mono['dropped']).sum()):.0f} "
+            f"admitted tokens, phase path 0; swap compile-free; grads match)"
+        )
 
         # --- shift schedule == a2a ------------------------------------------
         t_ep = x.shape[0] * x.shape[1] // 4

@@ -162,10 +162,15 @@ def main() -> None:
     assert ctl["replan_events"] >= 1
     assert ctl["decompose_calls"] == ctl["replan_events"]
     assert ctl["swaps"] >= 1
-    assert ctl["compiles"] == 0, ctl  # traced tables: swaps never compile
+    # traced tables: swaps never compile — the ONE permitted exception is
+    # an accounted phase-envelope growth (the shift concentrates traffic
+    # past the day-one envelope's slack here, so expect exactly that)
+    assert ctl["compiles"] == ctl["envelope_growths"], ctl
+    assert ctl["envelope_growths"] <= 1, ctl
     print(
         f"OK controller over scheduled dispatch: {ctl['replan_events']} "
-        f"re-plans, {ctl['swaps']} swaps, {ctl['compiles']} recompiles, "
+        f"re-plans, {ctl['swaps']} swaps, {ctl['compiles']} recompiles "
+        f"(= {ctl['envelope_growths']} envelope growths), "
         f"final loss {res_ctl['final_loss']:.4f}"
     )
 

@@ -257,3 +257,73 @@ class TestEndToEndDrift:
         assert np.mean(losses[-3:]) < np.mean(losses[:3]) - 0.1, losses
         post_shift = [h["loss"] for h in res["history"] if h["step"] >= shift_at]
         assert post_shift[-1] < post_shift[0], post_shift
+
+
+class TestPhaseClipAccounting:
+    """``phase_clips`` must not drift when the selector's LRU bound
+    recycles entry names (the eviction-prune satellite)."""
+
+    def _clipped_entry(self, name: str, seed: int):
+        from repro.core import ScheduleEntry, decompose, plan_schedule
+
+        rng = np.random.default_rng(seed)
+        m = rng.random((N, N)) * 400
+        np.fill_diagonal(m, 0)
+        sched = plan_schedule(decompose(m, "maxweight"))
+        assert sched.num_phases > 1  # must exceed k_max=1 to count a clip
+        return ScheduleEntry(
+            name=name, reference=m, schedule=sched
+        )
+
+    def test_reused_name_recounts_after_eviction(self):
+        rt = ScheduleRuntime(
+            ControllerConfig(
+                n_ranks=N, n_experts=E, ema=1.0, cooldown=0,
+                group_by="model", k_max=1, max_library=2,
+            ),
+            L,
+        )
+        sel = rt.selectors[0]
+        sel.register(self._clipped_entry("A", 0))
+        rt.table()
+        assert rt.phase_clips == 1
+        rt.table()
+        assert rt.phase_clips == 1  # cached/idempotent per entry
+        # LRU-evict "A" (current is never evicted, so push two more)
+        sel.register(self._clipped_entry("B", 1))
+        sel.register(self._clipped_entry("C", 2))
+        assert all(e.name != "A" for e in sel.library)
+        rt.table()
+        assert rt.phase_clips == 2  # the now-current "C" counts once
+        # re-register a fresh clipped plan under the recycled name "A":
+        # without eviction pruning this would be silently skipped
+        sel.register(self._clipped_entry("A", 3))
+        rt.table()
+        assert rt.phase_clips >= 3, "recycled name must be re-counted"
+
+
+class TestEnvelopePolicy:
+    def test_growth_is_counted_and_monotone(self):
+        rt = _runtime(envelope_slack=1.25)
+        rt.prime(np.where(np.eye(N, dtype=bool), 0.0, 100.0))
+        env1 = np.asarray(rt.table().envelope)
+        assert rt.envelope_growths == 0
+        # hard concentration: one pair carries almost everything — the
+        # re-planned caps blow past 1.25x the day-one envelope
+        hot = np.full(E, 1e-3)
+        hot[-1] = 1.0
+        rt.observe(_stats(hot / hot.sum(), tokens=64000.0))
+        env2 = np.asarray(rt.table().envelope)
+        assert rt.envelope_growths == 1
+        assert (env2 >= env1).all() and (env2 > env1).any()
+        # a mild re-plan inside the grown envelope must NOT grow again
+        rt.observe(_stats(np.linspace(1, 1.2, E), tokens=1000.0))
+        rt.table()
+        assert rt.envelope_growths == 1
+        assert rt.metrics()["envelope"] == [int(v) for v in env2]
+
+    def test_slack_zero_disables_envelope(self):
+        rt = _runtime(envelope_slack=0.0)
+        rt.prime(np.full((N, N), 50.0))
+        assert rt.table().envelope is None
+        assert rt.metrics()["envelope"] is None

@@ -158,7 +158,8 @@ class TestScanUnrollParity:
         np.testing.assert_allclose(
             np.asarray(y_scan), np.asarray(y_unroll), atol=1e-5, rtol=1e-5
         )
-        np.testing.assert_allclose(np.asarray(st_scan), np.asarray(st_unroll))
+        for a, b in zip(jax.tree.leaves(st_scan), jax.tree.leaves(st_unroll)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b))
 
     def test_tight_caps_still_match(self):
         """Parity must hold when the plan actually clips tokens (the
@@ -290,10 +291,17 @@ class TestVirtualFabricAdmission:
 
 
 class TestZeroRecompileSwap:
-    def test_drift_swap_zero_compiles_in_train_loop(self, tmp_path):
+    @pytest.mark.parametrize("envelope_slack", [0.0, 1.5])
+    def test_drift_swap_zero_compiles_in_train_loop(
+        self, tmp_path, envelope_slack
+    ):
         """THE tentpole regression: a drift-event schedule swap during
         scheduled-dispatch training performs zero recompiles — the
-        re-planned table enters the same executable."""
+        re-planned table enters the same executable.  With a phase
+        envelope (``envelope_slack > 0``) the ONE permitted exception is
+        an envelope growth, and every compile must be accounted to one
+        (``compiles == envelope_growths``); the legacy no-envelope config
+        must stay strictly compile-free."""
         from repro.data import DataConfig
         from repro.train import TrainLoopConfig, train_loop
 
@@ -301,7 +309,8 @@ class TestZeroRecompileSwap:
         model = Model(cfg)
         rt = ScheduleRuntime(
             ControllerConfig(
-                n_ranks=N_V, n_experts=8, ema=1.0, cooldown=2
+                n_ranks=N_V, n_experts=8, ema=1.0, cooldown=2,
+                envelope_slack=envelope_slack,
             ),
             model.n_moe_layers,
         )
@@ -330,7 +339,13 @@ class TestZeroRecompileSwap:
         )
         ctl = res["controller"]
         assert ctl["swaps"] >= 1, ctl  # the drift actually swapped plans
-        assert ctl["compiles"] == 0, ctl  # ...without a single recompile
+        if envelope_slack:
+            # every recompile is an accounted envelope growth, nothing else
+            assert ctl["compiles"] == ctl["envelope_growths"], ctl
+            assert ctl["envelope_growths"] <= 1, ctl
+        else:
+            assert ctl["compiles"] == 0, ctl  # strictly compile-free
+            assert ctl["envelope_growths"] == 0, ctl
         assert np.isfinite(res["final_loss"])
 
     def test_jit_cache_stable_across_table_updates(self):
