@@ -385,23 +385,29 @@ def bench_grouped_launch(reps: int = 30) -> dict:
 
 
 def bench_bytes_moved() -> dict:
-    """Dark-fiber bytes per dispatch mode for one skewed MoE layer.
+    """Dark-fiber bytes per dispatch fabric for one skewed MoE layer.
 
-    Derived (not timed) from the plan — the number a circuit fabric /
-    ragged all-to-all actually carries per rank per layer:
+    Derived (not timed) from the plan, via each registered fabric's own
+    ``dispatch_tokens`` accounting — the number its wire actually
+    carries per rank per layer:
 
-    * **monolithic** — the legacy traced path: every remote pair padded
-      to the uniform bucket, and to be drop-free the bucket must cover
-      the hottest planned pair (``max(cap_uni, pair max)``, what the
-      static path does): ``(n-1) * that`` slots per rank.
-    * **phase_env** — phase-pipelined traced dispatch: per participating
-      phase, the static envelope slot size; dark pairs ship nothing.
-    * **static_ppermute** — the plan's own caps (the lower bound the
-      static path achieves by baking the plan into the executable).
+    * **a2a** — every remote pair padded to the uniform bucket, sized
+      no-drop (``max(cap_uni, hottest planned pair)``, what the static
+      path does): ``(n-1) * that`` slots per rank.
+    * **ppermute** — the plan's own caps (the floor baking the plan into
+      the executable achieves; dark pairs ship nothing).
+    * **phase_pipelined** — what the dense *emulation* of the traced
+      phase path ships: ``(n-1) * envelope[k]`` per live phase slot (a
+      traced perm cannot drive ppermute's static pair list).
+    * **ragged_a2a** — exactly the live envelope bytes per pair (the
+      ``phase_env`` legacy metric): the ragged transfer's send/recv
+      sizes are zero on dark pairs, so the TPU wire matches what a
+      circuit fabric would carry.
+    * **dense** — zero dispatch bytes (it pays a [T, d] all-reduce
+      instead, reported separately as ``dense_allreduce_mb_per_rank``).
 
-    The phase path gives up (envelope − caps) padding per phase relative
-    to static — the price of swap-without-recompile — but recovers the
-    bulk of the monolithic path's ``(n-1)``-pair padding.
+    The legacy ``monolithic/phase_env/static_ppermute`` keys are kept so
+    the PR-over-PR trend lines stay continuous.
     """
     from repro.core import (
         a2a_dispatch_tokens,
@@ -410,6 +416,7 @@ def bench_bytes_moved() -> dict:
         phase_envelope,
         plan_schedule,
     )
+    from repro.parallel.fabric import get_fabric
 
     n, d_model, dtype_bytes = 16, 4096, 2
     tokens_per_rank = 2048
@@ -430,6 +437,19 @@ def bench_bytes_moved() -> dict:
     static = phase_dispatch_tokens(sched.valid, sched.caps)
     token_b = d_model * dtype_bytes
     to_mb = lambda t: round(float(np.mean(t)) * token_b / 2**20, 3)
+    fabric_tokens = {
+        "dense": get_fabric("dense").dispatch_tokens(n=n),
+        "a2a": get_fabric("a2a").dispatch_tokens(n=n, cap_uniform=cap_nodrop),
+        "ppermute": get_fabric("ppermute").dispatch_tokens(
+            n=n, schedule=sched
+        ),
+        "phase_pipelined": get_fabric("phase_pipelined").dispatch_tokens(
+            n=n, envelope=env
+        ),
+        "ragged_a2a": get_fabric("ragged_a2a").dispatch_tokens(
+            n=n, schedule=sched, envelope=env
+        ),
+    }
     out = {
         "n": n,
         "phases": sched.num_phases,
@@ -444,17 +464,35 @@ def bench_bytes_moved() -> dict:
         "envelope_overhead_vs_static": round(
             float(np.mean(phase)) / max(float(np.mean(static)), 1e-9), 3
         ),
+        # per-fabric rows via the registry's own accounting (schema v2)
+        "fabrics": {k: to_mb(v) for k, v in fabric_tokens.items()},
+        "dense_allreduce_mb_per_rank": round(
+            tokens_per_rank * n * token_b / 2**20, 3
+        ),
         "derived": True,  # modeled circuit bytes, not a wire measurement
     }
     assert out["phase_env_mb_per_rank"] < out["monolithic_mb_per_rank"], out
     assert (
         out["static_ppermute_mb_per_rank"] <= out["phase_env_mb_per_rank"]
     ), out
+    # acceptance: ragged_a2a == the live envelope byte count, <= the
+    # phase_pipelined dense-emulation bytes, strictly below the
+    # monolithic a2a no-drop bucket on this skewed draw
+    fx = out["fabrics"]
+    assert fx["ragged_a2a"] == out["phase_env_mb_per_rank"], out
+    assert fx["ragged_a2a"] <= fx["phase_pipelined"], out
+    assert fx["ragged_a2a"] < fx["a2a"], out
+    assert fx["a2a"] == out["monolithic_mb_per_rank"], out
+    assert fx["ppermute"] <= fx["ragged_a2a"], out
     return out
 
 
 def run() -> dict:
-    from benchmarks.bench_schema import validate_document, validate_entry
+    from benchmarks.bench_schema import (
+        SCHEMA_VERSION,
+        validate_document,
+        validate_entry,
+    )
 
     results = {
         "observe_steady_state": bench_observe(),
@@ -484,6 +522,7 @@ def run() -> dict:
             prior = []
     entry = {
         "timestamp": results["meta"]["timestamp"],
+        "schema_version": SCHEMA_VERSION,
         "git_sha": results["meta"]["git_sha"],
         "tier1_tests": results["meta"]["tier1_tests"],
         "observe_steady_state": results["observe_steady_state"],
@@ -537,6 +576,10 @@ def run() -> dict:
         f"monolithic {bm['monolithic_mb_per_rank']}MB/rank -> phase-env "
         f"{bm['phase_env_mb_per_rank']}MB ({bm['saving_vs_monolithic']:.0%} "
         f"saved; static ppermute floor {bm['static_ppermute_mb_per_rank']}MB)"
+    )
+    print(
+        "per-fabric MB/rank: "
+        + ", ".join(f"{k}={v}" for k, v in sorted(bm["fabrics"].items()))
     )
     print(f"wrote {os.path.abspath(OUT_PATH)} ({len(results['history'])} history entries)")
     return results

@@ -19,12 +19,26 @@ import math
 import os
 import sys
 
+# Schema version of a freshly produced entry.  v1: PR 1-4 layout.
+# v2 (PR 5, fabric registry): entries carry ``schema_version`` and
+# ``bytes_moved.fabrics`` — one per-rank MB row per registered dispatch
+# fabric.  Old history entries (no version field) validate as v1.
+SCHEMA_VERSION = 2
+
+# per-fabric bytes rows every v2 entry must carry (the registry's five
+# backends; listed literally so a malformed bench can't weaken the check
+# by shrinking the registry it validates against)
+_V2_FABRIC_ROWS = (
+    "dense", "a2a", "ppermute", "phase_pipelined", "ragged_a2a"
+)
+
 # (key, required, allowed types).  Sections added later (bytes_moved in
-# PR 4) are optional so pre-existing history entries keep validating;
-# *new* appends are checked with require_current=True, which promotes
-# them to required.
+# PR 4, schema_version in PR 5) are optional so pre-existing history
+# entries keep validating; *new* appends are checked with
+# require_current=True, which promotes them to required.
 _ENTRY_FIELDS: list[tuple[str, bool, tuple]] = [
     ("timestamp", True, (str,)),
+    ("schema_version", False, (int,)),
     ("git_sha", False, (str, type(None))),
     ("tier1_tests", False, (int, type(None))),
     ("observe_steady_state", True, (dict,)),
@@ -89,6 +103,40 @@ def validate_entry(
                     f"{where}.{section}.{f}: not a finite number "
                     f"({sec[f]!r})"
                 )
+    # v2: per-fabric bytes rows.  Entries that declare v2 (and every
+    # fresh append) must carry one finite MB number per backend.
+    version = entry.get("schema_version", 1)
+    if require_current and version != SCHEMA_VERSION:
+        errs.append(
+            f"{where}: new entries must declare schema_version "
+            f"{SCHEMA_VERSION} (got {version!r})"
+        )
+    if version >= 2 or require_current:
+        bm = entry.get("bytes_moved")
+        if not isinstance(bm, dict):
+            # v2 promises the section: its absence must fail, not no-op
+            errs.append(
+                f"{where}: schema v2 entries must carry a bytes_moved "
+                "object"
+            )
+        else:
+            fx = bm.get("fabrics")
+            if not isinstance(fx, dict):
+                errs.append(
+                    f"{where}.bytes_moved: v2 entries need a 'fabrics' "
+                    "object (per-fabric MB/rank rows)"
+                )
+            else:
+                for name in _V2_FABRIC_ROWS:
+                    if name not in fx:
+                        errs.append(
+                            f"{where}.bytes_moved.fabrics: missing {name!r}"
+                        )
+                    elif not _is_number(fx[name]):
+                        errs.append(
+                            f"{where}.bytes_moved.fabrics.{name}: not a "
+                            f"finite number ({fx[name]!r})"
+                        )
     return errs
 
 

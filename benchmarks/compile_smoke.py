@@ -1,21 +1,26 @@
 """Compile-count smoke: per-layer scheduled stacks must trace ONE layer
-body, not depth-many.
+body, not depth-many — for EVERY registered dispatch fabric.
 
 Array-native schedules (``core.ScheduleTable``) exist so per-layer plans
 ride ``lax.scan`` — before them, distinct per-layer ``A2ASchedule``
 objects forced the stack to unroll (HLO O(depth)) and every drift swap
-recompiled.  This smoke guards both properties:
+recompiled.  This smoke guards the properties per fabric:
 
-1. **O(period) HLO**: the lowered HLO of a depth-8 scheduled MoE model
-   must contain a while loop (the scan) and the SAME number of dot ops
-   as a depth-2 model — one traced period body regardless of depth.
-2. **Zero-recompile swaps**: calling the jitted loss with a re-planned
-   table (same shapes) must not grow the executable cache.
+1. **O(period) HLO**: for each registered fabric, the lowered HLO of a
+   depth-8 MoE model must contain a while loop (the scan) and the SAME
+   number of dot ops as a depth-2 model — one traced period body
+   regardless of depth.
+2. **Zero-recompile swaps** (asserted on ``phase_pipelined``, the traced
+   production backend): calling the jitted loss with a re-planned table
+   (same shapes) must not grow the executable cache.
 3. **Phase-envelope policy** (PR 4): tables carrying a phase envelope
    swap compile-free while plans fit the envelope (the envelope is
    static pytree aux, so it IS the cache key), and growing the envelope
    retraces exactly once — the one deliberate recompile of the
    phase-pipelined dispatch path.
+4. **Adaptive envelope shrink** (PR 5): with
+   ``ControllerConfig.envelope_decay`` a sustained-underused envelope
+   shrinks, and the shrink costs exactly the same single recompile.
 
 Exit code != 0 on regression, so CI fails fast.
 
@@ -31,13 +36,13 @@ import jax
 import numpy as np
 
 
-def _model(n_layers: int):
+def _model(n_layers: int, dispatch: str = "scheduled"):
     from repro.configs.base import ModelConfig, MoECfg
     from repro.models import Model
 
     return Model(
         ModelConfig(
-            name=f"smoke-{n_layers}",
+            name=f"smoke-{dispatch}-{n_layers}",
             family="moe",
             n_layers=n_layers,
             d_model=32,
@@ -46,7 +51,7 @@ def _model(n_layers: int):
             d_ff=64,
             vocab_size=128,
             moe=MoECfg(
-                n_experts=8, top_k=2, d_ff_expert=32, dispatch="scheduled"
+                n_experts=8, top_k=2, d_ff_expert=32, dispatch=dispatch
             ),
             remat="none",
         )
@@ -67,6 +72,20 @@ def _table(n_layers: int, n_ranks: int = 4, seed: int = 0, envelope=None):
     )
 
 
+def _schedule_for(fabric: str, n_layers: int):
+    """A schedule the fabric consumes on a single device (where mesh
+    fabrics run through the virtual dense fallback — the traced-row
+    geometry and the envelope cache-key semantics still apply)."""
+    from repro.parallel.fabric import get_fabric
+
+    if fabric in ("dense", "a2a"):
+        return None
+    if get_fabric(fabric).schedule_kind == "static":
+        return None  # static plans can't ride the scan as traced rows
+    envelope = "auto" if get_fabric(fabric).requires_envelope else None
+    return _table(n_layers, envelope=envelope)
+
+
 def _dots_and_whiles(model, table) -> tuple[int, int]:
     import jax.numpy as jnp
 
@@ -82,25 +101,46 @@ def _dots_and_whiles(model, table) -> tuple[int, int]:
 
 
 def main() -> int:
-    shallow = _dots_and_whiles(_model(2), _table(2))
-    deep = _dots_and_whiles(_model(8), _table(8))
-    print(f"depth-2: {shallow[0]} dots, {shallow[1]} while ops")
-    print(f"depth-8: {deep[0]} dots, {deep[1]} while ops")
-    if deep[1] < 1:
-        print("FAIL: depth-8 stack lowered without a scan while-loop")
-        return 1
-    if deep[0] != shallow[0]:
-        print(
-            "FAIL: dot count scales with depth "
-            f"({shallow[0]} -> {deep[0]}): the per-layer scheduled stack "
-            "is unrolling instead of scanning one layer body"
-        )
-        return 1
-
-    # zero-recompile swap: same executable across re-planned tables
-    model, table = _model(4), _table(4, seed=1)
     import jax.numpy as jnp
 
+    from repro.parallel.fabric import fabric_names
+
+    # 1. O(period) HLO for every registered fabric.  On this single
+    # device the mesh fabrics lower through the shared virtual dense
+    # fallback, so fabrics whose schedule signature matches produce the
+    # SAME lowering — lower once per signature and assert per fabric
+    # (the mesh-side scan bodies are exercised in the slow multidev
+    # lane, not here).
+    lowered: dict[tuple, tuple] = {}
+    for fabric in fabric_names():
+        sched2 = _schedule_for(fabric, 2)
+        key = (
+            sched2 is None,
+            getattr(sched2, "envelope", None) is not None,
+        )
+        if key not in lowered:
+            lowered[key] = (
+                _dots_and_whiles(_model(2, fabric), sched2),
+                _dots_and_whiles(_model(8, fabric), _schedule_for(fabric, 8)),
+            )
+        shallow, deep = lowered[key]
+        print(
+            f"[{fabric}] depth-2: {shallow[0]} dots, {shallow[1]} whiles; "
+            f"depth-8: {deep[0]} dots, {deep[1]} whiles"
+        )
+        if deep[1] < 1:
+            print(f"FAIL: [{fabric}] depth-8 lowered without a scan while")
+            return 1
+        if deep[0] != shallow[0]:
+            print(
+                f"FAIL: [{fabric}] dot count scales with depth "
+                f"({shallow[0]} -> {deep[0]}): the per-layer stack is "
+                "unrolling instead of scanning one layer body"
+            )
+            return 1
+
+    # 2. zero-recompile swap on the traced production backend
+    model, table = _model(4, "phase_pipelined"), _table(4, seed=1)
     tokens = jnp.zeros((2, 16), jnp.int32)
     batch = {"tokens": tokens, "targets": tokens}
     params = model.init(jax.random.PRNGKey(0))
@@ -113,7 +153,7 @@ def main() -> int:
         print("FAIL: a schedule-table swap recompiled the step")
         return 1
 
-    # phase-envelope policy: swaps within the envelope reuse the
+    # 3. phase-envelope policy: swaps within the envelope reuse the
     # executable; an envelope growth retraces exactly once
     g = jax.jit(lambda p, b, s: model.loss(p, b, schedule=s))
     # one shared envelope generous enough for both swap tables
@@ -138,9 +178,65 @@ def main() -> int:
     if cache_grow != 2:
         print("FAIL: an envelope growth must retrace exactly once")
         return 1
-    print("OK: depth-L scan traces one layer body; table swaps are "
-          "compile-free (in-envelope swaps included; envelope growth "
-          "retraces once)")
+
+    # 4. adaptive envelope shrink: sustained underuse shrinks the
+    # envelope and the shrink is the ONE counted recompile
+    from repro.core import ControllerConfig, ScheduleRuntime
+
+    model_s = _model(2, "phase_pipelined")
+    params_s = model_s.init(jax.random.PRNGKey(0))
+    rt = ScheduleRuntime(
+        ControllerConfig(
+            n_ranks=4, n_experts=8, ema=1.0, cooldown=0,
+            envelope_slack=1.5, envelope_decay=0.5, shrink_patience=2,
+        ),
+        2,
+    )
+    hot = np.full((4, 4), 10.0)
+    hot[:, 0] = 4000.0
+    np.fill_diagonal(hot, 0.0)
+    rt.prime(hot)
+    h = jax.jit(lambda p, b, s: model_s.loss(p, b, schedule=s))
+    h(params_s, batch, rt.table())
+    env_hot = sum(rt.table().envelope)
+    i = 0
+    while rt.metrics()["envelope_shrinks"] == 0 and i < 12:
+        probs = np.full(8, 0.01)
+        probs[[2, 4, 6, 3, 5, 7][i % 6]] = 1.0  # cooled, rotating regime
+        rt.observe(
+            np.broadcast_to(400.0 * probs / probs.sum(), (2, 1, 8))
+        )
+        rt.table()
+        i += 1
+    m = rt.metrics()
+    env_cold = sum(rt.table().envelope)
+    if m["envelope_shrinks"] != 1 or env_cold >= env_hot:
+        print(
+            f"FAIL: sustained underuse must shrink the envelope "
+            f"(shrinks={m['envelope_shrinks']}, {env_hot} -> {env_cold})"
+        )
+        return 1
+    h(params_s, batch, rt.table())
+    cache_shrink = h._cache_size()
+    print(
+        f"executable cache after envelope shrink: {cache_shrink} "
+        f"(envelope {env_hot} -> {env_cold} slots)"
+    )
+    if cache_shrink != 2:
+        print("FAIL: an envelope shrink must retrace exactly once")
+        return 1
+    h(params_s, batch, rt.table())
+    if h._cache_size() != 2:
+        print("FAIL: post-shrink tables must reuse the shrunk executable")
+        return 1
+
+    print(
+        "OK: depth-L scan traces one layer body for every fabric "
+        f"({', '.join(fabric_names())}; single-device lowering — mesh "
+        "bodies run in the slow multidev lane); table swaps are "
+        "compile-free (in-envelope swaps included; envelope growth AND "
+        "adaptive shrink each retrace once)"
+    )
     return 0
 
 

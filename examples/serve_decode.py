@@ -79,11 +79,13 @@ def main() -> None:
         "--virtual-ranks", type=int, default=8,
         help="controller fabric size when no EP mesh is active",
     )
+    from repro.parallel.fabric import fabric_names
+
     ap.add_argument(
         "--dispatch",
         default=None,
-        choices=("dense", "a2a", "scheduled"),
-        help="override the arch's MoE dispatch mode",
+        choices=(*fabric_names(), "scheduled"),
+        help="override the arch's MoE dispatch fabric",
     )
     args = ap.parse_args()
 
@@ -99,11 +101,14 @@ def main() -> None:
     runtime = scenario = None
     if args.controller:
         runtime, scenario = make_controller(cfg, args)
-    # only scheduled dispatch consumes the table (launch/serve.py
-    # convention) — other modes track controller decisions without
-    # altering the computation
-    consumes_schedule = (
-        cfg.moe is not None and cfg.moe.dispatch == "scheduled"
+    # only table-consuming fabrics take the controller's rows
+    # (launch/serve.py convention, resolved via the fabric registry;
+    # 'ppermute' bakes plans in and would reject a row) — other modes
+    # track controller decisions without altering the computation
+    from repro.parallel.fabric import consumes_table as fabric_consumes
+
+    consumes_schedule = cfg.moe is not None and fabric_consumes(
+        cfg.moe.dispatch
     )
     if consumes_schedule and runtime is None:
         # fail upfront, not inside a jit trace: scheduled dispatch has no

@@ -55,11 +55,14 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--ckpt", default="/tmp/repro_example_ckpt")
     ap.add_argument("--mesh", action="store_true", help="use all local devices")
+    from repro.parallel.fabric import fabric_names
+
     ap.add_argument(
         "--dispatch",
         default=None,
-        choices=("dense", "a2a", "scheduled"),
-        help="MoE dispatch mode (default: dense; a2a under --mesh)",
+        choices=(*fabric_names(), "scheduled"),
+        help="MoE dispatch fabric (default: dense; a2a under --mesh); "
+        "'scheduled' resolves by schedule type",
     )
     ap.add_argument(
         "--drift",
@@ -102,17 +105,40 @@ def main() -> None:
         log_every=10,
     )
 
-    runtime = stats_hook = None
-    if args.drift != "none" or dispatch == "scheduled":
-        import numpy as np
+    import numpy as np
 
+    from repro.parallel.fabric import consumes_schedule, consumes_table
+
+    # schedules execute on the mesh's EP ('model') axis when one is
+    # active; --virtual-ranks only sizes the single-device fabric
+    n_ranks = mesh.shape["model"] if mesh is not None else args.virtual_ranks
+    # one uniform demand estimate drives both the static plan and the
+    # runtime prime — the two paths must never diverge
+    tokens = args.batch * args.seq * cfg.moe.top_k
+    uniform = np.full((n_ranks, n_ranks), tokens / n_ranks**2)
+    static_schedule = None
+    if consumes_schedule(dispatch) and not consumes_table(dispatch):
+        # ppermute bakes its plan into the executable: a controller
+        # runtime cannot swap it, so drift makes no sense here — plan
+        # one static schedule from the uniform demand estimate instead
+        if args.drift != "none":
+            raise SystemExit(
+                f"--drift needs a table-consuming fabric ({dispatch!r} "
+                "bakes its plan in); use --dispatch phase_pipelined or "
+                "ragged_a2a"
+            )
+        from repro.core import decompose, plan_schedule
+
+        static_schedule = plan_schedule(
+            decompose(uniform, cfg.moe.schedule_strategy), slack=1.5
+        )
+        model = Model(cfg, static_schedule)
+        print(f"static {static_schedule.num_phases}-phase {dispatch} plan")
+
+    runtime = stats_hook = None
+    if args.drift != "none" or consumes_table(dispatch):
         from repro.core import ControllerConfig, DriftScenario, ScheduleRuntime
 
-        # schedules execute on the mesh's EP ('model') axis when one is
-        # active; --virtual-ranks only sizes the single-device fabric
-        n_ranks = (
-            mesh.shape["model"] if mesh is not None else args.virtual_ranks
-        )
         runtime = ScheduleRuntime(
             ControllerConfig(
                 n_ranks=n_ranks,
@@ -125,11 +151,8 @@ def main() -> None:
             ),
             model.n_moe_layers,
         )
-        if dispatch == "scheduled":
-            # scheduled dispatch needs a schedule before the first step:
-            # prime from a uniform demand estimate
-            tokens = args.batch * args.seq * cfg.moe.top_k
-            uniform = np.full((n_ranks, n_ranks), tokens / n_ranks**2)
+        if consumes_table(dispatch):
+            # table-consuming fabrics need a plan before the first step
             runtime.prime(uniform)
         if args.drift != "none":
             scenario = DriftScenario(
@@ -150,7 +173,7 @@ def main() -> None:
         cfg = dataclasses.replace(
             cfg, moe=dataclasses.replace(cfg.moe, dispatch=dispatch)
         )
-        model = Model(cfg)
+        model = Model(cfg, static_schedule)
 
         def shard_batch(b):
             return {

@@ -16,9 +16,15 @@ class MoECfg:
     every: int = 1  # MoE FFN on layers where (idx % every == every-1); 1 = all
     capacity_factor: float = 1.25
     router_norm_topk: bool = True  # renormalize gates over the selected top-k
-    # dispatch mode: dense (einsum, replicated-EP), a2a (single all_to_all),
-    # scheduled (decomposition -> ppermute phases; the paper's technique)
-    dispatch: Literal["dense", "a2a", "scheduled"] = "dense"
+    # dispatch fabric, by registry name (repro.parallel.fabric; see
+    # docs/fabric.md): "dense" (no-A2A EP / virtual fabric), "a2a"
+    # (monolithic all_to_all), "ppermute" (static decomposed phases),
+    # "phase_pipelined" (traced ScheduleTable + envelope), "ragged_a2a"
+    # (ragged all-to-all carrying exactly the live envelope bytes).
+    # "scheduled" is a legacy alias resolved by schedule type
+    # (A2ASchedule -> ppermute, ScheduleTable -> phase_pipelined).
+    # Unknown names raise at apply time listing the registered fabrics.
+    dispatch: str = "dense"
     schedule_strategy: Literal["maxweight", "shift"] = "maxweight"
     # 2D expert sharding: expert FFN width sharded over 'data' (kills the
     # per-microbatch ZeRO-3 expert-weight regathers; tokens are

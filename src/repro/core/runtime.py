@@ -83,11 +83,26 @@ class ControllerConfig:
         ``n_ranks`` (a full 1-factorization's worth of slots).
       envelope_slack: headroom multiplier on the phase envelope the
         runtime derives from its plans (the static per-phase buffer bound
-        of phase-pipelined dispatch).  The envelope only ever *grows*,
-        and each growth is a recompile (``envelope_growths``) — slack
-        buys re-plans that land inside the current envelope, at the cost
-        of proportionally padded phase buffers.  0 disables the envelope
-        entirely (legacy monolithic dispatch).
+        of phase-pipelined dispatch).  Each envelope *growth* is a
+        recompile (``envelope_growths``) — slack buys re-plans that land
+        inside the current envelope, at the cost of proportionally
+        padded phase buffers.  0 disables the envelope entirely (legacy
+        monolithic dispatch).
+      envelope_decay: adaptive envelope *shrink* threshold (0 disables —
+        the envelope then only ever grows).  A per-slot envelope that
+        stays **sustained-underused** — its slacked need below
+        ``envelope_decay * envelope[k]`` for ``shrink_patience``
+        consecutive table rebuilds — shrinks back to the *peak* slacked
+        need since the envelope last changed (so every plan seen since
+        then still fits: a fluctuating cooled regime cannot thrash
+        grow/shrink recompiles), reclaiming the padded phase-buffer
+        bytes a traffic regime that cooled off left behind.  A shrink changes the static envelope
+        aux, so it costs the same ONE deliberate recompile a growth does
+        (``envelope_shrinks``; regression-tested in
+        ``benchmarks/compile_smoke.py``).
+      shrink_patience: consecutive underused table rebuilds required
+        before a slot shrinks (damps growth/shrink oscillation — each
+        flip is a recompile).
     """
 
     n_ranks: int
@@ -103,6 +118,8 @@ class ControllerConfig:
     max_library: int = 16
     k_max: int | None = None
     envelope_slack: float = 1.5
+    envelope_decay: float = 0.0
+    shrink_patience: int = 3
 
     def __post_init__(self):
         if self.n_experts % self.n_ranks:
@@ -111,6 +128,18 @@ class ControllerConfig:
             )
         if self.group_by not in ("layer", "model"):
             raise ValueError(f"unknown group_by {self.group_by!r}")
+        if not 0.0 <= self.envelope_decay < 1.0:
+            raise ValueError(
+                f"envelope_decay must be in [0, 1) (got "
+                f"{self.envelope_decay}): it is the fraction of the "
+                "current envelope below which a slot counts as underused"
+            )
+        if self.shrink_patience < 1:
+            raise ValueError(
+                f"shrink_patience must be >= 1 (got "
+                f"{self.shrink_patience}): 0 would shrink every slot on "
+                "any non-growth rebuild, recompiling each time"
+            )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -202,10 +231,14 @@ class ScheduleRuntime:
         self._table_key: tuple | None = None
         self._clipped_entries: set[str] = set()
         # phase envelope: the static per-phase buffer bound of the
-        # phase-pipelined dispatch.  Monotone: it only grows (each growth
-        # invalidates the executable — counted), so swaps whose plans fit
-        # stay compile-free.  None until the first table build.
+        # phase-pipelined dispatch.  Growth-biased: it grows whenever a
+        # plan exceeds it, and (with envelope_decay) shrinks a slot only
+        # after shrink_patience consecutive underused rebuilds — either
+        # change invalidates the executable (counted), so swaps whose
+        # plans fit stay compile-free.  None until the first table build.
         self._envelope: np.ndarray | None = None
+        self._env_underused: np.ndarray | None = None  # per-slot streak
+        self._env_need_peak: np.ndarray | None = None  # shrink target
         # counters / telemetry
         self.steps = 0
         self.replan_events = 0
@@ -214,6 +247,7 @@ class ScheduleRuntime:
         self.cold_plans = 0
         self.phase_clips = 0  # plans that exceeded the k_max slot budget
         self.envelope_growths = 0  # envelope grew => deliberate recompile
+        self.envelope_shrinks = 0  # sustained-underuse shrink => recompile
         self.admitted_dropped = 0.0  # plan-admitted tokens cut at grouping
         self.observe_s = 0.0  # cumulative host time inside observe()
         self.replan_s = 0.0  # cumulative host time inside re-plan events
@@ -255,13 +289,28 @@ class ScheduleRuntime:
         return None if self._envelope is None else self._envelope.copy()
 
     def _fit_envelope(self, scheds) -> tuple[int, ...] | None:
-        """Grow-only envelope policy: the envelope must cover every
-        current plan's per-slot caps.  First build sizes it with
-        ``envelope_slack`` headroom; later plans that still exceed it
-        grow it (again with slack) and count an ``envelope_growth`` —
-        the ONE deliberate recompile of the traced path.  Plans always
-        *fit* afterwards, so phase-pipelined dispatch never drops an
-        admitted token."""
+        """Growth-biased envelope policy.  The envelope must cover every
+        current plan's per-slot caps: the first build sizes it with
+        ``envelope_slack`` headroom, and later plans that exceed it grow
+        it (slack again) — an ``envelope_growth``, the ONE deliberate
+        recompile of the traced path.  Plans always *fit* afterwards, so
+        phase-pipelined dispatch never drops an admitted token.
+
+        With ``envelope_decay`` the policy also recovers from a traffic
+        regime that cooled off: a slot whose slacked need stays below
+        ``envelope_decay * envelope[k]`` for ``shrink_patience``
+        consecutive table rebuilds shrinks to the **peak** slacked need
+        observed since the envelope last changed — an
+        ``envelope_shrink``, costing the same single recompile, and
+        reclaiming the padded phase-buffer bytes (the emulation and the
+        ragged fabric both size per-phase transfers from the envelope).
+        Shrinking to the since-last-change peak rather than the
+        instantaneous need is what keeps a fluctuating cooled regime
+        from thrashing grow/shrink recompiles: every plan seen since the
+        last change still fits the shrunk envelope, so replaying the
+        same regime can never force a regrowth.  Growth resets every
+        underuse streak: the executable changed anyway, and the streak
+        must re-prove itself against the new envelope."""
         if not self.cfg.envelope_slack:
             return None
         # one pass over the plans: the raw (unslacked) per-slot max drives
@@ -274,9 +323,36 @@ class ScheduleRuntime:
         )
         if self._envelope is None:
             self._envelope = need
+            self._env_underused = np.zeros(self._k_max, dtype=np.int64)
+            self._env_need_peak = need.copy()
         elif (raw > self._envelope).any():
             self._envelope = np.maximum(self._envelope, need)
             self.envelope_growths += 1
+            self._env_underused[:] = 0
+            self._env_need_peak = need.copy()
+        elif self.cfg.envelope_decay:
+            live = self._envelope > 0
+            # peak slacked need since the envelope last changed — the
+            # shrink target: every plan seen since then still fits the
+            # shrunk envelope, so replaying a cooled regime can never
+            # thrash grow/shrink recompiles
+            self._env_need_peak = np.maximum(self._env_need_peak, need)
+            under = live & (
+                need < self.cfg.envelope_decay * self._envelope
+            ) & (need < self._envelope)
+            self._env_underused = np.where(
+                under, self._env_underused + 1, 0
+            )
+            shrink = (
+                self._env_underused >= self.cfg.shrink_patience
+            ) & (self._env_need_peak < self._envelope)
+            if shrink.any():
+                self._envelope = np.where(
+                    shrink, self._env_need_peak, self._envelope
+                )
+                self._env_underused[shrink] = 0
+                self._env_need_peak = need.copy()  # new window
+                self.envelope_shrinks += 1
         return tuple(int(v) for v in self._envelope)
 
     def table(self) -> ScheduleTable:
@@ -493,12 +569,14 @@ class ScheduleRuntime:
         plan-admitted-but-dropped token count (nonzero = the executing
         path cut tokens the schedule promised — the monolithic path's
         over-promise divergence, observable instead of silent), the
-        phase envelope state, and how often growing it forced the one
-        deliberate recompile."""
+        phase envelope state, and how often growing — or, with
+        ``envelope_decay``, shrinking — it forced the one deliberate
+        recompile."""
         return {
             **self.summary(),
             "admitted_dropped": self.admitted_dropped,
             "envelope_growths": self.envelope_growths,
+            "envelope_shrinks": self.envelope_shrinks,
             "envelope": (
                 None
                 if self._envelope is None

@@ -172,13 +172,20 @@ def lower_cell(
         n_model = ar.axis_size(("model",))
         schedule = None
         microbatches = 8 if is_train else 1
-        if cfg.moe is not None and cfg.moe.dispatch == "scheduled":
+        from repro.parallel.fabric import as_fabric_schedule, consumes_schedule
+
+        planned = None  # the static plan, pre-wrap (meta reads phases off it)
+        if cfg.moe is not None and consumes_schedule(cfg.moe.dispatch):
             bs = ar.axis_size(tuple(a for a in ("pod", "data") if a in mesh.axis_names))
             if not is_train:
                 bs = ar.axis_size(tuple(a for a in ("pod",) if a in mesh.axis_names)) or 1
             # tokens per EP rank per CALL: account for the microbatch split
             t_block = (cell.global_batch // microbatches // max(bs, 1)) * cell.seq_len
-            schedule = build_schedule(cfg, n_model, t_block // n_model, plan=plan)
+            planned = build_schedule(cfg, n_model, t_block // n_model, plan=plan)
+            # row-consuming fabrics take a traced per-layer table
+            schedule = as_fabric_schedule(
+                cfg.moe.dispatch, planned, Model(cfg).n_moe_layers
+            )
         model = Model(cfg, schedule)
 
         key_sds = jax.ShapeDtypeStruct((2,), jnp.uint32)
@@ -261,8 +268,8 @@ def lower_cell(
         "param_count": get_config(arch).param_count(),
         "active_param_count": get_config(arch).active_param_count(),
         "param_dtype": str(pd),
-        "schedule_phases": None if schedule is None else schedule.num_phases,
-        "plan": plan if (cfg.moe is not None and mode == "scheduled") else None,
+        "schedule_phases": None if planned is None else planned.num_phases,
+        "plan": plan if planned is not None else None,
     }
     return lowered, meta
 
@@ -329,7 +336,8 @@ def main(argv=None) -> int:
     ap.add_argument(
         "--dispatch",
         default=None,
-        choices=[None, "dense", "a2a", "scheduled", "scheduled_v2",
+        choices=[None, "dense", "a2a", "ppermute", "phase_pipelined",
+                 "ragged_a2a", "scheduled", "scheduled_v2",
                  "scheduled_lossless", "a2a_2d", "scheduled_2d",
                  "scheduled_bvn"],
     )

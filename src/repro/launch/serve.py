@@ -112,9 +112,43 @@ def main(argv=None) -> None:
     model = Model(cfg)
     max_len = args.prompt_len + args.new_tokens
     policy = dtype_policy(cfg)
-    consumes_schedule = (
-        cfg.moe is not None and cfg.moe.dispatch == "scheduled"
+    # thread the controller's table only into fabrics that consume
+    # traced rows — 'ppermute' bakes plans in and would reject a row at
+    # trace time (the controller still observes/logs for it)
+    from repro.parallel.fabric import (
+        consumes_schedule as fabric_needs_schedule,
+        consumes_table as fabric_consumes,
     )
+
+    consumes_schedule = cfg.moe is not None and fabric_consumes(
+        cfg.moe.dispatch
+    )
+    if (
+        cfg.moe is not None
+        and mesh is not None
+        and fabric_needs_schedule(cfg.moe.dispatch)
+        and not fabric_consumes(cfg.moe.dispatch)
+    ):
+        # static-plan fabric (ppermute) on a mesh: plan ONE uniform
+        # schedule and bake it into the model — the backend cannot take
+        # the controller's traced rows, and schedule-less it would
+        # trace-fail inside the jit
+        from repro.core import decompose, plan_schedule
+
+        n_model = mesh.shape["model"]
+        tokens = args.batch * args.prompt_len * cfg.moe.top_k
+        uniform = np.full((n_model, n_model), tokens / n_model**2)
+        model = Model(
+            cfg,
+            plan_schedule(
+                decompose(uniform, cfg.moe.schedule_strategy), slack=1.5
+            ),
+        )
+        log.info(
+            "baked a static %s plan (%d ranks) — %s cannot swap plans "
+            "at runtime",
+            cfg.moe.schedule_strategy, n_model, cfg.moe.dispatch,
+        )
 
     def serve_round(params, prompts, prefill, decode, schedule):
         caches = model.init_cache(args.batch, max_len, policy["cache_dtype"])

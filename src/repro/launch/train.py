@@ -48,7 +48,12 @@ def main(argv=None) -> None:
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--smoke", action="store_true", help="reduced config")
-    ap.add_argument("--dispatch", default=None, choices=[None, "dense", "a2a", "scheduled"])
+    from repro.parallel.fabric import fabric_names
+
+    ap.add_argument(
+        "--dispatch", default=None,
+        choices=[None, *fabric_names(), "scheduled"],
+    )
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--grad-compress", default=None, choices=[None, "ef8"])
     ap.add_argument("--ckpt", default="/tmp/repro_train_ckpt")
@@ -63,8 +68,10 @@ def main(argv=None) -> None:
     log.info("mesh %s, arch %s (%.1fM params)", dict(mesh.shape), cfg.name,
              cfg.param_count() / 1e6)
 
+    from repro.parallel.fabric import as_fabric_schedule, consumes_schedule
+
     schedule = None
-    if cfg.moe is not None and cfg.moe.dispatch == "scheduled":
+    if cfg.moe is not None and consumes_schedule(cfg.moe.dispatch):
         from repro.launch.dryrun import build_schedule
 
         n_model = mesh.shape["model"]
@@ -72,6 +79,11 @@ def main(argv=None) -> None:
         schedule = build_schedule(cfg, n_model, t_rank, plan="lossless")
         log.info("planned %d-phase %s schedule", schedule.num_phases,
                  cfg.moe.schedule_strategy)
+        # row-consuming fabrics (phase_pipelined / ragged_a2a) take a
+        # traced per-layer table instead of the static plan
+        schedule = as_fabric_schedule(
+            cfg.moe.dispatch, schedule, Model(cfg).n_moe_layers
+        )
 
     model = Model(cfg, schedule)
     data_cfg = DataConfig(

@@ -1,56 +1,68 @@
-"""Mixture-of-Experts FFN with three dispatch modes.
+"""Mixture-of-Experts FFN: ONE pipeline over pluggable dispatch fabrics.
 
-* ``dense`` — no-A2A EP: tokens stay put (replicated over the model axis),
-  are locally grouped by expert into ``[E, C, d]``, experts (sharded over
-  the model axis) compute their groups, and a psum combines.  Comm = one
-  all-reduce of ``[T, d]``.  This is the strongest *non-decomposition*
-  baseline and the default for single-device smoke tests.
+The layer is a single route -> admit -> ``fabric.dispatch`` -> grouped
+``moe_gemm`` -> ``fabric.combine`` pipeline; everything interconnect-
+specific lives behind the ``repro.parallel.fabric`` registry, selected
+by name via ``MoECfg.dispatch``:
 
-* ``a2a`` — token-sharded EP (the paper's baseline): tokens sharded over
-  the EP axis, one dense ``all_to_all`` dispatch + one combine.
+* ``dense``   — no-A2A EP (psum combine); the single-device fallback and
+  the *virtual* fabric when handed a traced ``ScheduleTable`` row.
+* ``a2a``     — token-sharded EP, one monolithic ``all_to_all`` (the
+  paper's baseline).
+* ``ppermute`` — static ``A2ASchedule`` decomposed into ppermute phases
+  (plan baked into the executable; a plan change recompiles).
+* ``phase_pipelined`` — traced ``ScheduleTable`` row against a static
+  phase envelope: plans swap without recompiling, phase k's grouped GEMM
+  overlaps phase k+1's transfer, admission and buffer geometry read the
+  same envelope-clamped caps so no admitted token is ever dropped.
+* ``ragged_a2a`` — same geometry, ``jax.lax.ragged_all_to_all`` movement
+  carrying exactly the live envelope bytes per pair (dense-emulation
+  fallback off-TPU).
 
-* ``scheduled`` — the paper's technique on TPU.  Two executions of the
-  same plan:
-
-  - **static** (``A2ASchedule``): the all-to-all is decomposed host-side
-    (max-weight / shift) into K ppermute phases with per-phase
-    capacities baked into the executable; skewed traffic ⇒ fewer, denser
-    phases ⇒ fewer collective bytes than ``a2a`` (paper §3.2 in ICI
-    terms).  Changing the plan recompiles.
-  - **traced** (``ScheduleTable`` row): the plan is *data*.  The
-    schedule's capacity semantics are enforced by a traced admission
-    mask (gates of tokens beyond a pair's planned capacity are zeroed —
-    exactly the tokens the static path would leave unshipped), movement
-    is one dense all-to-all, and expert compute is ONE grouped
-    ``moe_gemm`` launch whose group-metadata prologue skips fully padded
-    row blocks.  Plans swap without recompiling and ride ``lax.scan``;
-    on a single device the same row drives a *virtual* fabric, so
-    scheduled capacity clipping is observable without a mesh.
+``dispatch="scheduled"`` is a legacy alias resolved by schedule type
+(``A2ASchedule`` -> ppermute, ``ScheduleTable`` -> phase_pipelined).
+Unknown names raise listing the registered fabrics; handing a backend
+the wrong schedule flavor raises naming the backend that rejected it.
 
 Routing: top-k softmax gating with capacity-factor token dropping
 (GShard-style), gates optionally renormalized over the selected k.
+Token-slot geometry (packing, admission, phase-slot math) is shared by
+every backend — see ``repro.parallel.fabric.geometry``; this module
+re-exports the old underscore names for its tests.
 """
 
 from __future__ import annotations
 
-import math
-
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.schedule import A2ASchedule, ScheduleTable, phase_offsets
-from repro.parallel import current_rules, shard, shard_map_compat
-from repro.parallel.collectives import (
-    a2a_combine,
-    a2a_dispatch,
-    scheduled_combine,
-    scheduled_dispatch,
+from repro.core.schedule import ScheduleTable
+from repro.parallel import current_rules, shard_map_compat
+from repro.parallel.fabric import geometry as _geom
+from repro.parallel.fabric.base import (
+    FabricContext,
+    get_fabric,
+    resolve_fabric,
 )
 from repro.models.layers import cast, dense_init
 
 EP_AXIS = "model"
+
+# ---------------------------------------------------------- legacy aliases
+# The packing/admission helpers moved to repro.parallel.fabric.geometry
+# (every backend shares them — that is the parity matrix's foundation);
+# tests and external callers keep the historic names.
+_round8 = _geom.round8
+_group = _geom.group_tokens
+_pack_slots = _geom.pack_slots
+_ungroup = _geom.ungroup
+_rank_in_group = _geom.rank_in_group
+_admission = _geom.admission_mask
+_phase_serving = _geom.phase_serving
+_phase_slot_assign = _geom.phase_slot_assign
+_routing_counts = _geom.routing_counts
+_stats = _geom.stats_tree
 
 
 def moe_init(key: jax.Array, cfg: ModelConfig) -> dict:
@@ -65,12 +77,6 @@ def moe_init(key: jax.Array, cfg: ModelConfig) -> dict:
     }
 
 
-def _round8(x):
-    """max(8, ceil to a multiple of 8) — scalar int or int array."""
-    r = np.maximum(8, -(-np.asarray(x) // 8) * 8)
-    return int(r) if r.ndim == 0 else r
-
-
 def _router(params: dict, cfg: ModelConfig, x: jax.Array):
     """x: [T, d] -> (expert ids [T, k], gates [T, k] f32)."""
     m = cfg.moe
@@ -82,82 +88,6 @@ def _router(params: dict, cfg: ModelConfig, x: jax.Array):
         probs = jax.nn.softmax(logits, axis=-1)
         gates = jnp.take_along_axis(probs, idx, axis=-1)
     return idx.astype(jnp.int32), gates
-
-
-def _group(x, key, gates, n_buckets: int, cap: int, admitted=None):
-    """Pack tokens into per-bucket slots.
-
-    x: [T, d]; key: [T*k] bucket id per (token, choice); gates: [T*k];
-    admitted: [T*k] bool — choices the schedule plan admits (None = all).
-    Returns (buf [n_buckets, cap, d], pos [n_buckets, cap] int32 (-1 pad),
-    gate [n_buckets, cap], live [n_buckets, cap] bool).  Tokens beyond a
-    bucket's capacity are dropped (standard capacity-factor semantics).
-
-    ``live`` is the *explicit* slot-validity mask: a slot is live iff it
-    holds a real admitted token — independent of the gate value, so an
-    admitted choice whose router gate is exactly 0.0 still counts as live
-    (it must reach expert compute and the drop accounting; the old
-    ``gate > 0`` liveness inference conflated it with padding).
-    """
-    tk = key.shape[0]
-    t = x.shape[0]
-    token_of = jnp.arange(tk, dtype=jnp.int32) // (tk // t)
-    order = jnp.argsort(key)
-    skey = key[order]
-    counts = jnp.bincount(key, length=n_buckets)
-    starts = jnp.concatenate(
-        [jnp.zeros(1, counts.dtype), jnp.cumsum(counts)[:-1]]
-    )
-    rank = jnp.arange(tk) - starts[skey]
-    fits = rank < cap
-    slot = jnp.where(fits, skey * cap + rank, n_buckets * cap)
-    buf = jnp.zeros((n_buckets * cap + 1, x.shape[1]), x.dtype)
-    buf = buf.at[slot].set(x[token_of[order]])
-    pos = jnp.full((n_buckets * cap + 1,), -1, jnp.int32)
-    pos = pos.at[slot].set(token_of[order])
-    gat = jnp.zeros((n_buckets * cap + 1,), jnp.float32)
-    gat = gat.at[slot].set(gates[order])
-    adm = (
-        jnp.ones((tk,), bool) if admitted is None else admitted.reshape(-1)
-    )
-    liv = jnp.zeros((n_buckets * cap + 1,), bool)
-    liv = liv.at[slot].set(adm[order])
-    return (
-        buf[:-1].reshape(n_buckets, cap, -1),
-        pos[:-1].reshape(n_buckets, cap),
-        gat[:-1].reshape(n_buckets, cap),
-        liv[:-1].reshape(n_buckets, cap),
-    )
-
-
-def _pack_slots(x, slot, gates, admitted, n_slots: int):
-    """Direct-slot twin of ``_group`` for precomputed slot assignments.
-
-    ``slot``: [T*k] int32 flat slot per (token, choice) — collision-free
-    for kept choices by construction (ranks are unique per bucket);
-    ``n_slots`` is the dump slot for cut choices.  Returns flat
-    (buf [n_slots, d], pos [n_slots] (-1 pad), gate [n_slots],
-    live [n_slots] bool) — ``live`` marks slots holding real *admitted*
-    tokens (explicit validity, not the gate sign)."""
-    tk = slot.shape[0]
-    t = x.shape[0]
-    token_of = jnp.arange(tk, dtype=jnp.int32) // (tk // t)
-    buf = jnp.zeros((n_slots + 1, x.shape[1]), x.dtype).at[slot].set(x[token_of])
-    pos = jnp.full((n_slots + 1,), -1, jnp.int32).at[slot].set(token_of)
-    gat = jnp.zeros((n_slots + 1,), jnp.float32).at[slot].set(gates)
-    liv = jnp.zeros((n_slots + 1,), bool).at[slot].set(admitted)
-    return buf[:-1], pos[:-1], gat[:-1], liv[:-1]
-
-
-def _ungroup(y, pos, gate, t: int):
-    """Weighted scatter-add of processed slots back to [T, d] (f32)."""
-    yf = y.reshape(-1, y.shape[-1]).astype(jnp.float32)
-    pf = pos.reshape(-1)
-    gf = gate.reshape(-1)
-    safe = jnp.where(pf >= 0, pf, t)
-    out = jnp.zeros((t + 1, y.shape[-1]), jnp.float32)
-    out = out.at[safe].add(yf * gf[:, None])
-    return out[:t]
 
 
 def _expert_ffn(
@@ -192,254 +122,89 @@ def _expert_ffn(
     return jnp.einsum("ecf,efd->ecd", h, cast(wd))
 
 
-def _rank_in_group(key: jax.Array) -> jax.Array:
-    """Arrival rank of each element within its group.
+def _expert_block(ctx: FabricContext, wg, wu, wd, blk, live):
+    """Grouped expert compute over one fabric block [G, C, d].
 
-    ``key``: [N] int group ids.  Returns [N] int32 — the element's index
-    among same-key elements in original order, i.e. exactly the bucket
-    slot ``_group`` will assign it.  One stable argsort + a cummax over
-    segment starts (no LAP, no segment loops).
-    """
-    n = key.shape[0]
-    order = jnp.argsort(key, stable=True)
-    sk = key[order]
-    idxs = jnp.arange(n, dtype=jnp.int32)
-    is_start = jnp.concatenate(
-        [jnp.ones((1,), bool), sk[1:] != sk[:-1]]
+    The pipeline's single GEMM stage: every fabric's dispatched blocks —
+    whether one fused buffer or one block per phase — pass through here,
+    so the Pallas grouped launch (and its block-skip metadata, when the
+    fabric shipped a validity mask) serves all backends.  Under 2D expert
+    sharding the tokens gather over 'data' around the local f-shard GEMM
+    and the partial outputs reduce-scatter back — bounded per call by one
+    block, which is what keeps the phase fabrics' peak memory at one
+    envelope slot."""
+    m = ctx.cfg.moe
+    row_valid = live if m.use_pallas else None
+    if not ctx.two_d:
+        return _expert_ffn(
+            None, blk, e_slice=(wg, wu, wd), use_pallas=m.use_pallas,
+            row_valid=row_valid,
+        )
+    gathered = jax.lax.all_gather(blk, "data", axis=1, tiled=True)
+    if row_valid is not None:
+        row_valid = jax.lax.all_gather(live, "data", axis=1, tiled=True)
+    y_part = _expert_ffn(
+        None, gathered, e_slice=(wg, wu, wd), use_pallas=m.use_pallas,
+        row_valid=row_valid,
     )
-    first = jax.lax.cummax(jnp.where(is_start, idxs, 0))
-    return jnp.zeros_like(idxs).at[order].set(idxs - first)
-
-
-def _admission(
-    idx: jax.Array,
-    gates: jax.Array,
-    row: ScheduleTable,
-    n_experts: int,
-    *,
-    src: jax.Array,
-):
-    """Enforce a traced schedule row's planned capacities on the gates.
-
-    ``idx``/``gates``: [T, k] routing choices; ``src``: [T*k] source rank
-    of each flattened choice (a constant inside the EP shard_map, the
-    virtual-fabric fold on a single device).  A choice is *admitted* if
-    its arrival rank within its (src, expert) bucket is below the pair's
-    planned per-expert capacity (``ScheduleTable.pair_caps``, clamped to
-    the table's phase envelope when it carries one) — the same prefix of
-    slots the static ppermute path would ship; everything beyond gets its
-    gate zeroed, which is indistinguishable from the static path
-    returning zeros for unshipped slots.  Local (src == dst) traffic
-    never crosses the fabric and is never clipped.
-
-    Returns ``(gates, admitted)`` — the masked gates AND the [T*k] bool
-    admission mask itself, so callers can track admitted tokens
-    explicitly (liveness and drop accounting must not be inferred from
-    the gate sign: a gate can legitimately be exactly 0.0).
-    """
-    n_v = row.n
-    e_local = n_experts // n_v
-    e_flat = idx.reshape(-1)
-    dst = e_flat // e_local
-    cap_pair = row.pair_caps(e_local)  # [n_v, n_v] per-expert slot units
-    big = jnp.int32(jnp.iinfo(jnp.int32).max)
-    cap_flat = jnp.where(src == dst, big, cap_pair[src, dst])
-    rank = _rank_in_group(src * jnp.int32(n_experts) + e_flat)
-    admitted = rank < cap_flat
-    return gates * admitted.reshape(gates.shape), admitted
-
-
-def _phase_serving(row: ScheduleTable, e_local: int, me):
-    """Rank ``me``'s phase-major serving plan from a traced schedule row.
-
-    Returns (per-phase arrays, length K_max):
-      on_k    [K] bool  — rank ``me`` participates in phase k,
-      dst_k   [K] int32 — its destination that phase (identity padding
-                          elsewhere),
-      serve   [K] int32 — per-expert slots phase k carries for the pair
-                          (``phase_slot_caps`` clamped to the envelope,
-                          zero when off),
-      cum     [K, n]    — inclusive per-destination cumulative slots,
-      cum_lo  [K, n]    — exclusive (phase start offset per destination).
-
-    ``cum[-1]`` is exactly ``pair_caps(e_local)[me]`` — admission and the
-    phase slotting read the same numbers, which is what makes the
-    pipelined path drop-free by construction (every admitted choice's
-    in-bucket rank falls inside some phase's [cum_lo, cum) window).
-    BvN-style multi-phase pairs fall out for free: their later phases
-    pick up the next slice of the pair's rank range.
-    """
-    k_max, n = row.perms.shape
-    kk = jnp.arange(k_max)
-    on_k = (kk < row.n_phases) & row.valid[:, me]
-    dst_k = row.perms[:, me]
-    serve = jnp.where(on_k, row.phase_slot_caps(e_local), 0).astype(jnp.int32)
-    serve_mat = (
-        jnp.zeros((k_max, n), jnp.int32).at[kk, dst_k].add(serve)
-    )
-    cum = jnp.cumsum(serve_mat, axis=0)
-    return on_k, dst_k, serve, cum, cum - serve_mat
-
-
-def _phase_slot_assign(
-    row: ScheduleTable,
-    e_local: int,
-    me,
-    e_flat: jax.Array,
-    rank: jax.Array,
-    *,
-    c_local: int,
-):
-    """Assign every routing choice a flat slot in the phase-major buffer.
-
-    Layout: ``[phase-0 block | ... | phase-(K-1) block | local block]``
-    where phase k's block is ``[e_local, env_k]`` slots (``env_k`` the
-    static envelope slot size) and the local block ``[e_local, c_local]``.
-    ``e_flat``: [T*k] expert ids; ``rank``: arrival rank within expert.
-
-    Returns (slot [T*k] int32 — the dump slot for cut choices, admitted
-    [T*k] bool, bases tuple of static python ints, env_slots tuple,
-    n_slots int, on_k [K] bool, dst_k [K] int32 — the serving plan, so
-    the dispatch loop doesn't recompute it).  Remote choices are admitted
-    iff their rank fits the pair's total planned (envelope-clamped)
-    slots — and then always land inside their phase block: the envelope
-    sized the buffer from the same numbers, so the monolithic path's
-    over-promise drop cannot happen.
-    """
-    env_slots = row.envelope_slots(e_local)
-    k_max, n = row.perms.shape
-    bases = []
-    off = 0
-    for ck in env_slots:
-        bases.append(off)
-        off += e_local * ck
-    s_remote = off
-    n_slots = s_remote + e_local * c_local
-    on_k, dst_k, serve, cum, cum_lo = _phase_serving(row, e_local, me)
-
-    dst = e_flat // e_local
-    le = e_flat % e_local
-    local = dst == me
-    admitted = local | (rank < cum[-1][dst])
-    # phase of a remote choice: the k whose [cum_lo, cum) window holds its
-    # rank — count the phases whose inclusive cum it has already passed
-    ph = (rank[None, :] >= cum[:, dst]).sum(axis=0)
-    ph_c = jnp.clip(ph, 0, k_max - 1)
-    base_arr = jnp.asarray(bases, jnp.int32)
-    env_arr = jnp.asarray(env_slots, jnp.int32)
-    slot_in = rank - cum_lo[ph_c, dst]
-    remote_slot = base_arr[ph_c] + le * env_arr[ph_c] + slot_in
-    local_slot = s_remote + le * c_local + rank
-    slot = jnp.where(
-        local,
-        jnp.where(rank < c_local, local_slot, n_slots),
-        jnp.where(admitted, remote_slot, n_slots),
-    ).astype(jnp.int32)
-    return slot, admitted, tuple(bases), env_slots, n_slots, on_k, dst_k
-
-
-def _ep_size() -> int:
-    ar = current_rules()
-    if ar is None or ar.mesh is None:
-        return 1
-    return ar.axis_size((EP_AXIS,))
-
-
-def _routing_counts(idx: jax.Array, n_experts: int) -> jax.Array:
-    """Realized per-expert routing demand from [T, k] expert ids.
-
-    Counts are pre-capacity-drop (the controller plans for demand, not for
-    what the current schedule happened to admit) and carry no gradient —
-    top-k indices are already non-differentiable."""
-    return (
-        jnp.zeros((n_experts,), jnp.float32).at[idx.reshape(-1)].add(1.0)
+    return jax.lax.psum_scatter(
+        y_part, "data", scatter_dimension=1, tiled=True
     )
 
 
-def _stats(counts: jax.Array, admitted, live) -> dict:
-    """The MoE layer's aux-stats pytree: realized routing ``counts`` plus
-    the admitted-but-cut drop counter.
-
-    ``dropped`` = choices the schedule plan admitted that grouping still
-    cut (no slot in the shape-static bucket) — the silent divergence the
-    monolithic traced path suffers when a plan over-promises the uniform
-    capacity-factor bucket; phase-pipelined dispatch drives it to zero by
-    construction (local capacity-factor overflow is still counted).  Both
-    are f32 and gradient-free."""
-    adm = jnp.asarray(admitted).sum().astype(jnp.float32)
-    packed = jnp.asarray(live).sum().astype(jnp.float32)
-    dropped = jax.lax.stop_gradient(adm - packed)
-    # match the routing counts' leading (source-shard) dims
-    return {
-        "routing": counts,
-        "dropped": dropped.reshape((1,) * (counts.ndim - 1)),
-    }
-
-
-# --------------------------------------------------------------- dense mode
-def _moe_dense(
-    params,
-    cfg: ModelConfig,
-    x: jax.Array,
-    row: ScheduleTable | None = None,
-    *,
-    return_stats: bool = False,
+# --------------------------------------------------------------- pipeline
+def _pipeline_body(
+    fabric, ctx: FabricContext, x_loc, wr, wg, wu, wd, *, return_stats, ep
 ):
-    """No-A2A EP.  With a traced schedule ``row`` the layer runs the plan
-    on a *virtual* fabric of ``row.n`` ranks (tokens map to virtual
-    sources by contiguous blocks, experts by contiguous placement — the
-    controller's single-device convention): the row's planned per-pair
-    capacities clip the gates exactly as the EP path would, so scheduled
-    semantics — including drift re-plans swapping tables with zero
-    recompiles — are observable without a mesh."""
-    m = cfg.moe
+    """THE MoE pipeline — one body for every fabric.
+
+    route -> pack (fabric geometry + admission) -> fabric.dispatch ->
+    grouped expert GEMM per block -> fabric.combine -> weighted scatter
+    back to the residual stream.  ``ep`` only selects the stats leading
+    dims (EP stats carry a (batch-shard, source-rank) prefix)."""
+    m = ctx.cfg.moe
+    t = x_loc.shape[0]
+    idx, gates = _router({"router": {"w": wr}}, ctx.cfg, x_loc)
+    packed = fabric.pack(ctx, x_loc, idx, gates)
+    blocks, state = fabric.dispatch(ctx, packed)
+    ys = [_expert_block(ctx, wg, wu, wd, blk, live) for blk, live in blocks]
+    y_slots = fabric.combine(ctx, packed, state, ys)
+    y_loc = _ungroup(y_slots, packed.pos, packed.gate, t)  # [t, d] f32
+    if not return_stats:
+        return y_loc
+    counts = _routing_counts(idx, m.n_experts)
+    counts = counts[None, None, :] if ep else counts[None, :]
+    return y_loc, _stats(counts, packed.admitted, packed.live)
+
+
+def _moe_virtual(params, cfg: ModelConfig, x, fabric, schedule, return_stats):
+    """Run the pipeline without a mesh (the dense/virtual fabric)."""
     b, s, d = x.shape
     t = b * s
-    xf = x.reshape(t, d)
-    idx, gates = _router(params, cfg, xf)
-    admitted = None
-    if row is not None:
-        tok = jnp.arange(t * m.top_k, dtype=jnp.int32) // m.top_k
-        src = (tok * row.n) // t  # contiguous virtual source blocks
-        gates, admitted = _admission(idx, gates, row, m.n_experts, src=src)
-    key = idx.reshape(-1)
-    cap = _round8(math.ceil(t * m.top_k / m.n_experts * m.capacity_factor))
-    buf, pos, gate, live = _group(
-        xf, key, gates.reshape(-1), m.n_experts, cap, admitted=admitted
+    ctx = FabricContext(
+        cfg=cfg, n=1, e_local=cfg.moe.n_experts, axis=None, me=None,
+        schedule=schedule, two_d=False, t_local=t,
     )
-    # capacity dim sharded over the DP axis ('fsdp'->data) so expert work
-    # splits across data shards too, not just the expert axis
-    buf = shard(buf, "expert", "fsdp", None)
-    # grouped-launch metadata: explicit slot validity (real admitted
-    # token), NOT the gate sign — a zero-gate admitted slot stays live
-    y = _expert_ffn(
-        params, buf, use_pallas=m.use_pallas,
-        row_valid=live if m.use_pallas else None,
+    res = _pipeline_body(
+        fabric, ctx, x.reshape(t, d),
+        params["router"]["w"], params["w_gate"], params["w_up"],
+        params["w_down"], return_stats=return_stats, ep=False,
     )
-    y = shard(y, "expert", "fsdp", None)
-    out = _ungroup(y, pos, gate, t)
-    out = out.astype(x.dtype).reshape(b, s, d)
     if not return_stats:
-        return out
-    # single source shard: routing [1, E], dropped [1]
-    adm = (
-        jnp.ones((t * m.top_k,), bool) if admitted is None else admitted
-    )
-    return out, _stats(
-        _routing_counts(idx, m.n_experts)[None, :], adm, live
-    )
+        return res.astype(x.dtype).reshape(b, s, d)
+    y, stats = res
+    return y.astype(x.dtype).reshape(b, s, d), stats
 
 
-# ----------------------------------------------------------- EP (A2A) modes
-def _moe_ep(
-    params,
-    cfg: ModelConfig,
-    x: jax.Array,
-    schedule: A2ASchedule | None,
-    *,
-    return_stats: bool = False,
-):
-    """Token-sharded EP under shard_map over the model axis."""
+def _moe_ep_pipeline(params, cfg: ModelConfig, x, fabric, schedule, return_stats):
+    """Run the pipeline token-sharded under shard_map over the EP axis.
+
+    One wrapper for every mesh fabric: a static ``A2ASchedule`` rides the
+    closure (baked into the executable — the ppermute backend's
+    contract), while a traced ``ScheduleTable`` row enters as replicated
+    shard_map *inputs*, so a re-planned table reaches this executable
+    without recompiling (its static envelope stays in the pytree aux =
+    the jit cache key)."""
     m = cfg.moe
     ar = current_rules()
     mesh = ar.mesh
@@ -454,9 +219,9 @@ def _moe_ep(
 
     # 2D expert sharding: the expert FFN width lives sharded over 'data'
     # inside the shard_map (no ZeRO-3 regather of expert weights); the
-    # received token block is all-gathered over 'data' before the GEMM and
-    # its output reduce-scattered back (tokens are far smaller than expert
-    # weights at microbatch granularity — EXPERIMENTS.md §Perf Cell C).
+    # received token blocks are all-gathered over 'data' before the GEMM
+    # and outputs reduce-scattered back (tokens are far smaller than
+    # expert weights at microbatch granularity — EXPERIMENTS.md §Perf C).
     two_d = bool(m.expert_2d) and "data" in mesh.axis_names
     w_f_spec = (
         P(EP_AXIS, None, "data") if two_d else P(EP_AXIS, None, None)
@@ -464,12 +229,19 @@ def _moe_ep(
     w_d_spec = (
         P(EP_AXIS, "data", None) if two_d else P(EP_AXIS, None, None)
     )
+    is_row = isinstance(schedule, ScheduleTable)
+    if is_row:
+        row_leaves, row_def = jax.tree_util.tree_flatten(schedule)
+    else:
+        row_leaves, row_def = (), None
+    rep = P()  # schedule row leaves: replicated everywhere
     in_specs = (
         P(batch_axes, EP_AXIS, None),  # x sequence-sharded over the EP axis
         P(None, None),  # router w
         w_f_spec,  # w_gate [E, d, f]
         w_f_spec,  # w_up
         w_d_spec,  # w_down [E, f, d]
+        *([rep] * len(row_leaves)),
     )
     out_specs = P(batch_axes, EP_AXIS, None)
     if return_stats:
@@ -485,105 +257,26 @@ def _moe_ep(
             },
         )
 
-    def body(xb, wr, wg, wu, wd):
+    def body(xb, wr, wg, wu, wd, *leaves):
+        sched = (
+            jax.tree_util.tree_unflatten(row_def, leaves)
+            if is_row
+            else schedule
+        )
+        me = jax.lax.axis_index(EP_AXIS)
         bl, s_loc, _ = xb.shape
-        t_ep = bl * s_loc
-        x_loc = xb.reshape(t_ep, d)
-        idx, gates = _router({"router": {"w": wr}}, cfg, x_loc)
-        dest = idx // e_local
-        le = idx % e_local
-        key = (dest * e_local + le).reshape(-1)
-        # Capacities: uniform for a2a; per-phase (pair tokens / E_local)
-        # for scheduled.  The local bucket always gets the uniform cap.
-        cap_uni = _round8(
-            math.ceil(t_ep * m.top_k / (n * e_local) * m.capacity_factor)
+        ctx = FabricContext(
+            cfg=cfg, n=n, e_local=e_local, axis=EP_AXIS, me=me,
+            schedule=sched, two_d=two_d, t_local=bl * s_loc,
         )
-        if schedule is None:
-            c_max = cap_uni
-            phase_caps = None
-        else:
-            # per-expert phase caps: ceil(cap / e_local) rounded up to 8
-            phase_caps = _round8(-(-schedule.caps.astype(np.int64) // e_local))
-            if schedule.offsets is not None:
-                # multi-phase pairs (BvN): the bucket must hold each pair's
-                # TOTAL allocation across phases
-                per_pair = schedule.cap_matrix(caps=phase_caps)
-                c_max = max(cap_uni, int(per_pair.max()))
-            else:
-                c_max = max(cap_uni, int(phase_caps.max()))
-        buf, pos, gate, live = _group(
-            x_loc, key, gates.reshape(-1), n * e_local, c_max
+        res = _pipeline_body(
+            fabric, ctx, xb.reshape(bl * s_loc, d), wr, wg, wu, wd,
+            return_stats=return_stats, ep=True,
         )
-        buf = buf.reshape(n, e_local, c_max, d)
-
-        def expert_compute(grouped):
-            """[E_local, R, d] -> [E_local, R, d]; under 2D sharding the
-            tokens gather over 'data', GEMM against the local f-shard, and
-            the partial outputs reduce-scatter back."""
-            if not two_d:
-                return _expert_ffn(
-                    None, grouped, e_slice=(wg, wu, wd), use_pallas=m.use_pallas
-                )
-            gathered = jax.lax.all_gather(grouped, "data", axis=1, tiled=True)
-            y_part = _expert_ffn(
-                None, gathered, e_slice=(wg, wu, wd), use_pallas=m.use_pallas
-            )
-            return jax.lax.psum_scatter(
-                y_part, "data", scatter_dimension=1, tiled=True
-            )
-
-        if schedule is None:  # plain all-to-all
-            recv = a2a_dispatch(buf, EP_AXIS)  # [n, e_local, C, d]
-            grouped = recv.transpose(1, 0, 2, 3).reshape(e_local, n * c_max, d)
-            y = expert_compute(grouped)
-            y = y.reshape(e_local, n, c_max, d).transpose(1, 0, 2, 3)
-            back = a2a_combine(y, EP_AXIS)
-        else:  # scheduled ppermute phases (capacities in per-expert units)
-            offsets = None
-            if schedule.offsets is not None:  # recompute in per-expert units
-                offsets = phase_offsets(
-                    schedule.perms, schedule.valid, phase_caps
-                ).astype(schedule.offsets.dtype)
-            sched = A2ASchedule(
-                perms=schedule.perms,
-                caps=np.asarray(phase_caps, dtype=np.int32),
-                valid=schedule.valid,
-                offsets=offsets,
-            )
-            blocks = scheduled_dispatch(buf, sched, EP_AXIS)
-            if two_d:
-                # 2D expert sharding keeps the per-phase compute: each
-                # phase's token gather over 'data' stays bounded by one
-                # phase's capacity (fusing would gather the whole
-                # concatenated buffer at once), and phase k's GEMM can
-                # still overlap phase k+1's ppermute.
-                parts = [expert_compute(blk) for blk in blocks]
-            else:
-                # Grouped expert compute: the received phase blocks
-                # concatenate along the capacity dim and enter ONE GEMM
-                # (a single Pallas launch under use_pallas) instead of
-                # K+1 per-phase launches — K phases no longer fragment
-                # the expert batch (the paper's Fig. 3 small-batch
-                # penalty, attacked at the kernel layer).  The trade: the
-                # fused GEMM waits for the last phase's ppermute, giving
-                # up the per-phase compute/DMA overlap — fragmented
-                # launches cost more than the overlap buys at the small
-                # per-phase batches this path exists for.
-                sizes = [int(blk.shape[1]) for blk in blocks]
-                y_cat = expert_compute(jnp.concatenate(blocks, axis=1))
-                bounds = np.cumsum(sizes)[:-1]
-                parts = jnp.split(y_cat, bounds, axis=1)
-            back = scheduled_combine(parts, sched, EP_AXIS, c_max)
-
-        y_loc = _ungroup(back, pos, gate, t_ep)  # [t_ep, d] f32
-        out = y_loc.astype(xb.dtype).reshape(bl, s_loc, d)
         if not return_stats:
-            return out
-        return out, _stats(
-            _routing_counts(idx, m.n_experts)[None, None, :],
-            jnp.ones((t_ep * m.top_k,), bool),  # no plan: all choices admitted
-            live,
-        )
+            return res.astype(xb.dtype).reshape(bl, s_loc, d)
+        y, stats = res
+        return y.astype(xb.dtype).reshape(bl, s_loc, d), stats
 
     fn = shard_map_compat(
         body, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False
@@ -594,6 +287,7 @@ def _moe_ep(
         params["w_gate"],
         params["w_up"],
         params["w_down"],
+        *row_leaves,
     )
     if not return_stats:
         return res
@@ -601,283 +295,28 @@ def _moe_ep(
     return y, jax.tree.map(lambda a: a.sum(axis=0), stats)  # [n, E] / [n]
 
 
-def _moe_ep_table(
+# ------------------------------------------------------- legacy entry point
+def _moe_dense(
     params,
     cfg: ModelConfig,
     x: jax.Array,
-    row: ScheduleTable,
+    row: ScheduleTable | None = None,
     *,
     return_stats: bool = False,
 ):
-    """Token-sharded EP driven by a *traced* schedule row.
+    """The dense/virtual fabric, directly (tests + parity oracles)."""
+    fabric = get_fabric("dense")
+    return _moe_virtual(
+        params, cfg, x, fabric, fabric.validate_schedule(row, n=1),
+        return_stats,
+    )
 
-    The row is ordinary shard_map input (replicated), so a re-planned
-    table reaches this executable without recompiling.  Two executions,
-    chosen *statically* by whether the table carries a phase envelope:
 
-    **Phase-pipelined (envelope set — the production path).**  Dispatch
-    is phase-major: the K_max phase slots are statically unrolled, phase
-    k moving a bucket sized to the static per-phase envelope
-    ``envelope_slots[k]`` (derived by the runtime from the library's max
-    planned pair capacity; growing it is the one recompile, swaps within
-    it are free).  Each received phase block enters its own grouped
-    ``moe_gemm`` launch immediately, so phase k's expert GEMM overlaps
-    phase k+1's all-to-all — the paper's dispatch-compute-combine
-    pipeline on the traced path.  Admission and buffer sizing read the
-    same envelope-clamped ``phase_slot_caps``, so **every admitted token
-    has a slot by construction**: the monolithic path's over-promise
-    drop cannot happen, and bytes moved shrink from ``(n-1) * c_uniform``
-    padded buckets to the sum of planned phase envelopes (dark pairs ship
-    nothing).  On this emulated fabric each phase rides a dense
-    ``all_to_all`` with a single live destination slot (a traced perm
-    cannot drive ``ppermute``'s static pair list); a circuit fabric / a
-    TPU ragged all-to-all carries only the live pair's bytes — the cost
-    model and the bytes-moved bench account circuit bytes.
-
-    **Monolithic (no envelope — legacy).**  One dense all-to-all over
-    uniform capacity-factor buckets; the plan clips via the admission
-    mask.  Parity with the static path holds only while every pair's
-    planned per-expert capacity fits the uniform bucket — a plan that
-    over-promises it gets admitted tokens cut at grouping.  That cut is
-    now *observable*: the stats aux counts admitted-but-dropped tokens
-    (``ScheduleRuntime.metrics()`` surfaces them).
-
-    A slot-validity mask travels with the tokens (an all-to-all of the
-    ``[n, E_local, C]`` bool buffer) so the receiver knows which rows are
-    live — explicit validity, not the combine-gate sign: an admitted
-    choice with a 0.0 router gate still reaches expert compute.
-
-    Under 2D expert sharding the phase path gathers one phase block over
-    'data' at a time (peak memory bounded by one envelope slot, like the
-    static scheduled path); the monolithic path gathers the whole
-    ``[E_local, n*C, d]`` buffer at once.
-    """
-    m = cfg.moe
+def _ep_size() -> int:
     ar = current_rules()
-    mesh = ar.mesh
-    n = _ep_size()
-    if row.n != n:
-        raise ValueError(f"schedule row plans {row.n} ranks, EP axis has {n}")
-    e_local = m.n_experts // n
-    b, s, d = x.shape
-
-    rule_b = ar.rules.get("batch") or ()
-    rule_b = (rule_b,) if isinstance(rule_b, str) else tuple(rule_b)
-    batch_axes = tuple(a for a in rule_b if a in mesh.axis_names)
-    from jax.sharding import PartitionSpec as P
-
-    two_d = bool(m.expert_2d) and "data" in mesh.axis_names
-    w_f_spec = P(EP_AXIS, None, "data") if two_d else P(EP_AXIS, None, None)
-    w_d_spec = P(EP_AXIS, "data", None) if two_d else P(EP_AXIS, None, None)
-    rep = P()  # schedule row: replicated everywhere
-    in_specs = (
-        P(batch_axes, EP_AXIS, None),
-        P(None, None),
-        w_f_spec,
-        w_f_spec,
-        w_d_spec,
-        rep, rep, rep, rep, rep,
-    )
-    out_specs = P(batch_axes, EP_AXIS, None)
-    if return_stats:
-        out_specs = (
-            out_specs,
-            {
-                "routing": P(batch_axes, EP_AXIS, None),
-                "dropped": P(batch_axes, EP_AXIS),
-            },
-        )
-    envelope = row.envelope  # static: selects the dispatch shape
-
-    def expert_phase(wg, wu, wd, blk, live_blk):
-        """Expert FFN over one (phase or local) block [E_local, C, d];
-        under 2D sharding the gather/scatter stays bounded by the block."""
-        row_valid = live_blk if m.use_pallas else None
-        if not two_d:
-            return _expert_ffn(
-                None, blk, e_slice=(wg, wu, wd), use_pallas=m.use_pallas,
-                row_valid=row_valid,
-            )
-        gathered = jax.lax.all_gather(blk, "data", axis=1, tiled=True)
-        if row_valid is not None:
-            row_valid = jax.lax.all_gather(
-                live_blk, "data", axis=1, tiled=True
-            )
-        y_part = _expert_ffn(
-            None, gathered, e_slice=(wg, wu, wd), use_pallas=m.use_pallas,
-            row_valid=row_valid,
-        )
-        return jax.lax.psum_scatter(
-            y_part, "data", scatter_dimension=1, tiled=True
-        )
-
-    def body_phase(xb, wr, wg, wu, wd, r_perms, r_caps, r_valid, r_offsets, r_nph):
-        """Phase-major dispatch: statically unrolled over the K_max phase
-        slots (sizes are static envelope shapes; participation, targets
-        and caps stay traced row data, so swaps never recompile)."""
-        r = ScheduleTable(
-            r_perms, r_caps, r_valid, r_offsets, r_nph, envelope=envelope
-        )
-        me = jax.lax.axis_index(EP_AXIS)
-        bl, s_loc, _ = xb.shape
-        t_ep = bl * s_loc
-        x_loc = xb.reshape(t_ep, d)
-        idx, gates = _router({"router": {"w": wr}}, cfg, x_loc)
-        e_flat = idx.reshape(-1)
-        rank = _rank_in_group(e_flat)
-        # local bucket: uniform capacity-factor cap, floored at the
-        # largest envelope slot so a hot local pair never fares worse
-        # than a remote one (the static path gives local c_max too)
-        cap_uni = _round8(
-            math.ceil(t_ep * m.top_k / (n * e_local) * m.capacity_factor)
-        )
-        env_slots = r.envelope_slots(e_local)
-        c_local = max(cap_uni, max(env_slots) if env_slots else cap_uni)
-        slot, admitted, bases, env_slots, n_slots, on_k, dst_k = (
-            _phase_slot_assign(r, e_local, me, e_flat, rank, c_local=c_local)
-        )
-        gates = gates * admitted.reshape(gates.shape)
-        buf, pos, gate, live = _pack_slots(
-            x_loc, slot, gates.reshape(-1), admitted, n_slots
-        )
-        s_remote = n_slots - e_local * c_local
-
-        on_all = (jnp.arange(r.k_max) < r.n_phases)[:, None] & r.valid
-        ridx = jnp.arange(n, dtype=jnp.int32)
-        y_flat = jnp.zeros((n_slots, d), x_loc.dtype)
-        for k in range(r.k_max):
-            ck = env_slots[k]
-            if ck == 0:
-                continue  # dark phase slot: no bytes, no compute
-            lo, hi = bases[k], bases[k] + e_local * ck
-            region = buf[lo:hi].reshape(e_local, ck, d)
-            vregion = live[lo:hi].reshape(e_local, ck)
-            # one live destination slot (dst_k[k]) in an all_to_all-shaped
-            # buffer: the emulation of a circuit holding pair me->dst
-            send = (
-                jnp.zeros((n, e_local, ck, d), region.dtype)
-                .at[dst_k[k]]
-                .add(jnp.where(on_k[k], region, 0))
-            )
-            vsend = (
-                jnp.zeros((n, e_local, ck), jnp.float32)
-                .at[dst_k[k]]
-                .add(jnp.where(on_k[k], vregion.astype(jnp.float32), 0.0))
-            )
-            recv = a2a_dispatch(send, EP_AXIS)
-            vrecv = a2a_dispatch(vsend, EP_AXIS)
-            blk = recv.sum(axis=0)  # exactly one live source (or zeros)
-            vblk = vrecv.sum(axis=0) > 0
-            # phase k's GEMM: independent of phase k+1's all-to-all, so
-            # XLA overlaps the DMA with the MXU work (the pipeline)
-            y_k = expert_phase(wg, wu, wd, blk, vblk)
-            # return path: receiver j sends its processed block back to
-            # the rank that targeted it (the inverse permutation)
-            inv = (
-                jnp.zeros((n,), jnp.int32).at[r.perms[k]].set(ridx)
-            )
-            got_any = (
-                jnp.zeros((n,), jnp.int32)
-                .at[r.perms[k]]
-                .add(on_all[k].astype(jnp.int32))
-            )[me] > 0
-            back_send = (
-                jnp.zeros((n, e_local, ck, d), y_k.dtype)
-                .at[inv[me]]
-                .add(jnp.where(got_any, y_k, 0))
-            )
-            back = a2a_combine(back_send, EP_AXIS).sum(axis=0)
-            y_flat = y_flat.at[lo:hi].set(
-                jnp.where(on_k[k], back, 0).reshape(e_local * ck, d)
-            )
-        # local block: never crosses the fabric
-        lbuf = buf[s_remote:].reshape(e_local, c_local, d)
-        llive = live[s_remote:].reshape(e_local, c_local)
-        y_local = expert_phase(wg, wu, wd, lbuf, llive)
-        y_flat = y_flat.at[s_remote:].set(
-            y_local.reshape(e_local * c_local, d)
-        )
-        y_loc = _ungroup(y_flat, pos, gate, t_ep)
-        out = y_loc.astype(xb.dtype).reshape(bl, s_loc, d)
-        if not return_stats:
-            return out
-        return out, _stats(
-            _routing_counts(idx, m.n_experts)[None, None, :], admitted, live
-        )
-
-    def body_mono(xb, wr, wg, wu, wd, r_perms, r_caps, r_valid, r_offsets, r_nph):
-        r = ScheduleTable(r_perms, r_caps, r_valid, r_offsets, r_nph)
-        me = jax.lax.axis_index(EP_AXIS)
-        bl, s_loc, _ = xb.shape
-        t_ep = bl * s_loc
-        x_loc = xb.reshape(t_ep, d)
-        idx, gates = _router({"router": {"w": wr}}, cfg, x_loc)
-        src = jnp.full((t_ep * m.top_k,), me, jnp.int32)
-        gates, admitted = _admission(idx, gates, r, m.n_experts, src=src)
-        key = idx.reshape(-1)
-        # traced plans cannot change buffer shapes: every bucket gets the
-        # uniform capacity-factor cap (static), the plan clips within it
-        c_max = _round8(
-            math.ceil(t_ep * m.top_k / (n * e_local) * m.capacity_factor)
-        )
-        buf, pos, gate, live = _group(
-            x_loc, key, gates.reshape(-1), n * e_local, c_max,
-            admitted=admitted,
-        )
-        buf = buf.reshape(n, e_local, c_max, d)
-        vbuf = live.reshape(n, e_local, c_max).astype(jnp.float32)
-
-        recv = a2a_dispatch(buf, EP_AXIS)  # [n(src), e_local, C, d]
-        recv_v = a2a_dispatch(vbuf, EP_AXIS)
-        grouped = recv.transpose(1, 0, 2, 3).reshape(e_local, n * c_max, d)
-        live_r = recv_v.transpose(1, 0, 2).reshape(e_local, n * c_max) > 0
-
-        if not two_d:
-            y = _expert_ffn(
-                None, grouped, e_slice=(wg, wu, wd), use_pallas=m.use_pallas,
-                row_valid=live_r if m.use_pallas else None,
-            )
-        else:
-            gathered = jax.lax.all_gather(grouped, "data", axis=1, tiled=True)
-            live_g = jax.lax.all_gather(live_r, "data", axis=1, tiled=True)
-            y_part = _expert_ffn(
-                None, gathered, e_slice=(wg, wu, wd), use_pallas=m.use_pallas,
-                row_valid=live_g if m.use_pallas else None,
-            )
-            y = jax.lax.psum_scatter(
-                y_part, "data", scatter_dimension=1, tiled=True
-            )
-
-        y = y.reshape(e_local, n, c_max, d).transpose(1, 0, 2, 3)
-        back = a2a_combine(y, EP_AXIS)
-        y_loc = _ungroup(back, pos, gate, t_ep)
-        out = y_loc.astype(xb.dtype).reshape(bl, s_loc, d)
-        if not return_stats:
-            return out
-        return out, _stats(
-            _routing_counts(idx, m.n_experts)[None, None, :], admitted, live
-        )
-
-    fn = shard_map_compat(
-        body_phase if envelope is not None else body_mono,
-        mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False,
-    )
-    res = fn(
-        x,
-        params["router"]["w"],
-        params["w_gate"],
-        params["w_up"],
-        params["w_down"],
-        row.perms,
-        row.caps,
-        row.valid,
-        row.offsets,
-        row.n_phases,
-    )
-    if not return_stats:
-        return res
-    y, stats = res
-    return y, jax.tree.map(lambda a: a.sum(axis=0), stats)  # [n, E] / [n]
+    if ar is None or ar.mesh is None:
+        return 1
+    return ar.axis_size((EP_AXIS,))
 
 
 def _ep_feasible(cfg: ModelConfig, x: jax.Array) -> bool:
@@ -902,21 +341,27 @@ def moe_apply(
     cfg: ModelConfig,
     x: jax.Array,
     *,
-    schedule: A2ASchedule | ScheduleTable | None = None,
+    schedule=None,
     return_stats: bool = False,
 ):
-    """Apply the MoE FFN.  ``schedule`` is either a static ``A2ASchedule``
-    (baked into the executable; ppermute phases) or a traced
-    ``ScheduleTable`` *row* (swap-without-recompile; with a phase
-    envelope the EP path runs phase-pipelined dispatch, without one the
-    legacy monolithic all-to-all + admission mask).  With
-    ``return_stats`` the layer additionally returns a stats dict:
-    ``routing`` ``[n_src, E]`` realized routing counts (f32; one row per
-    EP source rank, a single row in dense mode) — the controller loop's
-    observation signal, host-fetched off the critical path — and
-    ``dropped`` ``[n_src]``, the count of plan-admitted tokens cut at
-    grouping (the over-promise divergence, zero by construction on the
-    phase-pipelined path apart from local capacity-factor overflow)."""
+    """Apply the MoE FFN through the fabric named by ``cfg.moe.dispatch``.
+
+    ``schedule`` is whatever the resolved fabric consumes: a static
+    ``A2ASchedule`` (ppermute; baked into the executable) or a traced
+    ``ScheduleTable`` *row* (phase_pipelined / ragged_a2a;
+    swap-without-recompile) — the ``scheduled`` alias resolves by
+    schedule type.  Off-mesh (or on shapes the EP shard_map cannot
+    split) every backend falls back to the ``dense`` virtual fabric,
+    which still executes a row's admission semantics.
+
+    With ``return_stats`` the layer additionally returns the fabric
+    stats contract: ``routing`` ``[n_src, E]`` realized routing counts
+    (f32; one row per EP source rank, a single row off-mesh) — the
+    controller loop's observation signal, host-fetched off the critical
+    path — and ``dropped`` ``[n_src]``, the count of plan-admitted
+    tokens cut at packing (zero by construction on the envelope fabrics
+    apart from local capacity-factor overflow).
+    """
     m = cfg.moe
     mode = m.dispatch
     if isinstance(schedule, ScheduleTable) and not schedule.is_row:
@@ -924,19 +369,17 @@ def moe_apply(
             "moe_apply consumes per-layer rows — pass table.row(l) (the "
             "stack's scan slices rows automatically)"
         )
-    if _ep_size() == 1 or mode == "dense" or not _ep_feasible(cfg, x):
-        row = schedule if isinstance(schedule, ScheduleTable) else None
-        return _moe_dense(params, cfg, x, row, return_stats=return_stats)
-    if mode == "a2a":
-        return _moe_ep(params, cfg, x, None, return_stats=return_stats)
-    if mode == "scheduled":
-        if schedule is None:
-            raise ValueError(
-                "scheduled dispatch needs an A2ASchedule or ScheduleTable row"
-            )
-        if isinstance(schedule, ScheduleTable):
-            return _moe_ep_table(
-                params, cfg, x, schedule, return_stats=return_stats
-            )
-        return _moe_ep(params, cfg, x, schedule, return_stats=return_stats)
-    raise ValueError(f"unknown dispatch mode {mode!r}")
+    if mode != "scheduled":
+        get_fabric(mode)  # unknown names fail fast, listing the registry
+    n = _ep_size()
+    if n == 1 or mode == "dense" or not _ep_feasible(cfg, x):
+        fabric = get_fabric("dense")
+        return _moe_virtual(
+            params, cfg, x, fabric, fabric.validate_schedule(schedule, n=1),
+            return_stats,
+        )
+    fabric = resolve_fabric(mode, schedule)
+    sched = fabric.validate_schedule(schedule, n=n)
+    if not fabric.uses_mesh:
+        return _moe_virtual(params, cfg, x, fabric, sched, return_stats)
+    return _moe_ep_pipeline(params, cfg, x, fabric, sched, return_stats)

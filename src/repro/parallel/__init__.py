@@ -8,11 +8,17 @@ from repro.parallel.sharding import (
     shard_map_compat,
 )
 
+# the dispatch-backend registry (one MoE pipeline over pluggable
+# fabrics; see docs/fabric.md).  Imported last: fabric modules import
+# repro.parallel.sharding/collectives directly, never this package.
+from repro.parallel import fabric
+
 __all__ = [
     "AxisRules",
     "DEFAULT_RULES",
     "axis_rules",
     "current_rules",
+    "fabric",
     "logical_to_spec",
     "shard",
     "shard_map_compat",

@@ -1,0 +1,68 @@
+"""``repro.parallel.fabric`` — pluggable MoE dispatch backends.
+
+One MoE pipeline (``models/moe.py``: route -> admit -> ``dispatch`` ->
+grouped ``moe_gemm`` -> ``combine``) over a name registry of ``Fabric``
+backends; ``MoECfg.dispatch`` selects by name.  See ``docs/fabric.md``
+for the protocol, the stats contract, the bytes-on-the-wire table and
+how to add a backend.
+
+Registered backends (import order registers them):
+
+=================  =========================================================
+``dense``          no-A2A EP (psum combine); single-device fallback and the
+                   virtual fabric for traced rows
+``a2a``            monolithic dense ``all_to_all`` (the paper's baseline)
+``ppermute``       static ``A2ASchedule`` as ppermute phases (plan baked in)
+``phase_pipelined``  traced ``ScheduleTable`` row + phase envelope
+                   (swap-without-recompile; dense per-phase emulation)
+``ragged_a2a``     same geometry, ``jax.lax.ragged_all_to_all`` movement —
+                   exactly the live envelope bytes per pair (emulation
+                   fallback off-TPU)
+=================  =========================================================
+
+Plus the ``scheduled`` alias (resolves by schedule type, kept for every
+pre-registry config).
+"""
+
+from repro.parallel.fabric.base import (
+    FABRICS,
+    Fabric,
+    FabricContext,
+    PackedTokens,
+    as_fabric_schedule,
+    consumes_schedule,
+    consumes_table,
+    fabric_names,
+    get_fabric,
+    register_fabric,
+    resolve_fabric,
+)
+
+# importing the backend modules registers them
+from repro.parallel.fabric import geometry  # noqa: F401
+from repro.parallel.fabric.dense import DenseFabric
+from repro.parallel.fabric.a2a import MonolithicA2AFabric
+from repro.parallel.fabric.ppermute import PPermuteFabric
+from repro.parallel.fabric.phase_pipelined import PhasePipelinedFabric
+from repro.parallel.fabric.ragged_a2a import RaggedA2AFabric, ragged_available
+
+__all__ = [
+    "FABRICS",
+    "Fabric",
+    "FabricContext",
+    "PackedTokens",
+    "DenseFabric",
+    "MonolithicA2AFabric",
+    "PPermuteFabric",
+    "PhasePipelinedFabric",
+    "RaggedA2AFabric",
+    "as_fabric_schedule",
+    "consumes_schedule",
+    "consumes_table",
+    "fabric_names",
+    "geometry",
+    "get_fabric",
+    "ragged_available",
+    "register_fabric",
+    "resolve_fabric",
+]

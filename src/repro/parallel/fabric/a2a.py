@@ -1,0 +1,76 @@
+"""``a2a`` fabric: monolithic dense all-to-all (the paper's baseline).
+
+Tokens sharded over the EP axis, one dense ``all_to_all`` dispatch +
+one combine over uniform capacity-factor buckets.  Every remote pair
+pays the full bucket regardless of planned traffic — the dark-fiber
+bytes the decomposition fabrics exist to avoid — but a single fused
+transfer and ONE grouped expert GEMM make it the bandwidth-optimal
+choice on an all-connected fabric with uniform traffic.
+
+Ignores ``schedule=``: this backend has no capacity plan to execute
+(use ``phase_pipelined`` for plan-clipped traced dispatch).
+"""
+
+from __future__ import annotations
+
+import math
+
+from repro.parallel.collectives import a2a_combine, a2a_dispatch
+from repro.parallel.fabric import geometry as g
+from repro.parallel.fabric.base import (
+    Fabric,
+    FabricContext,
+    PackedTokens,
+    register_fabric,
+)
+
+import jax.numpy as jnp
+
+
+@register_fabric
+class MonolithicA2AFabric(Fabric):
+    name = "a2a"
+    schedule_kind = "none"
+
+    def pack(self, ctx: FabricContext, x_loc, idx, gates) -> PackedTokens:
+        m = ctx.moe
+        t = x_loc.shape[0]
+        cap = g.round8(
+            math.ceil(
+                t * m.top_k / (ctx.n * ctx.e_local) * m.capacity_factor
+            )
+        )
+        # bucket id (dst_rank * e_local + local_expert) == the expert id
+        buf, pos, gate, live = g.group_tokens(
+            x_loc, idx.reshape(-1), gates.reshape(-1),
+            ctx.n * ctx.e_local, cap,
+        )
+        return PackedTokens(
+            buf, pos, gate, live,
+            admitted=jnp.ones((t * m.top_k,), bool),  # no plan: admit all
+            meta=cap,
+        )
+
+    def dispatch(self, ctx: FabricContext, packed: PackedTokens):
+        n, e_local, cap = ctx.n, ctx.e_local, packed.meta
+        d = packed.buf.shape[-1]
+        buf = packed.buf.reshape(n, e_local, cap, d)
+        recv = a2a_dispatch(buf, ctx.axis)  # [n(src), e_local, C, d]
+        grouped = recv.transpose(1, 0, 2, 3).reshape(e_local, n * cap, d)
+        return [(grouped, None)], None
+
+    def combine(self, ctx: FabricContext, packed: PackedTokens, state, ys):
+        n, e_local, cap = ctx.n, ctx.e_local, packed.meta
+        d = packed.buf.shape[-1]
+        y = ys[0].reshape(e_local, n, cap, d).transpose(1, 0, 2, 3)
+        back = a2a_combine(y, ctx.axis)
+        return back.reshape(n * e_local, cap, d)
+
+    def dispatch_tokens(
+        self, *, n: int, cap_uniform: int = 0, schedule=None, envelope=None
+    ):
+        """``(n - 1) * cap_uniform`` slots per rank: every remote pair is
+        padded to the uniform bucket (pass the no-drop bucket —
+        ``max(capacity-factor cap, hottest planned pair)`` — to compare
+        against plan-executing fabrics on equal delivered tokens)."""
+        return float((n - 1) * int(cap_uniform))

@@ -1,0 +1,307 @@
+"""The ``Fabric`` protocol + name registry.
+
+The paper's thesis is that the interconnect and the expert compute must
+be co-designed; PCCL and the reconfigurable-fabric line of work both
+frame the interconnect as a *swappable collective substrate* beneath a
+fixed ML program.  This module is that boundary for the repo: the MoE
+layer is ONE pipeline (route -> admit -> ``fabric.dispatch`` -> grouped
+``moe_gemm`` -> ``fabric.combine``) and everything fabric-specific —
+buffer geometry, admission source, movement collectives, bytes-on-the-
+wire accounting — lives behind a ``Fabric`` instance resolved from
+``MoECfg.dispatch`` by name.  A new interconnect (NVLink ragged, a real
+photonic fabric, a simulator-in-the-loop) lands as one registered file.
+
+Contract (enforced by the cross-fabric parity matrix in
+``tests/test_fabric.py`` / ``tests/multidev_fabric.py``):
+
+* **Admission/packing semantics are shared**, not per-backend: every
+  backend packs through ``fabric.geometry`` so two fabrics given the
+  same plan admit exactly the same (token, choice) prefix.  Backends
+  may only differ in *movement* and padding bytes.
+* **Stats contract**: the pipeline emits ``{"routing", "dropped"}``
+  (see ``geometry.stats_tree``) for every backend — ``routing`` is the
+  realized pre-drop demand, ``dropped`` counts plan-admitted choices
+  the shape-static buffers still cut.
+* **Buffer geometry is the backend's** (``pack``); ``dispatch`` returns
+  the expert-compute blocks (so phase k's GEMM can overlap phase k+1's
+  transfer — the blocks carry no cross-phase data dependencies) and
+  ``combine`` returns processed slots aligned with the send buffer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, ClassVar
+
+import jax
+
+from repro.core.schedule import A2ASchedule, ScheduleTable
+
+__all__ = [
+    "Fabric",
+    "FabricContext",
+    "PackedTokens",
+    "FABRICS",
+    "register_fabric",
+    "get_fabric",
+    "fabric_names",
+    "resolve_fabric",
+    "consumes_schedule",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class FabricContext:
+    """Per-call context a fabric's hooks receive.
+
+    ``axis``/``me`` are None outside a mesh (the dense/virtual path);
+    inside the EP shard_map ``me`` is the traced rank index.  ``n`` is
+    the fabric size the *movement* runs on (1 off-mesh — the virtual
+    fabric's rank count lives in the schedule row), ``e_local`` the
+    experts per rank, ``t_local`` the per-shard token count (static).
+    """
+
+    cfg: Any  # ModelConfig (duck-typed: .moe, .d_model)
+    n: int
+    e_local: int
+    axis: str | None
+    me: jax.Array | None
+    schedule: A2ASchedule | ScheduleTable | None
+    two_d: bool = False
+    t_local: int = 0
+
+    @property
+    def moe(self):
+        return self.cfg.moe
+
+
+@dataclasses.dataclass
+class PackedTokens:
+    """A fabric's packed slot space (see ``geometry``).
+
+    ``buf`` holds one row of ``cfg.d_model`` per slot (any leading slot
+    layout — the pipeline only flattens it for the final scatter-add);
+    ``pos``/``gate``/``live`` are slot-aligned; ``admitted`` is the
+    [T*k] choice-level admission mask feeding the drop accounting.
+    ``meta`` is backend-private geometry state threaded to
+    dispatch/combine."""
+
+    buf: jax.Array
+    pos: jax.Array
+    gate: jax.Array
+    live: jax.Array
+    admitted: jax.Array
+    meta: Any = None
+
+
+class Fabric:
+    """One dispatch backend.  Stateless — registered as a singleton.
+
+    Class attributes (the *capabilities* the plumbing keys on):
+
+    * ``name`` — the registry name ``MoECfg.dispatch`` selects.
+    * ``uses_mesh`` — runs under the EP shard_map (False: the dense
+      backend, which also serves as every mesh backend's single-device
+      / infeasible-shape fallback and as the *virtual* fabric when
+      handed a ``ScheduleTable`` row).
+    * ``schedule_kind`` — what ``schedule=`` the backend consumes:
+      ``"none"`` (ignores schedules), ``"static"`` (``A2ASchedule``,
+      baked into the executable), ``"row"`` (traced ``ScheduleTable``
+      row; swap-without-recompile), ``"optional_row"`` (row if given).
+    * ``requires_envelope`` — the row must carry a phase envelope.
+    """
+
+    name: ClassVar[str]
+    uses_mesh: ClassVar[bool] = True
+    schedule_kind: ClassVar[str] = "none"
+    requires_envelope: ClassVar[bool] = False
+
+    # ------------------------------------------------------------ schedule
+    def validate_schedule(self, schedule, *, n: int):
+        """Normalize/check ``schedule`` for this backend.
+
+        Returns the schedule the pipeline should use (possibly None for
+        schedule-ignoring backends).  Raises ``ValueError`` naming the
+        backend on misuse — a ``ScheduleTable`` row handed to a static
+        backend (or vice versa) must say *who* rejected it."""
+        kind = self.schedule_kind
+        if kind == "none":
+            return None  # dense/a2a ignore plans (documented behavior)
+        if kind == "static":
+            if isinstance(schedule, ScheduleTable):
+                raise ValueError(
+                    f"{self.name}: rejected a traced ScheduleTable row — "
+                    "this backend bakes a static A2ASchedule into the "
+                    "executable; use the 'phase_pipelined' (or "
+                    "'ragged_a2a') fabric for swap-without-recompile rows"
+                )
+            if not isinstance(schedule, A2ASchedule):
+                raise ValueError(
+                    f"{self.name}: needs a static A2ASchedule "
+                    f"(got {type(schedule).__name__})"
+                )
+            return schedule
+        # row-consuming backends
+        if isinstance(schedule, A2ASchedule):
+            raise ValueError(
+                f"{self.name}: rejected a static A2ASchedule — this "
+                "backend consumes traced ScheduleTable rows (build one "
+                "with core.ScheduleTable.from_schedules); use the "
+                "'ppermute' fabric for static plans"
+            )
+        if not isinstance(schedule, ScheduleTable):
+            if kind == "optional_row" and schedule is None:
+                return None
+            raise ValueError(
+                f"{self.name}: needs a ScheduleTable row "
+                f"(got {type(schedule).__name__})"
+            )
+        if not schedule.is_row:
+            raise ValueError(
+                f"{self.name}: rejected a full ScheduleTable — pass "
+                "table.row(l) (the stack's scan slices rows "
+                "automatically)"
+            )
+        if self.uses_mesh and schedule.n != n:
+            raise ValueError(
+                f"{self.name}: schedule row plans {schedule.n} ranks, "
+                f"EP axis has {n}"
+            )
+        if self.requires_envelope and schedule.envelope is None:
+            raise ValueError(
+                f"{self.name}: needs a ScheduleTable row with a phase "
+                "envelope (ScheduleTable.from_schedules(..., "
+                "envelope='auto') or a ScheduleRuntime with "
+                "envelope_slack > 0) — the envelope is the backend's "
+                "static buffer geometry"
+            )
+        return schedule
+
+    # ------------------------------------------------------------ pipeline
+    def pack(self, ctx: FabricContext, x_loc, idx, gates) -> PackedTokens:
+        """Route -> slot: pack [T, d] tokens + [T, k] routing into this
+        backend's slot buffer (admission applied where the backend's
+        schedule calls for it)."""
+        raise NotImplementedError
+
+    def dispatch(self, ctx: FabricContext, packed: PackedTokens):
+        """Move slots across the fabric.  Returns ``(blocks, state)``:
+        ``blocks`` is a list of ``(x_block [G, C, d], live [G, C]|None)``
+        expert-compute inputs (G = local experts; one block per phase on
+        the pipelined backends so GEMM k overlaps transfer k+1), and
+        ``state`` is threaded to ``combine``."""
+        raise NotImplementedError
+
+    def combine(self, ctx: FabricContext, packed: PackedTokens, state, ys):
+        """Return processed blocks to their senders; result is aligned
+        with ``packed.buf``'s slot layout."""
+        raise NotImplementedError
+
+    # ----------------------------------------------------------- accounting
+    def dispatch_tokens(
+        self, *, n: int, cap_uniform: int = 0, schedule=None, envelope=None
+    ):
+        """Per-rank dispatch slot tokens this backend puts on the wire
+        (mean over ranks; multiply by ``d_model * dtype_bytes`` for
+        bytes).  The number the bench's ``bytes_moved`` table tracks —
+        each backend documents what it counts (padding included, local
+        traffic excluded)."""
+        raise NotImplementedError
+
+
+# ------------------------------------------------------------------ registry
+FABRICS: dict[str, Fabric] = {}
+
+
+def register_fabric(cls: type[Fabric]) -> type[Fabric]:
+    """Class decorator: instantiate + register under ``cls.name``."""
+    if not getattr(cls, "name", None):
+        raise ValueError(f"{cls.__name__} has no fabric name")
+    FABRICS[cls.name] = cls()
+    return cls
+
+
+def fabric_names() -> tuple[str, ...]:
+    """Registered backend names, sorted (error messages + benches)."""
+    return tuple(sorted(FABRICS))
+
+
+def _unknown(name: str) -> ValueError:
+    return ValueError(
+        f"unknown dispatch mode {name!r}: registered fabrics are "
+        f"{', '.join(fabric_names())} (plus the 'scheduled' alias, "
+        "which resolves by schedule type)"
+    )
+
+
+def get_fabric(name: str) -> Fabric:
+    """Look up a backend by exact registry name."""
+    try:
+        return FABRICS[name]
+    except KeyError:
+        raise _unknown(name) from None
+
+
+# "scheduled" predates the registry: it means "whatever scheduled backend
+# matches the schedule object I was handed" — static plans ran ppermute
+# phases, traced rows the table path.  Kept as an alias so every seed
+# config / CLI flag / checkpointed cfg keeps working.
+_SCHEDULED_ALIAS = "scheduled"
+
+
+def resolve_fabric(name: str, schedule=None) -> Fabric:
+    """Resolve a ``MoECfg.dispatch`` value (name or alias) to a backend.
+
+    Raises ``ValueError`` listing the registered names for an unknown
+    value; the ``scheduled`` alias picks ``ppermute`` for a static
+    ``A2ASchedule`` and ``phase_pipelined`` for a ``ScheduleTable`` row.
+    """
+    if name == _SCHEDULED_ALIAS:
+        if isinstance(schedule, A2ASchedule):
+            return FABRICS["ppermute"]
+        if isinstance(schedule, ScheduleTable):
+            return FABRICS["phase_pipelined"]
+        raise ValueError(
+            "scheduled dispatch needs an A2ASchedule or ScheduleTable row"
+        )
+    return get_fabric(name)
+
+
+def consumes_schedule(name: str) -> bool:
+    """Does this dispatch value *require* a planned schedule?  The knob
+    the training loop / servers use to decide whether to thread the
+    controller's ``ScheduleTable`` into the jitted step.  ``dense``'s
+    ``optional_row`` does not count: the virtual fabric can execute a
+    row it is handed, but dense dispatch runs schedule-less (the
+    historic behavior the loops key on).  Unknown names raise (fail
+    fast at config time, listing the registry)."""
+    if name == _SCHEDULED_ALIAS:
+        return True
+    return get_fabric(name).schedule_kind in ("static", "row")
+
+
+def consumes_table(name: str) -> bool:
+    """Does this dispatch value consume *traced* ``ScheduleTable`` rows —
+    the swap-without-recompile contract a ``ScheduleRuntime`` drives?
+    False for ``ppermute``: its plans are baked into the executable, so
+    a controller cannot swap them without recompiling (the loops refuse
+    a runtime for it up front instead of trace-failing)."""
+    if name == _SCHEDULED_ALIAS:
+        return True  # resolves to phase_pipelined when handed a table
+    return get_fabric(name).schedule_kind == "row"
+
+
+def as_fabric_schedule(name: str, schedule, n_moe_layers: int):
+    """Adapt a planner's static ``A2ASchedule`` to what the named fabric
+    consumes: row-kind fabrics get a per-layer ``ScheduleTable`` (one
+    row per MoE layer, auto envelope); static consumers — and the
+    ``scheduled`` alias, which resolves static plans to ``ppermute`` —
+    pass through unchanged.  The one place launchers adapt planner
+    output to a fabric (``launch.train`` / ``launch.dryrun``)."""
+    if not isinstance(schedule, A2ASchedule) or name == _SCHEDULED_ALIAS:
+        return schedule
+    if get_fabric(name).schedule_kind != "row":
+        return schedule
+    return ScheduleTable.from_schedules(
+        [schedule] * n_moe_layers, envelope="auto"
+    )

@@ -1,0 +1,264 @@
+"""``phase_pipelined`` fabric: traced ``ScheduleTable`` rows against a
+static phase envelope — the production traced path.
+
+The row is ordinary traced input (replicated into the shard_map), so a
+re-planned table reaches the same executable without recompiling.  Two
+executions, chosen *statically* by whether the table carries a phase
+envelope (the envelope is pytree aux, i.e. part of the jit cache key):
+
+**Phase-pipelined (envelope set).**  Dispatch is phase-major: the K_max
+phase slots are statically unrolled, phase k moving a bucket sized to
+the static per-phase envelope ``envelope_slots[k]`` (derived by the
+runtime from the library's max planned pair capacity; growing — or,
+with ``envelope_decay``, shrinking — it is the one recompile, swaps
+within it are free).  Each received phase block enters its own grouped
+``moe_gemm`` launch, so phase k's expert GEMM overlaps phase k+1's
+transfer.  Admission and buffer sizing read the same envelope-clamped
+``phase_slot_caps``, so **every admitted token has a slot by
+construction** — the monolithic path's over-promise drop cannot happen,
+and bytes moved shrink from ``(n-1) * c_uniform`` padded buckets to the
+sum of planned phase envelopes (dark pairs ship nothing).  On this
+emulated fabric each phase rides a dense ``all_to_all`` with a single
+live destination slot (a traced perm cannot drive ``ppermute``'s static
+pair list); the ``ragged_a2a`` fabric subclasses exactly this geometry
+and swaps the per-phase transfer for one that carries only the live
+pair's bytes.
+
+**Monolithic (no envelope — legacy).**  One dense all-to-all over
+uniform capacity-factor buckets; the plan clips via the admission mask.
+Parity with the static path holds only while every pair's planned
+per-expert capacity fits the uniform bucket — a plan that over-promises
+it gets admitted tokens cut at grouping.  That cut is *observable*: the
+stats aux counts admitted-but-dropped tokens
+(``ScheduleRuntime.metrics()`` surfaces them).
+
+A slot-validity mask travels with the tokens so the receiver knows
+which rows are live — explicit validity, not the combine-gate sign: an
+admitted choice with a 0.0 router gate still reaches expert compute.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.parallel.collectives import a2a_combine, a2a_dispatch
+from repro.parallel.fabric import geometry as g
+from repro.parallel.fabric.base import (
+    Fabric,
+    FabricContext,
+    PackedTokens,
+    register_fabric,
+)
+
+
+@dataclasses.dataclass
+class _PhaseMeta:
+    """Geometry state threaded pack -> dispatch -> combine."""
+
+    bases: tuple[int, ...]
+    env_slots: tuple[int, ...]
+    c_local: int
+    s_remote: int
+    on_k: Any    # [K] bool — my participation per phase
+    dst_k: Any   # [K] int32 — my destination per phase
+    on_all: Any  # [K, n] bool — everyone's participation
+
+
+@register_fabric
+class PhasePipelinedFabric(Fabric):
+    name = "phase_pipelined"
+    schedule_kind = "row"
+
+    # ------------------------------------------------------------- packing
+    def pack(self, ctx: FabricContext, x_loc, idx, gates) -> PackedTokens:
+        row = ctx.schedule
+        if row.envelope is None:
+            return self._pack_mono(ctx, x_loc, idx, gates)
+        m = ctx.moe
+        n, e_local = ctx.n, ctx.e_local
+        t = x_loc.shape[0]
+        e_flat = idx.reshape(-1)
+        rank = g.rank_in_group(e_flat)
+        # local bucket: uniform capacity-factor cap, floored at the
+        # largest envelope slot so a hot local pair never fares worse
+        # than a remote one (the static path gives local c_max too)
+        cap_uni = g.round8(
+            math.ceil(t * m.top_k / (n * e_local) * m.capacity_factor)
+        )
+        env_slots = row.envelope_slots(e_local)
+        c_local = max(cap_uni, max(env_slots) if env_slots else cap_uni)
+        slot, admitted, bases, env_slots, n_slots, on_k, dst_k = (
+            g.phase_slot_assign(
+                row, e_local, ctx.me, e_flat, rank, c_local=c_local
+            )
+        )
+        gates = gates * admitted.reshape(gates.shape)
+        buf, pos, gate, live = g.pack_slots(
+            x_loc, slot, gates.reshape(-1), admitted, n_slots
+        )
+        on_all = (jnp.arange(row.k_max) < row.n_phases)[:, None] & row.valid
+        meta = _PhaseMeta(
+            bases=bases,
+            env_slots=env_slots,
+            c_local=c_local,
+            s_remote=n_slots - e_local * c_local,
+            on_k=on_k,
+            dst_k=dst_k,
+            on_all=on_all,
+        )
+        return PackedTokens(buf, pos, gate, live, admitted, meta=meta)
+
+    def _pack_mono(self, ctx: FabricContext, x_loc, idx, gates):
+        m = ctx.moe
+        n, e_local = ctx.n, ctx.e_local
+        t = x_loc.shape[0]
+        src = jnp.full((t * m.top_k,), ctx.me, jnp.int32)
+        gates, admitted = g.admission_mask(
+            idx, gates, ctx.schedule, m.n_experts, src=src
+        )
+        # traced plans cannot change buffer shapes: every bucket gets the
+        # uniform capacity-factor cap (static), the plan clips within it
+        c_max = g.round8(
+            math.ceil(t * m.top_k / (n * e_local) * m.capacity_factor)
+        )
+        buf, pos, gate, live = g.group_tokens(
+            x_loc, idx.reshape(-1), gates.reshape(-1), n * e_local, c_max,
+            admitted=admitted,
+        )
+        return PackedTokens(buf, pos, gate, live, admitted, meta=c_max)
+
+    # ------------------------------------------------------ phase transfer
+    # The one seam between phase_pipelined and ragged_a2a: everything
+    # else (geometry, admission, per-phase GEMMs, combine scatter) is
+    # shared, so the two fabrics are numerically identical by
+    # construction and differ only in bytes on the wire.
+    def _transfer(self, ctx, row, k, region, vregion, meta: _PhaseMeta):
+        """Phase k forward: my [e_local, ck, d] block to dst_k[k].
+        Returns (blk, vblk) — the block I *serve* this phase (zeros when
+        nobody targets me).  Emulation: one live destination slot in an
+        all_to_all-shaped buffer (a traced perm can't drive ppermute's
+        static pair list)."""
+        n = ctx.n
+        e_local, ck, d = region.shape[0], region.shape[1], region.shape[2]
+        send = (
+            jnp.zeros((n, e_local, ck, d), region.dtype)
+            .at[meta.dst_k[k]]
+            .add(jnp.where(meta.on_k[k], region, 0))
+        )
+        vsend = (
+            jnp.zeros((n, e_local, ck), jnp.float32)
+            .at[meta.dst_k[k]]
+            .add(jnp.where(meta.on_k[k], vregion.astype(jnp.float32), 0.0))
+        )
+        recv = a2a_dispatch(send, ctx.axis)
+        vrecv = a2a_dispatch(vsend, ctx.axis)
+        # exactly one live source (or zeros)
+        return recv.sum(axis=0), vrecv.sum(axis=0) > 0
+
+    def _transfer_back(self, ctx, row, k, y_k, meta: _PhaseMeta):
+        """Phase k return: my processed block back to whoever targeted
+        me (the inverse permutation).  Returns the [e_local, ck, d]
+        block of MY tokens processed remotely (garbage where I did not
+        participate — the caller masks with on_k[k])."""
+        n = ctx.n
+        ridx = jnp.arange(n, dtype=jnp.int32)
+        inv = jnp.zeros((n,), jnp.int32).at[row.perms[k]].set(ridx)
+        got_any = (
+            jnp.zeros((n,), jnp.int32)
+            .at[row.perms[k]]
+            .add(meta.on_all[k].astype(jnp.int32))
+        )[ctx.me] > 0
+        back_send = (
+            jnp.zeros((n, *y_k.shape), y_k.dtype)
+            .at[inv[ctx.me]]
+            .add(jnp.where(got_any, y_k, 0))
+        )
+        return a2a_combine(back_send, ctx.axis).sum(axis=0)
+
+    # ------------------------------------------------------------ dispatch
+    def dispatch(self, ctx: FabricContext, packed: PackedTokens):
+        if ctx.schedule.envelope is None:
+            return self._dispatch_mono(ctx, packed)
+        meta: _PhaseMeta = packed.meta
+        row = ctx.schedule
+        e_local = ctx.e_local
+        d = packed.buf.shape[-1]
+        blocks, records = [], []
+        for k in range(row.k_max):
+            ck = meta.env_slots[k]
+            if ck == 0:
+                continue  # dark phase slot: no bytes, no compute
+            lo, hi = meta.bases[k], meta.bases[k] + e_local * ck
+            region = packed.buf[lo:hi].reshape(e_local, ck, d)
+            vregion = packed.live[lo:hi].reshape(e_local, ck)
+            blk, vblk = self._transfer(ctx, row, k, region, vregion, meta)
+            # phase k's GEMM depends only on phase k's transfer, so XLA
+            # overlaps phase k+1's DMA with the MXU work (the pipeline)
+            blocks.append((blk, vblk))
+            records.append((k, lo, hi, ck))
+        # local block: never crosses the fabric
+        lbuf = packed.buf[meta.s_remote :].reshape(e_local, meta.c_local, d)
+        llive = packed.live[meta.s_remote :].reshape(e_local, meta.c_local)
+        blocks.append((lbuf, llive))
+        return blocks, records
+
+    def _dispatch_mono(self, ctx: FabricContext, packed: PackedTokens):
+        n, e_local, c_max = ctx.n, ctx.e_local, packed.meta
+        d = packed.buf.shape[-1]
+        buf = packed.buf.reshape(n, e_local, c_max, d)
+        vbuf = packed.live.reshape(n, e_local, c_max).astype(jnp.float32)
+        recv = a2a_dispatch(buf, ctx.axis)  # [n(src), e_local, C, d]
+        recv_v = a2a_dispatch(vbuf, ctx.axis)
+        grouped = recv.transpose(1, 0, 2, 3).reshape(e_local, n * c_max, d)
+        live_r = recv_v.transpose(1, 0, 2).reshape(e_local, n * c_max) > 0
+        return [(grouped, live_r)], None
+
+    # ------------------------------------------------------------- combine
+    def combine(self, ctx: FabricContext, packed: PackedTokens, state, ys):
+        if ctx.schedule.envelope is None:
+            return self._combine_mono(ctx, packed, ys)
+        meta: _PhaseMeta = packed.meta
+        row = ctx.schedule
+        e_local = ctx.e_local
+        d = packed.buf.shape[-1]
+        y_flat = jnp.zeros(packed.buf.shape, packed.buf.dtype)
+        for (k, lo, hi, ck), y_k in zip(state, ys):
+            back = self._transfer_back(ctx, row, k, y_k, meta)
+            y_flat = y_flat.at[lo:hi].set(
+                jnp.where(meta.on_k[k], back, 0).reshape(e_local * ck, d)
+            )
+        y_local = ys[-1]
+        y_flat = y_flat.at[meta.s_remote :].set(
+            y_local.reshape(e_local * meta.c_local, d)
+        )
+        return y_flat
+
+    def _combine_mono(self, ctx: FabricContext, packed: PackedTokens, ys):
+        n, e_local, c_max = ctx.n, ctx.e_local, packed.meta
+        d = packed.buf.shape[-1]
+        y = ys[0].reshape(e_local, n, c_max, d).transpose(1, 0, 2, 3)
+        back = a2a_combine(y, ctx.axis)
+        return back.reshape(n * e_local, c_max, d)
+
+    # ---------------------------------------------------------- accounting
+    def dispatch_tokens(
+        self, *, n: int, cap_uniform: int = 0, schedule=None, envelope=None
+    ):
+        """What the dense *emulation* ships: each live phase slot rides a
+        full all_to_all-shaped ``[n, ...]`` buffer with one live
+        destination, so every rank pays ``(n - 1) * envelope[k]`` slots
+        per live phase slot — participation or not.  A circuit fabric or
+        the ``ragged_a2a`` backend carries only the live pair's bytes
+        (``phase_dispatch_tokens``); the gap is the emulation tax, not
+        the algorithm's."""
+        if envelope is None:
+            raise ValueError(
+                "phase_pipelined accounting needs the envelope"
+            )
+        env = np.asarray(envelope, dtype=np.int64)
+        return float((n - 1) * env[env > 0].sum())

@@ -1,0 +1,122 @@
+"""``ppermute`` fabric: static decomposed schedule as ppermute phases.
+
+The paper's technique with the plan baked into the executable: the
+all-to-all is decomposed host-side (max-weight / shift / BvN) into K
+phases with per-phase capacities; each phase is one ``jax.lax.ppermute``
+— the ICI analogue of holding an optical circuit — with idle pairs
+dropped from the source-target list (the circuit stays dark).  Skewed
+traffic ⇒ fewer, denser phases ⇒ fewer collective bytes than ``a2a``.
+This is the bytes *floor* among the executing fabrics (caps, not
+envelopes, no emulation padding); the price is that changing the plan
+recompiles — use ``phase_pipelined`` / ``ragged_a2a`` for traced rows.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cost_models import phase_dispatch_tokens
+from repro.core.schedule import A2ASchedule, phase_offsets
+from repro.parallel.collectives import scheduled_combine, scheduled_dispatch
+from repro.parallel.fabric import geometry as g
+from repro.parallel.fabric.base import (
+    Fabric,
+    FabricContext,
+    PackedTokens,
+    register_fabric,
+)
+
+
+@register_fabric
+class PPermuteFabric(Fabric):
+    name = "ppermute"
+    schedule_kind = "static"
+
+    def pack(self, ctx: FabricContext, x_loc, idx, gates) -> PackedTokens:
+        m = ctx.moe
+        n, e_local = ctx.n, ctx.e_local
+        t = x_loc.shape[0]
+        schedule: A2ASchedule = ctx.schedule
+        # Capacities: per-phase (pair tokens / E_local) in per-expert
+        # units; the local bucket always gets at least the uniform cap.
+        cap_uni = g.round8(
+            math.ceil(t * m.top_k / (n * e_local) * m.capacity_factor)
+        )
+        phase_caps = g.round8(-(-schedule.caps.astype(np.int64) // e_local))
+        if schedule.offsets is not None:
+            # multi-phase pairs (BvN): the bucket must hold each pair's
+            # TOTAL allocation across phases
+            per_pair = schedule.cap_matrix(caps=phase_caps)
+            c_max = max(cap_uni, int(per_pair.max()))
+            offsets = phase_offsets(
+                schedule.perms, schedule.valid, phase_caps
+            ).astype(schedule.offsets.dtype)
+        else:
+            c_max = max(cap_uni, int(phase_caps.max()))
+            offsets = None
+        sched_pe = A2ASchedule(  # the plan rescaled to per-expert units
+            perms=schedule.perms,
+            caps=np.asarray(phase_caps, dtype=np.int32),
+            valid=schedule.valid,
+            offsets=offsets,
+        )
+        buf, pos, gate, live = g.group_tokens(
+            x_loc, idx.reshape(-1), gates.reshape(-1), n * e_local, c_max
+        )
+        return PackedTokens(
+            buf, pos, gate, live,
+            admitted=jnp.ones((t * m.top_k,), bool),  # plan caps via buckets
+            meta=(sched_pe, c_max),
+        )
+
+    def dispatch(self, ctx: FabricContext, packed: PackedTokens):
+        sched_pe, c_max = packed.meta
+        n, e_local = ctx.n, ctx.e_local
+        d = packed.buf.shape[-1]
+        buf = packed.buf.reshape(n, e_local, c_max, d)
+        blocks = scheduled_dispatch(buf, sched_pe, ctx.axis)
+        if ctx.two_d:
+            # 2D expert sharding keeps per-phase compute: each phase's
+            # token gather over 'data' stays bounded by one phase's
+            # capacity (fusing would gather the whole concatenated buffer
+            # at once), and phase k's GEMM can still overlap phase k+1's
+            # ppermute.
+            return [(blk, None) for blk in blocks], None
+        # Grouped expert compute: the received phase blocks concatenate
+        # along the capacity dim and enter ONE GEMM (a single Pallas
+        # launch under use_pallas) instead of K+1 per-phase launches —
+        # K phases no longer fragment the expert batch (the paper's
+        # Fig. 3 small-batch penalty, attacked at the kernel layer).  The
+        # trade: the fused GEMM waits for the last phase's ppermute,
+        # giving up the per-phase compute/DMA overlap — fragmented
+        # launches cost more than the overlap buys at the small per-phase
+        # batches this path exists for.
+        sizes = [int(blk.shape[1]) for blk in blocks]
+        return [(jnp.concatenate(blocks, axis=1), None)], sizes
+
+    def combine(self, ctx: FabricContext, packed: PackedTokens, state, ys):
+        sched_pe, c_max = packed.meta
+        n, e_local = ctx.n, ctx.e_local
+        d = packed.buf.shape[-1]
+        if state is not None:  # fused: split the single GEMM output back
+            bounds = np.cumsum(state)[:-1]
+            parts = jnp.split(ys[0], bounds, axis=1)
+        else:
+            parts = list(ys)
+        back = scheduled_combine(parts, sched_pe, ctx.axis, c_max)
+        return back.reshape(n * e_local, c_max, d)
+
+    def dispatch_tokens(
+        self, *, n: int, cap_uniform: int = 0, schedule=None, envelope=None
+    ):
+        """The plan's own caps, phases the rank participates in only —
+        the lower bound baking the plan into the executable achieves
+        (dark pairs ship nothing)."""
+        if schedule is None:
+            raise ValueError("ppermute accounting needs the A2ASchedule")
+        return float(
+            np.mean(phase_dispatch_tokens(schedule.valid, schedule.caps))
+        )

@@ -28,6 +28,10 @@ import numpy as np
 from repro.checkpoint import CheckpointManager
 from repro.data import DataConfig, SyntheticStream
 from repro.optim import AdamW, cosine_schedule, ef_int8_init
+from repro.parallel.fabric import (
+    consumes_schedule as _fabric_consumes,
+    consumes_table as _fabric_consumes_table,
+)
 from repro.train.train_step import make_train_step
 
 log = logging.getLogger("repro.train")
@@ -97,28 +101,43 @@ def train_loop(
             donate_argnums=(0, 1, 2),
         )
 
+    # does the configured fabric execute a planned schedule?  Resolved
+    # through the fabric registry (unknown dispatch names fail fast here,
+    # listing the registered backends, instead of max_failures+1 times
+    # inside the jitted step).
     moe_cfg = getattr(model.cfg, "moe", None)
-    consumes_schedule = moe_cfg is not None and moe_cfg.dispatch == "scheduled"
+    consumes_schedule = moe_cfg is not None and _fabric_consumes(
+        moe_cfg.dispatch
+    )
     schedule = None
     if runtime is not None and consumes_schedule:
         # fail fast: config errors, not transient faults — left to the
-        # step function they would trace-fail max_failures+1 times.  The
-        # runtime MUST be primed here even if the model carries a static
-        # schedule: the step compiles against the table's pytree
+        # step function they would trace-fail max_failures+1 times.
+        if not _fabric_consumes_table(moe_cfg.dispatch):
+            raise ValueError(
+                f"{moe_cfg.dispatch!r} bakes its schedule into the "
+                "executable — a controller runtime cannot swap its plans "
+                "without recompiling; use the 'phase_pipelined' or "
+                "'ragged_a2a' fabric for runtime-driven swaps, or drop "
+                "the runtime and pass a static schedule via Model"
+            )
+        # The runtime MUST be primed here even if the model carries a
+        # static schedule: the step compiles against the table's pytree
         # structure from step 0, so a later None -> table transition
         # would retrace — the recompile the traced path exists to avoid.
         if runtime.schedules is None:
             raise ValueError(
-                "scheduled dispatch with a runtime needs a primed "
-                "runtime before the first step (ScheduleRuntime.prime), "
-                "so drift swaps stay compile-free from step 0"
+                f"{moe_cfg.dispatch!r} dispatch with a runtime needs a "
+                "primed runtime before the first step "
+                "(ScheduleRuntime.prime), so drift swaps stay "
+                "compile-free from step 0"
             )
         schedule = runtime.table()
     elif consumes_schedule and model.schedule is None:
         raise ValueError(
-            "scheduled dispatch needs a schedule before the first step: "
-            "prime the runtime (ScheduleRuntime.prime) or pass a Model "
-            "with an initial schedule"
+            f"{moe_cfg.dispatch!r} dispatch needs a schedule before the "
+            "first step: prime the runtime (ScheduleRuntime.prime) or "
+            "pass a Model with an initial schedule"
         )
     # ONE executable for the whole run: the schedule is traced input
     # (ScheduleTable), so controller swaps pass new arrays into the same

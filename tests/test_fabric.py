@@ -1,0 +1,459 @@
+"""Fabric API (PR 5): the registry, the error paths, and the
+cross-fabric parity matrix.
+
+The real EP movement is exercised on an 8-device mesh in
+``tests/multidev_fabric.py`` (slow lane); everything here runs on one
+device, where every mesh backend resolves through the shared *virtual*
+dense fallback — which is itself part of the parity matrix: all
+registered fabrics must agree on values, grads, and the
+``{routing, dropped}`` stats contract because they share one pipeline
+and one geometry module, and the single-device virtual fabric must
+execute a traced row's admission semantics identically to the pair-caps
+oracle.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, MoECfg
+from repro.core import ScheduleTable, decompose, plan_schedule
+from repro.models import moe
+from repro.parallel.fabric import (
+    FABRICS,
+    consumes_schedule,
+    fabric_names,
+    get_fabric,
+    resolve_fabric,
+)
+
+N_V = 4
+ALL_FABRICS = ("dense", "a2a", "ppermute", "phase_pipelined", "ragged_a2a")
+
+
+def _cfg(dispatch: str = "dense", **moe_kw):
+    kw = dict(
+        n_experts=8, top_k=2, d_ff_expert=32, dispatch=dispatch,
+        capacity_factor=8.0,
+    )
+    kw.update(moe_kw)
+    return ModelConfig(
+        name="fabric-test",
+        family="moe",
+        n_layers=1,
+        d_model=32,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=64,
+        vocab_size=128,
+        moe=MoECfg(**kw),
+        remat="none",
+    )
+
+
+def _plan(seed: int, scale: float = 400.0, n: int = N_V):
+    rng = np.random.default_rng(seed)
+    m = rng.random((n, n)) * scale
+    np.fill_diagonal(m, 0)
+    return plan_schedule(decompose(m, "maxweight"))
+
+
+def _row(seed: int = 0, envelope="auto"):
+    return ScheduleTable.from_schedules(
+        [_plan(seed)], k_max=N_V, envelope=envelope
+    ).row(0)
+
+
+class TestRegistry:
+    def test_all_five_registered(self):
+        assert set(ALL_FABRICS) <= set(fabric_names())
+
+    def test_unknown_dispatch_lists_registered_names(self):
+        """Satellite: the error names every registered fabric."""
+        with pytest.raises(ValueError) as e:
+            get_fabric("photonic_tbd")
+        msg = str(e.value)
+        for name in fabric_names():
+            assert name in msg, f"{name} missing from: {msg}"
+        assert "scheduled" in msg  # the alias is documented too
+
+    def test_moe_apply_unknown_dispatch(self):
+        cfg = _cfg("warp_drive")
+        params = moe.moe_init(jax.random.PRNGKey(0), cfg)
+        x = jnp.zeros((1, 4, 32), jnp.float32)
+        with pytest.raises(ValueError, match="registered fabrics"):
+            moe.moe_apply(params, cfg, x)
+
+    def test_scheduled_alias_resolution(self):
+        from repro.parallel.fabric import (
+            PhasePipelinedFabric,
+            PPermuteFabric,
+        )
+
+        assert isinstance(
+            resolve_fabric("scheduled", _plan(0)), PPermuteFabric
+        )
+        assert isinstance(
+            resolve_fabric("scheduled", _row()), PhasePipelinedFabric
+        )
+        with pytest.raises(ValueError, match="A2ASchedule or ScheduleTable"):
+            resolve_fabric("scheduled", None)
+
+    def test_consumes_schedule_capabilities(self):
+        from repro.parallel.fabric import consumes_table
+
+        assert not consumes_schedule("dense")
+        assert not consumes_schedule("a2a")
+        for name in ("ppermute", "phase_pipelined", "ragged_a2a", "scheduled"):
+            assert consumes_schedule(name), name
+        # ppermute needs a schedule but cannot take the controller's
+        # traced rows (plans are baked into its executable)
+        assert not consumes_table("ppermute")
+        for name in ("phase_pipelined", "ragged_a2a", "scheduled"):
+            assert consumes_table(name), name
+        with pytest.raises(ValueError, match="registered fabrics"):
+            consumes_schedule("warp_drive")
+
+    def test_as_fabric_schedule_adapts_static_plans(self):
+        from repro.parallel.fabric import as_fabric_schedule
+
+        plan = _plan(0)
+        assert as_fabric_schedule("ppermute", plan, 3) is plan
+        assert as_fabric_schedule("scheduled", plan, 3) is plan
+        t = as_fabric_schedule("ragged_a2a", plan, 3)
+        assert isinstance(t, ScheduleTable)
+        assert t.num_layers == 3 and t.envelope is not None
+        assert as_fabric_schedule("phase_pipelined", t, 3) is t
+
+    def test_train_loop_refuses_runtime_for_static_fabric(self):
+        """A controller runtime cannot swap a baked-in ppermute plan —
+        the loop must refuse up front, naming the traced alternatives,
+        instead of trace-failing max_failures+1 times."""
+        from repro.core import ControllerConfig, ScheduleRuntime
+        from repro.data import DataConfig
+        from repro.models import Model
+        from repro.train import TrainLoopConfig, train_loop
+
+        cfg = _cfg("ppermute")
+        model = Model(cfg)
+        rt = ScheduleRuntime(
+            ControllerConfig(n_ranks=N_V, n_experts=8), model.n_moe_layers
+        )
+        rt.prime(np.full((N_V, N_V), 100.0))
+        with pytest.raises(ValueError, match="phase_pipelined"):
+            train_loop(
+                model,
+                DataConfig(vocab_size=cfg.vocab_size, seq_len=16,
+                           global_batch=2),
+                TrainLoopConfig(steps=1, ckpt_dir="/tmp/fab_pp_ck"),
+                runtime=rt,
+            )
+
+
+class TestScheduleMisuse:
+    """Satellite: row/schedule misuse errors name the rejecting backend."""
+
+    def test_ppermute_rejects_row_by_name(self):
+        with pytest.raises(ValueError, match="ppermute"):
+            get_fabric("ppermute").validate_schedule(_row(), n=N_V)
+
+    def test_ppermute_requires_schedule(self):
+        with pytest.raises(ValueError, match="ppermute"):
+            get_fabric("ppermute").validate_schedule(None, n=N_V)
+
+    def test_row_backends_reject_static_schedule_by_name(self):
+        for name in ("phase_pipelined", "ragged_a2a"):
+            with pytest.raises(ValueError, match=name):
+                get_fabric(name).validate_schedule(_plan(0), n=N_V)
+
+    def test_row_backends_reject_full_table_by_name(self):
+        table = ScheduleTable.from_schedules([_plan(0), _plan(1)], k_max=N_V)
+        for name in ("phase_pipelined", "ragged_a2a"):
+            with pytest.raises(ValueError, match=name):
+                get_fabric(name).validate_schedule(table, n=N_V)
+
+    def test_rank_mismatch_names_backend(self):
+        row = _row()
+        with pytest.raises(ValueError, match="phase_pipelined.*4 ranks"):
+            get_fabric("phase_pipelined").validate_schedule(row, n=8)
+
+    def test_ragged_requires_envelope(self):
+        with pytest.raises(ValueError, match="ragged_a2a.*envelope"):
+            get_fabric("ragged_a2a").validate_schedule(
+                _row(envelope=None), n=N_V
+            )
+
+    def test_moe_apply_still_rejects_full_table(self):
+        cfg = _cfg("phase_pipelined")
+        params = moe.moe_init(jax.random.PRNGKey(0), cfg)
+        table = ScheduleTable.from_schedules([_plan(0)], k_max=N_V)
+        with pytest.raises(ValueError, match="row"):
+            moe.moe_apply(params, cfg, jnp.zeros((1, 4, 32)), schedule=table)
+
+
+class TestParityMatrixSingleDevice:
+    """The parity matrix on one device: every registered fabric resolves
+    through the shared virtual dense fallback, so values, grads, and the
+    stats contract must agree bit-for-bit across all of them — and with
+    the explicit dense oracle."""
+
+    def setup_method(self):
+        self.x = jax.random.normal(
+            jax.random.PRNGKey(1), (4, 32, 32), jnp.float32
+        )
+        self.params = moe.moe_init(jax.random.PRNGKey(0), _cfg())
+
+    def _sched_for(self, name):
+        if name in ("phase_pipelined", "ragged_a2a"):
+            return _row(seed=2)
+        if name == "ppermute":
+            return _plan(2)
+        return None
+
+    @pytest.mark.parametrize("name", ALL_FABRICS)
+    def test_values_grads_stats_match_dense(self, name):
+        cfg = _cfg(name)
+        y_ref, st_ref = moe._moe_dense(
+            self.params, _cfg(), self.x, return_stats=True
+        )
+        y, st = moe.moe_apply(
+            self.params, cfg, self.x, schedule=self._sched_for(name),
+            return_stats=True,
+        )
+        if name in ("phase_pipelined", "ragged_a2a"):
+            # the row clips gates on the virtual fabric: compare against
+            # the dense oracle given the SAME row
+            y_ref, st_ref = moe._moe_dense(
+                self.params, _cfg(), self.x, self._sched_for(name),
+                return_stats=True,
+            )
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref))
+        assert set(st) == {"routing", "dropped"}  # the stats contract
+        assert st["routing"].shape == (1, 8)
+        assert st["dropped"].shape == (1,)
+        for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(st_ref)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+        g = jax.grad(
+            lambda p: (moe.moe_apply(
+                p, cfg, self.x, schedule=self._sched_for(name)
+            ) ** 2).sum()
+        )(self.params)
+        g_ref = jax.grad(
+            lambda p: (moe._moe_dense(
+                p, _cfg(), self.x,
+                self._sched_for(name)
+                if name in ("phase_pipelined", "ragged_a2a")
+                else None,
+            ) ** 2).sum()
+        )(self.params)
+        for ga, gr in zip(jax.tree.leaves(g), jax.tree.leaves(g_ref)):
+            np.testing.assert_allclose(np.asarray(ga), np.asarray(gr))
+
+    def test_row_fabrics_agree_with_each_other(self):
+        """phase_pipelined and ragged_a2a share geometry by construction;
+        the virtual fallback must not break that."""
+        row = _row(seed=3)
+        outs = [
+            moe.moe_apply(
+                self.params, _cfg(name), self.x, schedule=row,
+                return_stats=True,
+            )
+            for name in ("phase_pipelined", "ragged_a2a")
+        ]
+        np.testing.assert_allclose(
+            np.asarray(outs[0][0]), np.asarray(outs[1][0])
+        )
+        for a, b in zip(
+            jax.tree.leaves(outs[0][1]), jax.tree.leaves(outs[1][1])
+        ):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+    def test_virtual_fabric_row_clips_like_pair_caps_oracle(self):
+        """The single-device virtual fabric executes the row's admission
+        exactly as pair_caps promises (a tight plan must bind)."""
+        tiny = np.full((N_V, N_V), 1.0)
+        np.fill_diagonal(tiny, 0)
+        row = ScheduleTable.from_schedules(
+            [plan_schedule(decompose(tiny, "maxweight"), min_cap=1, quantum=1)]
+        ).row(0)
+        for name in ("phase_pipelined", "scheduled"):
+            y_row = moe.moe_apply(
+                self.params, _cfg(name), self.x, schedule=row
+            )
+            y_free = moe._moe_dense(self.params, _cfg(), self.x)
+            assert not np.allclose(
+                np.asarray(y_row), np.asarray(y_free), atol=1e-6
+            ), name
+
+
+class TestBytesAccounting:
+    """Per-fabric ``dispatch_tokens``: the acceptance ordering —
+    ragged == live envelope bytes <= phase-pipelined emulation,
+    strictly below the monolithic a2a bucket on a skewed plan."""
+
+    def test_ordering_on_skewed_plan(self):
+        from repro.core.cost_models import phase_dispatch_tokens
+
+        rng = np.random.default_rng(11)
+        n = 8
+        m = rng.random((n, n))
+        m[0, 1] = 60.0  # one hot pair, many near-dark ones
+        np.fill_diagonal(m, 0)
+        sched = plan_schedule(decompose(m, "maxweight", min_fill=0.1))
+        from repro.core.schedule import phase_envelope
+
+        env = phase_envelope([sched], sched.num_phases, slack=1.5)
+        cap_uni = 64
+        cap_nodrop = max(cap_uni, sched.pair_capacity())
+        a2a = get_fabric("a2a").dispatch_tokens(n=n, cap_uniform=cap_nodrop)
+        ragged = get_fabric("ragged_a2a").dispatch_tokens(
+            n=n, schedule=sched, envelope=env
+        )
+        emul = get_fabric("phase_pipelined").dispatch_tokens(
+            n=n, envelope=env
+        )
+        static = get_fabric("ppermute").dispatch_tokens(n=n, schedule=sched)
+        dense = get_fabric("dense").dispatch_tokens(n=n)
+        # ragged carries exactly the live envelope bytes
+        assert ragged == pytest.approx(
+            float(np.mean(phase_dispatch_tokens(sched.valid, env)))
+        )
+        assert dense == 0.0
+        assert static <= ragged <= emul
+        assert ragged < a2a, (ragged, a2a)
+
+
+class TestRaggedFallback:
+    def test_fallback_is_emulation_off_tpu(self):
+        from repro.parallel.fabric import ragged_available
+
+        # in this container (pinned jax, CPU) the primitive is absent:
+        # the backend must run the parent's dense emulation
+        import jax as _jax
+
+        if getattr(_jax.lax, "ragged_all_to_all", None) is None:
+            assert not ragged_available()
+
+
+class TestEnvelopeShrink:
+    """Satellite: ControllerConfig.envelope_decay — sustained underuse
+    shrinks the envelope; a shrink is the one counted recompile."""
+
+    def _runtime(self, decay, patience=2):
+        from repro.core import ControllerConfig, ScheduleRuntime
+
+        return ScheduleRuntime(
+            ControllerConfig(
+                n_ranks=N_V, n_experts=8, ema=1.0, cooldown=0,
+                envelope_slack=1.5, envelope_decay=decay,
+                shrink_patience=patience,
+            ),
+            1,
+        )
+
+    @staticmethod
+    def _hot_prime():
+        """A hot-column regime: rank 0's experts soak ~4000 tokens/pair,
+        everything else trickles — the envelope is sized for the spike."""
+        m = np.full((N_V, N_V), 10.0)
+        m[:, 0] = 4000.0
+        np.fill_diagonal(m, 0.0)
+        return m
+
+    def _drive(self, rt, scale, steps, start=0):
+        """Cool the regime: the hot expert rotates at a much lower
+        scale, so each rotation misses the current plan (the cold
+        pair's min-cap slots drop hard) and triggers a rebuild whose
+        plans need far less than the primed envelope."""
+        for i in range(start, start + steps):
+            probs = np.full(8, 0.01)
+            # rotate among ranks 1-3 only: revisiting rank 0 would
+            # re-adopt the primed hot plan, whose caps legitimately
+            # regrow the envelope (plans, not traffic, size buffers)
+            probs[[2, 4, 6, 3, 5, 7][i % 6]] = 1.0
+            probs /= probs.sum()
+            rt.observe(scale * probs[None, None, :])
+            rt.table()
+
+    def test_shrink_after_sustained_underuse(self):
+        rt = self._runtime(decay=0.5, patience=2)
+        rt.prime(self._hot_prime())
+        env_hot = rt.table().envelope
+        self._drive(rt, scale=400.0, steps=8)  # traffic cools way down
+        m = rt.metrics()
+        assert m["envelope_shrinks"] >= 1, m
+        env_cold = rt.table().envelope
+        assert sum(env_cold) < sum(env_hot), (env_hot, env_cold)
+        # shrunk slots still cover the current plans (no-drop invariant)
+        for s in rt.schedules:
+            k = min(s.num_phases, len(env_cold))
+            assert (np.asarray(env_cold[:k]) >= np.asarray(s.caps[:k])).all()
+
+    def test_decay_zero_never_shrinks(self):
+        rt = self._runtime(decay=0.0)
+        rt.prime(self._hot_prime())
+        rt.table()
+        self._drive(rt, scale=400.0, steps=8)
+        assert rt.metrics()["envelope_shrinks"] == 0
+
+    def test_shrink_is_one_recompile(self):
+        """The jit cache grows by exactly one when the (static aux)
+        envelope shrinks — same contract as a growth."""
+        rt = self._runtime(decay=0.5, patience=2)
+        rt.prime(self._hot_prime())
+        cfg = _cfg("phase_pipelined")
+        params = moe.moe_init(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(4), (4, 16, 32), jnp.float32)
+        f = jax.jit(lambda p, x, r: moe.moe_apply(p, cfg, x, schedule=r))
+        f(params, x, rt.table().row(0))
+        steps = 0
+        while rt.metrics()["envelope_shrinks"] == 0 and steps < 12:
+            self._drive(rt, scale=400.0, steps=1, start=steps)
+            steps += 1
+        assert rt.metrics()["envelope_shrinks"] == 1
+        f(params, x, rt.table().row(0))
+        assert f._cache_size() == 2, "envelope shrink must retrace once"
+        f(params, x, rt.table().row(0))
+        assert f._cache_size() == 2
+
+    def test_decay_validation(self):
+        from repro.core import ControllerConfig
+
+        with pytest.raises(ValueError, match="envelope_decay"):
+            ControllerConfig(n_ranks=4, n_experts=8, envelope_decay=1.5)
+        with pytest.raises(ValueError, match="shrink_patience"):
+            ControllerConfig(
+                n_ranks=4, n_experts=8, envelope_decay=0.5,
+                shrink_patience=0,
+            )
+
+    def test_shrink_targets_window_peak(self):
+        """The shrink target is the peak slacked need over the underuse
+        window, not the last rebuild's need — every plan the window saw
+        still fits the shrunk envelope (no grow/shrink thrash)."""
+        rt = self._runtime(decay=0.5, patience=2)
+        rt.prime(self._hot_prime())
+        rt.table()  # materialize the hot envelope before the cool-down
+        self._drive(rt, scale=400.0, steps=8)
+        assert rt.metrics()["envelope_shrinks"] >= 1
+        env = np.asarray(rt.table().envelope)
+        growths_after = rt.envelope_growths
+        # replaying the same cooled regime never regrows the envelope
+        self._drive(rt, scale=400.0, steps=8)
+        assert rt.envelope_growths == growths_after, (
+            "post-shrink envelope must cover the cooled regime's plans"
+        )
+        assert (np.asarray(rt.table().envelope) <= env).all()
+
+
+class TestFabricDocsContract:
+    def test_every_fabric_documents_itself(self):
+        for name, fab in FABRICS.items():
+            assert type(fab).__doc__ or fab.__module__, name
+            assert fab.name == name
+            assert fab.schedule_kind in (
+                "none", "static", "row", "optional_row"
+            )

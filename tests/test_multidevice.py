@@ -40,6 +40,12 @@ def test_moe_dispatch_equivalence():
 
 
 @pytest.mark.slow
+def test_fabric_parity_matrix():
+    out = _run("multidev_fabric.py")
+    assert "ALL FABRIC MATRIX CHECKS PASSED" in out
+
+
+@pytest.mark.slow
 def test_train_loop_fault_tolerance():
     out = _run("multidev_train.py")
     assert "ALL TRAIN CHECKS PASSED" in out
