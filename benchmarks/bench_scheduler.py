@@ -2,7 +2,7 @@
 batched decomposition vs the seed implementations, plus the end-to-end
 controller loop under drifting traffic.
 
-Four measurements, mirroring the controller's hot paths:
+The measurements mirror the controller's hot paths:
 
 * **observe steady-state** — ``ScheduleSelector.observe`` is called every
   training step with the realized routing counts; in steady state it only
@@ -27,6 +27,11 @@ Four measurements, mirroring the controller's hot paths:
   phase blocks vs K per-phase GEMMs (the ``ScheduleTable`` execution
   path vs the old per-phase fragmentation), plus the fraction of MXU row
   blocks the Pallas kernel's group-metadata prologue skips.
+
+* **fault resilience** — the controller's observe cost and the ragged
+  fabric's bytes per rank in the steady state vs under a 15% link
+  outage (availability mask adopted), plus the one-shot masked re-plan
+  cost — the degraded-fabric trend PR over PR (docs/robustness.md).
 
 Parity is asserted inline (identical chosen entries / drop fractions,
 bit-identical cold phases, warm replay delivering all demand).  Results
@@ -487,6 +492,134 @@ def bench_bytes_moved() -> dict:
     return out
 
 
+def bench_faults(steps: int = 120) -> dict:
+    """Resilience trend (PR 6): what a link outage costs the controller.
+
+    Three numbers, steady vs degraded:
+
+    * **observe us/step** — the per-step controller overhead before the
+      outage vs after the availability mask is adopted (masked re-plans
+      route around the dark pairs, so the hot path must stay hot).
+    * **masked re-plan ms** — the one-shot cost of adopting the mask:
+      ``set_link_mask`` forces a full re-plan of every layer group under
+      the mask plus the table rebuild.
+    * **MB/rank** — ragged-fabric bytes of the preferred plan vs the
+      masked plan for the same skewed regime (``apply_link_mask``
+      preserves row sums, so the wire carries the same demand over fewer
+      pairs; the delta is capacity rounding + extra phases).
+    """
+    from repro.core import (
+        FaultScenario,
+        check_schedule_mask,
+        decompose,
+        phase_envelope,
+        plan_schedule,
+    )
+    from repro.core.runtime import ControllerConfig, ScheduleRuntime
+    from repro.parallel.fabric import get_fabric
+
+    n, e, layers = 16, 64, 8
+    scenario = FaultScenario(
+        "dead_link", n_ranks=n, onset=0, outage_frac=0.15, seed=5
+    )
+    mask = scenario.link_mask(0)
+
+    runtime = ScheduleRuntime(
+        ControllerConfig(
+            n_ranks=n, n_experts=e, ema=0.5, cooldown=5, group_by="layer"
+        ),
+        layers,
+    )
+    rng = np.random.default_rng(6)
+    tokens = 2048.0 * n
+    probs = rng.dirichlet(np.full(e, 0.5))
+    stream = [
+        np.maximum(
+            tokens
+            * probs[None, None, :]
+            * (1 + 0.02 * rng.standard_normal((layers, 1, e))),
+            0.0,
+        )
+        for _ in range(2 * steps)
+    ]
+
+    warm = 10
+    for t in stream[:warm]:
+        runtime.observe(t)  # settle the EMA + first plan
+    t0 = time.perf_counter()
+    for t in stream[warm:steps]:
+        runtime.observe(t)
+    steady_s = (time.perf_counter() - t0) / (steps - warm)
+
+    t0 = time.perf_counter()
+    runtime.set_link_mask(mask)
+    runtime.table()
+    replan_ms = (time.perf_counter() - t0) * 1e3
+
+    t0 = time.perf_counter()
+    for t in stream[steps:]:
+        runtime.observe(t)
+    degraded_s = (time.perf_counter() - t0) / steps
+
+    # the masked plans must never route a dark pair (raises on violation)
+    check_schedule_mask(runtime.schedules, mask, backend="phase_pipelined")
+    m = runtime.metrics()
+    assert m["masked_replans"] >= 1 and m["link_masked"], m
+
+    # bytes: the same skewed regime planned free vs under the mask,
+    # through the ragged fabric's own live-envelope accounting
+    d_model, dtype_bytes = 4096, 2
+    regime = traffic_matrix(
+        np.random.default_rng(7),
+        RouterConfig("bench-faults", n * 4, 2),
+        np.full(n, 2048),
+        n_ranks=n,
+        skew_alpha=0.05,
+    )
+    d_free = decompose(regime, "maxweight", min_fill=0.1)
+    d_mask = decompose(regime, "maxweight", min_fill=0.1, link_mask=mask)
+    s_free = plan_schedule(d_free)
+    s_mask = plan_schedule(d_mask)
+    check_schedule_mask(s_mask, mask, backend="ragged_a2a")
+    ragged = get_fabric("ragged_a2a")
+    to_mb = lambda t: round(
+        float(np.mean(t)) * d_model * dtype_bytes / 2**20, 3
+    )
+    free_mb = to_mb(
+        ragged.dispatch_tokens(
+            n=n,
+            schedule=s_free,
+            envelope=phase_envelope([s_free], s_free.num_phases, slack=1.5),
+        )
+    )
+    mask_mb = to_mb(
+        ragged.dispatch_tokens(
+            n=n,
+            schedule=s_mask,
+            envelope=phase_envelope([s_mask], s_mask.num_phases, slack=1.5),
+        )
+    )
+    return {
+        "n": n,
+        "experts": e,
+        "layers": layers,
+        "steps": steps,
+        "outage_frac": scenario.outage_frac,
+        "dark_pairs": len(scenario.dead_pairs),
+        "steady_us_per_step": round(steady_s * 1e6, 2),
+        "degraded_us_per_step": round(degraded_s * 1e6, 2),
+        "masked_replan_ms": round(replan_ms, 2),
+        "steady_mb_per_rank": free_mb,
+        "degraded_mb_per_rank": mask_mb,
+        "steady_phases": s_free.num_phases,
+        "degraded_phases": s_mask.num_phases,
+        "unroutable_tokens": float(
+            d_mask.meta.get("unroutable_tokens", 0.0)
+        ),
+        "masked_plans_avoid_dark_pairs": True,
+    }
+
+
 def run() -> dict:
     from benchmarks.bench_schema import (
         SCHEMA_VERSION,
@@ -500,6 +633,7 @@ def run() -> dict:
         "controller": bench_controller(),
         "grouped_launch": bench_grouped_launch(),
         "bytes_moved": bench_bytes_moved(),
+        "faults": bench_faults(),
     }
     results["meta"] = {
         "unit_note": "observe in us/step; decomposition in ms per re-plan "
@@ -530,6 +664,7 @@ def run() -> dict:
         "controller": results["controller"],
         "grouped_launch": results["grouped_launch"],
         "bytes_moved": results["bytes_moved"],
+        "faults": results["faults"],
     }
     # schema-gate the append BEFORE touching the file: a malformed entry
     # must fail the bench (and CI), never corrupt the trajectory
@@ -580,6 +715,14 @@ def run() -> dict:
     print(
         "per-fabric MB/rank: "
         + ", ".join(f"{k}={v}" for k, v in sorted(bm["fabrics"].items()))
+    )
+    ft = results["faults"]
+    print(
+        f"faults (n={ft['n']}, {ft['dark_pairs']} dark pairs): observe "
+        f"{ft['steady_us_per_step']}us -> {ft['degraded_us_per_step']}us/step "
+        f"degraded, masked re-plan {ft['masked_replan_ms']}ms one-shot; "
+        f"bytes {ft['steady_mb_per_rank']}MB -> {ft['degraded_mb_per_rank']}MB"
+        f"/rank ({ft['steady_phases']} -> {ft['degraded_phases']} phases)"
     )
     print(f"wrote {os.path.abspath(OUT_PATH)} ({len(results['history'])} history entries)")
     return results

@@ -46,6 +46,10 @@ _ENTRY_FIELDS: list[tuple[str, bool, tuple]] = [
     ("controller", True, (dict,)),
     ("grouped_launch", False, (dict,)),
     ("bytes_moved", False, (dict,)),
+    # PR 6: degraded-fabric resilience numbers.  Optional so the pre-PR-6
+    # history keeps validating; fresh appends carry it (require_current
+    # promotes it) so the steady-vs-degraded trend stays unbroken.
+    ("faults", False, (dict,)),
 ]
 
 # required numeric fields per section: the numbers the trend lines plot
@@ -59,6 +63,13 @@ _SECTION_NUMBERS: dict[str, list[str]] = {
         "phase_env_mb_per_rank",
         "static_ppermute_mb_per_rank",
         "saving_vs_monolithic",
+    ],
+    "faults": [
+        "steady_us_per_step",
+        "degraded_us_per_step",
+        "masked_replan_ms",
+        "steady_mb_per_rank",
+        "degraded_mb_per_rank",
     ],
 }
 

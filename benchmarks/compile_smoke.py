@@ -21,6 +21,10 @@ recompiled.  This smoke guards the properties per fabric:
 4. **Adaptive envelope shrink** (PR 5): with
    ``ControllerConfig.envelope_decay`` a sustained-underused envelope
    shrinks, and the shrink costs exactly the same single recompile.
+5. **Degraded-fabric swaps** (PR 6): adopting a link-availability mask
+   (masked re-plan around dark pairs) and lifting it again are plain
+   table swaps under the frozen envelope — the fault path costs ZERO
+   recompiles end to end.
 
 Exit code != 0 on regression, so CI fails fast.
 
@@ -230,12 +234,50 @@ def main() -> int:
         print("FAIL: post-shrink tables must reuse the shrunk executable")
         return 1
 
+    # 5. degraded-fabric policy: a masked re-plan (outage adopted) and
+    # the later mask lift (outage cleared) each force a full re-plan,
+    # but the envelope is frozen while masked and the re-planned rows
+    # keep the table's static geometry — both directions are compile-free
+    model_f = _model(2, "phase_pipelined")
+    params_f = model_f.init(jax.random.PRNGKey(0))
+    rt_f = ScheduleRuntime(
+        ControllerConfig(
+            n_ranks=4, n_experts=8, ema=1.0, cooldown=0, envelope_slack=2.0
+        ),
+        2,
+    )
+    rt_f.prime(np.full((4, 4), 400.0))
+    k = jax.jit(lambda p, b, s: model_f.loss(p, b, schedule=s))
+    k(params_f, batch, rt_f.table())
+    dark = np.ones((4, 4), dtype=bool)
+    dark[0, 1] = dark[2, 3] = False
+    rt_f.set_link_mask(dark)
+    k(params_f, batch, rt_f.table())
+    rt_f.set_link_mask(None)
+    k(params_f, batch, rt_f.table())
+    m_f = rt_f.metrics()
+    cache_fault = k._cache_size()
+    print(
+        f"executable cache after masked re-plan + mask lift: {cache_fault} "
+        f"({m_f['masked_replans']} masked re-plan)"
+    )
+    if m_f["masked_replans"] != 1:
+        print("FAIL: adopting the availability mask must re-plan once")
+        return 1
+    if cache_fault != 1:
+        print(
+            "FAIL: the degraded-fabric path (mask adopt + lift) must be "
+            "compile-free table swaps"
+        )
+        return 1
+
     print(
         "OK: depth-L scan traces one layer body for every fabric "
         f"({', '.join(fabric_names())}; single-device lowering — mesh "
         "bodies run in the slow multidev lane); table swaps are "
         "compile-free (in-envelope swaps included; envelope growth AND "
-        "adaptive shrink each retrace once)"
+        "adaptive shrink each retrace once; masked fault re-plans swap "
+        "free both ways)"
     )
     return 0
 

@@ -79,6 +79,14 @@ def main() -> None:
         "--virtual-ranks", type=int, default=8,
         help="controller fabric size when no EP mesh is active",
     )
+    ap.add_argument(
+        "--faults",
+        default="none",
+        choices=("none", "dead_link", "link_flap", "slow_link", "dark_window"),
+        help="inject a round-granularity fabric fault (with --controller): "
+        "rounds whose plan crosses a dark pair quarantine and re-plan "
+        "around the availability mask before executing",
+    )
     from repro.parallel.fabric import fabric_names
 
     ap.add_argument(
@@ -98,9 +106,25 @@ def main() -> None:
     params = model.init(jax.random.PRNGKey(0))
     max_len = args.prompt_len + args.new_tokens
 
-    runtime = scenario = None
+    runtime = scenario = fault_scenario = None
     if args.controller:
         runtime, scenario = make_controller(cfg, args)
+    if args.faults != "none":
+        if runtime is None:
+            raise SystemExit("--faults needs --controller (round-level "
+                             "re-planning reacts to the fault)")
+        from repro.core import FaultScenario
+
+        fault_scenario = FaultScenario(
+            args.faults,
+            n_ranks=args.virtual_ranks,
+            onset=max(args.rounds // 3, 1),
+            window=max(args.rounds // 3, 1),
+            n_links=2,
+        )
+        runtime.attach_faults(fault_scenario)
+        print(f"fault scenario: {args.faults} @ round "
+              f"{fault_scenario.onset} (pairs {fault_scenario.dead_pairs})")
     # only table-consuming fabrics take the controller's rows
     # (launch/serve.py convention, resolved via the fabric registry;
     # 'ppermute' bakes plans in and would reject a row) — other modes
@@ -123,6 +147,34 @@ def main() -> None:
     prefill = jax.jit(model.prefill)
     decode = jax.jit(model.decode_step)
 
+    def apply_faults(r: int):
+        """Serving has no rollback: validate the round's plan against the
+        fault mask BEFORE executing, quarantining + re-planning around
+        dark pairs so the round never ships bytes onto a dead link."""
+        import numpy as np
+
+        from repro.core import FabricFaultError, check_schedule_mask
+
+        mask = fault_scenario.link_mask(r)
+        if mask.all():
+            if runtime.link_mask is not None:
+                runtime.set_link_mask(None)
+                print(f"round {r}: fault cleared, re-planned to preferred routing")
+            return
+        if runtime.link_mask is not None and np.array_equal(
+            runtime.link_mask, mask
+        ):
+            return
+        try:
+            check_schedule_mask(
+                runtime.schedules, mask,
+                backend=cfg.moe.dispatch, step=r,
+            )
+            runtime.set_link_mask(mask)
+        except FabricFaultError as err:
+            print(f"round {r}: {err}")
+            runtime.record_fault(err)
+
     def observe_round(r: int):
         if runtime is None:
             return None
@@ -137,6 +189,8 @@ def main() -> None:
         if decision.changed:
             print(f"round {r}: controller swap "
                   f"({'re-plan' if decision.replanned else 'library hit'})")
+        if fault_scenario is not None:
+            apply_faults(r)
         return runtime.table() if consumes_schedule else None
 
     for r in range(max(args.rounds, 1)):
@@ -189,6 +243,15 @@ def main() -> None:
             f"({s['warm_hits']} warm / {s['cold_plans']} cold plans), "
             f"{recompiles} recompiles across swaps"
         )
+        if fault_scenario is not None:
+            m = runtime.metrics()
+            print(
+                f"faults: {m['fabric_faults']} raised, "
+                f"{m['quarantines']} quarantines, "
+                f"{m['masked_replans']} masked re-plans, "
+                f"{m['dark_window_steps']} dark-window steps, "
+                f"state {m['health_state']}"
+            )
 
 
 if __name__ == "__main__":

@@ -226,9 +226,86 @@ def phase_pipeline_report(n: int = 16, tokens_per_rank: int = 4096) -> None:
     )
 
 
+# ------------------------------------------------------ degraded fabrics
+def fault_sweep(n: int = 16, tokens_per_rank: int = 4096) -> None:
+    """Makespan under link outages: masked re-planning vs the electrical
+    fallback (PR 6, docs/robustness.md).
+
+    For each (outage fraction, reconfiguration dark window) cell, compare:
+
+    * **mw+mask** — max-weight re-planned under the availability mask
+      (dead pairs cap 0, displaced demand rerouted over survivors), with
+      each of the plan's phase reconfigurations paying the optical
+      switch's dark window ("To Reconfigure or Not to Reconfigure").
+    * **ring fallback** — the degradation chain's floor: a static
+      electrical all-to-all that never touches the photonic fabric, so
+      it is outage- and dark-window-blind, but ships ring-padded bytes.
+
+    The crossover is the chain's *policy*: short dark windows favor
+    re-planning around the outage; long retrains (or heavy outages that
+    concentrate surviving-link load) favor falling back — exactly what
+    the health FSM's quarantine does.
+    """
+    from repro.core import (
+        CommModel,
+        FaultScenario,
+        decompose,
+        knee_model,
+        simulate_decomposition,
+        simulate_sequential,
+    )
+    from repro.core.traffic import RouterConfig, traffic_matrix
+
+    rng = np.random.default_rng(0)
+    router = RouterConfig("sim-faults", n * 4, 2)
+    traffic = traffic_matrix(
+        rng, router, np.full(n, float(tokens_per_rank)), n_ranks=n,
+        skew_alpha=0.05,
+    )
+    comm = CommModel.from_hardware(link_gbps=400, d_model=4096)
+    knee = knee_model()
+    ring_us = simulate_sequential(traffic, knee, comm).makespan_us
+
+    print(
+        f"\n=== degraded fabric sweep (n={n}, skewed draw) — "
+        "MoE-layer makespan us ==="
+    )
+    print(
+        f"{'outage':>7}{'dark us':>9}{'mw+mask us':>12}{'ring us':>9}"
+        f"{'unroutable%':>13}{'phases':>8}  winner"
+    )
+    for frac in (0.05, 0.15, 0.3):
+        sc = FaultScenario(
+            "dead_link", n_ranks=n, onset=0, outage_frac=frac, seed=1
+        )
+        mask = sc.link_mask(0)
+        d = decompose(traffic, "maxweight", link_mask=mask, min_fill=0.1)
+        base_us = simulate_decomposition(d, knee, comm).makespan_us
+        unroutable = d.meta.get("unroutable_tokens", 0.0)
+        off = traffic.copy()
+        np.fill_diagonal(off, 0.0)
+        un_pct = 100.0 * unroutable / max(off.sum(), 1e-9)
+        k = len(d.phases)
+        for dark_us in (0.0, 500.0, 1000.0):
+            # every phase is an optical reconfiguration: each pays the
+            # switch's retrain window
+            masked_us = base_us + k * dark_us
+            winner = "re-plan" if masked_us <= ring_us else "fallback"
+            print(
+                f"{frac:>7.2f}{dark_us:>9.0f}{masked_us:>12.0f}"
+                f"{ring_us:>9.0f}{un_pct:>13.2f}{k:>8}  {winner}"
+            )
+    print(
+        "-> masked re-planning absorbs moderate outages nearly for free; "
+        "long dark windows (or outages that strand demand) are where the "
+        "chain's electrical fallback earns its place"
+    )
+
+
 def main() -> None:
     figures_3_and_4()
     phase_pipeline_report()
+    fault_sweep()
     for kind in ("shift", "hotspot", "skew"):
         controller_under_drift(kind)
 

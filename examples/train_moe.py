@@ -13,6 +13,16 @@ into the observations, and the runtime re-plans all MoE layers in one
 
     PYTHONPATH=src python examples/train_moe.py --steps 120 --drift shift
 
+With ``--faults`` the run additionally injects a deterministic fabric
+fault (a link flap, a dead link, ...) mid-train: the fault surfaces as a
+``FabricFaultError`` the loop rolls back from, the runtime quarantines
+the active fabric, falls back along the degradation chain, re-plans
+around the dark pairs, and probes its way back once the fault clears
+(docs/robustness.md):
+
+    PYTHONPATH=src python examples/train_moe.py --steps 60 \
+        --dispatch phase_pipelined --faults link_flap
+
 On a multi-device host (XLA_FLAGS=--xla_force_host_platform_device_count=8)
 pass --mesh to exercise distributed EP with the paper's scheduled dispatch.
 Schedules are traced ``ScheduleTable`` input to the step, so the
@@ -32,18 +42,25 @@ from repro.train import TrainLoopConfig, train_loop
 logging.basicConfig(level=logging.INFO, format="%(message)s")
 
 
-def small_moe(dispatch: str = "dense") -> ModelConfig:
-    """~180M params: mixtral-flavored, laptop-trainable."""
+def small_moe(
+    dispatch: str = "dense",
+    *,
+    n_layers: int = 12,
+    d_model: int = 512,
+    d_ff: int = 1024,
+) -> ModelConfig:
+    """~180M params at the defaults: mixtral-flavored, laptop-trainable.
+    The size knobs let CI shrink it to a seconds-long smoke."""
     return ModelConfig(
         name="moe-180m",
         family="moe",
-        n_layers=12,
-        d_model=512,
+        n_layers=n_layers,
+        d_model=d_model,
         n_heads=8,
         n_kv_heads=2,
-        d_ff=1024,
+        d_ff=d_ff,
         vocab_size=32000,
-        moe=MoECfg(n_experts=8, top_k=2, d_ff_expert=1024, dispatch=dispatch),
+        moe=MoECfg(n_experts=8, top_k=2, d_ff_expert=d_ff, dispatch=dispatch),
         remat="none",
     )
 
@@ -78,10 +95,33 @@ def main() -> None:
         "--virtual-ranks", type=int, default=8,
         help="controller fabric size when no EP mesh is active",
     )
+    ap.add_argument(
+        "--faults",
+        default="none",
+        choices=("none", "dead_link", "link_flap", "slow_link", "dark_window"),
+        help="inject this fabric fault and exercise the fallback chain",
+    )
+    ap.add_argument(
+        "--fault-step", type=int, default=None,
+        help="step at which the fault engages (default steps // 3)",
+    )
+    ap.add_argument(
+        "--fault-window", type=int, default=None,
+        help="fault episode length in steps (default steps // 5)",
+    )
+    ap.add_argument(
+        "--fault-links", type=int, default=2,
+        help="number of directed pairs the fault darkens",
+    )
+    ap.add_argument("--layers", type=int, default=12, help="model depth")
+    ap.add_argument("--d-model", type=int, default=512)
+    ap.add_argument("--d-ff", type=int, default=1024)
     args = ap.parse_args()
 
     dispatch = args.dispatch or ("a2a" if args.mesh else "dense")
-    cfg = small_moe(dispatch)
+    cfg = small_moe(
+        dispatch, n_layers=args.layers, d_model=args.d_model, d_ff=args.d_ff
+    )
     model = Model(cfg)
     print(f"{cfg.name}: {cfg.param_count()/1e6:.0f}M params "
           f"({cfg.active_param_count()/1e6:.0f}M active)")
@@ -121,11 +161,11 @@ def main() -> None:
         # ppermute bakes its plan into the executable: a controller
         # runtime cannot swap it, so drift makes no sense here — plan
         # one static schedule from the uniform demand estimate instead
-        if args.drift != "none":
+        if args.drift != "none" or args.faults != "none":
             raise SystemExit(
-                f"--drift needs a table-consuming fabric ({dispatch!r} "
-                "bakes its plan in); use --dispatch phase_pipelined or "
-                "ragged_a2a"
+                f"--drift/--faults need a table-consuming fabric "
+                f"({dispatch!r} bakes its plan in); use --dispatch "
+                "phase_pipelined or ragged_a2a"
             )
         from repro.core import decompose, plan_schedule
 
@@ -135,10 +175,16 @@ def main() -> None:
         model = Model(cfg, static_schedule)
         print(f"static {static_schedule.num_phases}-phase {dispatch} plan")
 
-    runtime = stats_hook = None
-    if args.drift != "none" or consumes_table(dispatch):
+    runtime = stats_hook = failure_hook = None
+    if args.drift != "none" or args.faults != "none" or consumes_table(dispatch):
         from repro.core import ControllerConfig, DriftScenario, ScheduleRuntime
 
+        fallback_chain = ()
+        if args.faults != "none":
+            # dense is the fabric-free floor every chain must reach
+            fallback_chain = (
+                (dispatch, "dense") if dispatch != "dense" else ()
+            )
         runtime = ScheduleRuntime(
             ControllerConfig(
                 n_ranks=n_ranks,
@@ -148,6 +194,10 @@ def main() -> None:
                 # one schedule shared by all layers keeps the stack
                 # scan-friendly; "layer" plans one schedule per MoE layer
                 group_by="model",
+                fallback_chain=fallback_chain,
+                quarantine_after=2,
+                probe_backoff=max(2, args.steps // 10),
+                recover_after=2,
             ),
             model.n_moe_layers,
         )
@@ -163,6 +213,23 @@ def main() -> None:
             )
             stats_hook = scenario.stats_hook
             print(f"drift scenario: {args.drift} @ step {scenario.shift_step}")
+        if args.faults != "none":
+            from repro.core import FaultScenario, fault_hook
+
+            fault_scenario = FaultScenario(
+                args.faults,
+                n_ranks=n_ranks,
+                onset=args.fault_step or args.steps // 3,
+                window=args.fault_window or max(args.steps // 5, 2),
+                n_links=args.fault_links,
+            )
+            runtime.attach_faults(fault_scenario)
+            failure_hook = fault_hook(fault_scenario, runtime, backend=dispatch)
+            print(
+                f"fault scenario: {args.faults} @ step {fault_scenario.onset} "
+                f"(pairs {fault_scenario.dead_pairs}), chain "
+                f"{fallback_chain or '(none)'}"
+            )
 
     if args.mesh:
         import jax
@@ -187,10 +254,12 @@ def main() -> None:
             res = train_loop(
                 model, data_cfg, loop_cfg, shard_batch=shard_batch,
                 runtime=runtime, stats_hook=stats_hook,
+                failure_hook=failure_hook,
             )
     else:
         res = train_loop(
-            model, data_cfg, loop_cfg, runtime=runtime, stats_hook=stats_hook
+            model, data_cfg, loop_cfg, runtime=runtime,
+            stats_hook=stats_hook, failure_hook=failure_hook,
         )
 
     if not res["history"]:
@@ -210,6 +279,26 @@ def main() -> None:
             f"{c['swaps']} swaps, {c['compiles']} compiles, "
             f"observe {c['observe_us_per_step']}us/step"
         )
+        if args.faults != "none":
+            print(
+                f"faults: {c['fabric_faults']} raised, "
+                f"{c['quarantines']} quarantines "
+                f"({c['probe_failures']} failed probes), "
+                f"{c['masked_replans']} masked re-plans, "
+                f"{res['failures']} rollbacks, state {c['health_state']} "
+                f"on {c['final_dispatch']}"
+            )
+    losses = [h["loss"] for h in res["history"]]
+    assert all(np.isfinite(losses)), "non-finite loss in history"
+    if args.faults in ("dead_link", "link_flap") and "controller" in res:
+        c = res["controller"]
+        assert c["quarantines"] >= 1, "fault never quarantined"
+        assert c["fabric_faults"] >= 1, "fault never surfaced"
+    if args.faults == "link_flap" and "controller" in res:
+        # the flap cleared: the run must end recovered on the preferred
+        # fabric with the mask lifted
+        assert c["final_dispatch"] == dispatch, c["final_dispatch"]
+        assert not c["fallback_active"] and not c["link_masked"], c
     assert last < first, "training did not reduce loss"
     print("OK")
 

@@ -24,6 +24,15 @@ from repro.core.cost_models import (
 )
 from repro.core.decompose import STRATEGIES, decompose, decompose_batch
 from repro.core.drift import DRIFT_KINDS, DriftScenario
+from repro.core.faults import (
+    FAULT_KINDS,
+    FabricFaultError,
+    FaultScenario,
+    NonFiniteLossError,
+    apply_link_mask,
+    check_schedule_mask,
+    fault_hook,
+)
 from repro.core.hierarchical import (
     hierarchical_decompose,
     simulate_hierarchical,
@@ -69,6 +78,10 @@ __all__ = [
     "Decision",
     "Decomposition",
     "DriftScenario",
+    "FAULT_KINDS",
+    "FabricFaultError",
+    "FaultScenario",
+    "NonFiniteLossError",
     "Phase",
     "Proposal",
     "ROUTERS",
@@ -82,11 +95,14 @@ __all__ = [
     "WORKLOADS",
     "WarmState",
     "a2a_dispatch_tokens",
+    "apply_link_mask",
     "bvn_coefficients",
     "bvn_decompose",
     "bvn_decompose_batch",
+    "check_schedule_mask",
     "decompose",
     "decompose_batch",
+    "fault_hook",
     "fit_knee",
     "gen_trace",
     "hierarchical_decompose",

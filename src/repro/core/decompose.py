@@ -45,29 +45,47 @@ def decompose(
     strategy: str,
     *,
     keep_diagonal: bool = False,
+    link_mask: np.ndarray | None = None,
     **kwargs,
 ) -> Decomposition:
     """Decompose a traffic matrix with the given strategy.
 
     Unless ``keep_diagonal``, the diagonal (local tokens) is removed before
     decomposition and stashed in ``meta["local_tokens"]``.
+
+    ``link_mask`` (``[n, n]`` bool, True = usable) reroutes demand around
+    dark pairs before decomposition — masked pairs decompose to cap 0 and
+    their traffic is re-assigned across each source row's surviving
+    destinations (``core.faults.apply_link_mask``).  Works for every
+    strategy; local (diagonal) traffic never touches the fabric and is
+    split off first.
     """
     a = np.asarray(matrix, dtype=np.float64).copy()
     local = np.zeros(a.shape[0])
     if not keep_diagonal:
         local = np.diag(a).copy()
         np.fill_diagonal(a, 0.0)
+    mask_meta: dict = {}
+    if link_mask is not None and strategy != "maxweight":
+        from repro.core.faults import apply_link_mask
+
+        a = apply_link_mask(a, link_mask, meta=mask_meta)
     if strategy == "bvn":
         d = bvn_decompose(a, **kwargs)
     elif strategy == "bvn-bottleneck":
         d = bvn_decompose(a, bottleneck=True, **kwargs)
     elif strategy == "maxweight":
-        d = maxweight_decompose(a, **kwargs)
+        d = maxweight_decompose(a, link_mask=link_mask, **kwargs)
     elif strategy == "shift":
         d = _shift_decompose(a)
     else:
         raise ValueError(f"unknown strategy {strategy!r}; one of {STRATEGIES}")
     d.meta["local_tokens"] = local
+    if link_mask is not None:
+        d.meta["link_masked"] = True
+        d.meta.setdefault(
+            "unroutable_tokens", mask_meta.get("unroutable_tokens", 0.0)
+        )
     return d
 
 
@@ -77,6 +95,7 @@ def decompose_batch(
     *,
     keep_diagonal: bool = False,
     warm_start: list | None = None,
+    link_mask: np.ndarray | None = None,
     **kwargs,
 ) -> list[Decomposition]:
     """Decompose a stack of traffic matrices ``[L, n, n]`` in one call.
@@ -84,7 +103,10 @@ def decompose_batch(
     One matrix per MoE layer (or regime); the diagonal handling matches
     ``decompose``.  ``warm_start`` (max-weight only) is a per-layer list of
     ``WarmState`` from the previous step — layers whose off-diagonal
-    support is unchanged re-plan without any LAP solves.
+    support is unchanged re-plan without any LAP solves.  ``link_mask`` is
+    one fabric-wide ``[n, n]`` availability mask shared by every layer:
+    link outages are physical, so all layers route around the same dark
+    pairs (``core.faults.apply_link_mask`` semantics).
     """
     stack = np.asarray(matrices, dtype=np.float64)
     if stack.ndim != 3 or stack.shape[1] != stack.shape[2]:
@@ -95,10 +117,18 @@ def decompose_batch(
     if not keep_diagonal:
         local = np.einsum("lii->li", stack).copy()
         np.einsum("lii->li", stack)[:] = 0.0
+    if link_mask is not None and strategy != "maxweight":
+        from repro.core.faults import apply_link_mask
+
+        stack = np.stack(
+            [apply_link_mask(stack[i], link_mask) for i in range(n_layers)]
+        )
     if strategy == "maxweight":
         from repro.core.maxweight import maxweight_decompose_batch
 
-        out = maxweight_decompose_batch(stack, warm_start=warm_start, **kwargs)
+        out = maxweight_decompose_batch(
+            stack, warm_start=warm_start, link_mask=link_mask, **kwargs
+        )
     elif warm_start is not None:
         raise ValueError("warm_start is only supported for 'maxweight'")
     elif strategy in ("bvn", "bvn-bottleneck"):
@@ -113,4 +143,6 @@ def decompose_batch(
         raise ValueError(f"unknown strategy {strategy!r}; one of {STRATEGIES}")
     for i, d in enumerate(out):
         d.meta["local_tokens"] = local[i]
+        if link_mask is not None:
+            d.meta["link_masked"] = True
     return out

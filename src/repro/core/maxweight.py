@@ -224,6 +224,7 @@ def maxweight_decompose(
     max_matchings: int | None = None,
     min_fill: float = 0.0,
     warm_start: WarmState | None = None,
+    link_mask: np.ndarray | None = None,
 ) -> Decomposition:
     """Greedy max-weight decomposition.
 
@@ -238,10 +239,23 @@ def maxweight_decompose(
       warm_start: previous step's ``WarmState``; taken only when the new
         matrix has the same positive support (steady-state re-planning),
         making the re-plan LAP-free.
+      link_mask: optional ``[n, n]`` bool availability (True = usable).
+        Dead pairs are zeroed (cap 0 in the resulting schedule) and their
+        demand is rerouted across the source row's surviving destinations
+        before decomposition, so no phase ever matches a dark link.  The
+        warm-start support check runs on the *masked* matrix — a mask
+        change flips the support and forces a cold plan, a steady masked
+        re-plan still warm-hits.
     """
     a = np.asarray(matrix, dtype=np.float64)
     if (a < 0).any():
         raise ValueError("traffic matrix must be nonnegative")
+    mask_meta: dict | None = None
+    if link_mask is not None:
+        from repro.core.faults import apply_link_mask
+
+        mask_meta = {}
+        a = apply_link_mask(a, link_mask, meta=mask_meta)
     residual = a.copy()
     warm_hit = (
         warm_start is not None
@@ -276,7 +290,7 @@ def maxweight_decompose(
         if cold_perms:
             perms = np.concatenate([perms, np.stack(cold_perms)])
             sent = np.concatenate([sent, np.stack(cold_sents)])
-    return _build(
+    d = _build(
         a,
         perms,
         sent,
@@ -285,6 +299,10 @@ def maxweight_decompose(
         warm_hit=warm_hit,
         n_greedy=n_greedy,
     )
+    if mask_meta is not None:
+        d.meta["link_masked"] = True
+        d.meta["unroutable_tokens"] = mask_meta.get("unroutable_tokens", 0.0)
+    return d
 
 
 def maxweight_decompose_batch(
@@ -293,13 +311,16 @@ def maxweight_decompose_batch(
     max_matchings: int | None = None,
     min_fill: float = 0.0,
     warm_start: list[WarmState | None] | None = None,
+    link_mask: np.ndarray | None = None,
 ) -> list[Decomposition]:
     """Decompose a stack of traffic matrices ``[L, n, n]`` in one call.
 
     One entry per MoE layer (or traffic regime); layers whose support is
     unchanged since the previous step replay their old matchings LAP-free
     via ``warm_start`` (list aligned with the stack; None entries run
-    cold).  Returns one ``Decomposition`` per layer.
+    cold).  ``link_mask`` is one fabric-wide ``[n, n]`` availability mask
+    applied to every layer (outages are physical, not per-layer).
+    Returns one ``Decomposition`` per layer.
     """
     stack = np.asarray(matrices, dtype=np.float64)
     if stack.ndim != 3 or stack.shape[1] != stack.shape[2]:
@@ -316,6 +337,7 @@ def maxweight_decompose_batch(
                 max_matchings=max_matchings,
                 min_fill=min_fill,
                 warm_start=warm_start[i] if warm_start is not None else None,
+                link_mask=link_mask,
             )
         )
     return out

@@ -39,6 +39,7 @@ import time
 import numpy as np
 
 from repro.core.decompose import decompose_batch
+from repro.core.faults import apply_link_mask
 from repro.core.maxweight import WarmState, warm_state_of
 from repro.core.schedule import ScheduleTable, phase_envelope, plan_schedule
 from repro.core.selector import (
@@ -103,6 +104,22 @@ class ControllerConfig:
       shrink_patience: consecutive underused table rebuilds required
         before a slot shrinks (damps growth/shrink oscillation — each
         flip is a recompile).
+      fallback_chain: declared degradation chain of fabric dispatch
+        names, preferred first (e.g. ``("ragged_a2a", "phase_pipelined",
+        "a2a", "dense")``).  Empty disables the health FSM's fabric
+        switching (anomalies are still counted).  The training loop
+        reads ``active_fabric()`` and rebuilds its step when the FSM
+        moves along the chain.
+      quarantine_after: consecutive anomalous observations before a
+        soft quarantine demotes the active fabric one chain position
+        (hard faults via ``record_fault`` quarantine immediately).
+      drop_spike_frac: dropped/routed fraction in one observation above
+        which the step counts as a dropped-token-spike anomaly.
+      probe_backoff: observations to wait after a quarantine before
+        probing the preferred fabric again; doubles on each failed
+        probe up to ``probe_backoff_max`` (exponential backoff).
+      recover_after: consecutive clean observations required both to
+        start a probe and to declare a probe successful.
     """
 
     n_ranks: int
@@ -120,6 +137,12 @@ class ControllerConfig:
     envelope_slack: float = 1.5
     envelope_decay: float = 0.0
     shrink_patience: int = 3
+    fallback_chain: tuple[str, ...] = ()
+    quarantine_after: int = 2
+    drop_spike_frac: float = 0.25
+    probe_backoff: int = 8
+    probe_backoff_max: int = 512
+    recover_after: int = 3
 
     def __post_init__(self):
         if self.n_experts % self.n_ranks:
@@ -140,6 +163,25 @@ class ControllerConfig:
                 f"{self.shrink_patience}): 0 would shrink every slot on "
                 "any non-growth rebuild, recompiling each time"
             )
+        if not isinstance(self.fallback_chain, tuple):
+            object.__setattr__(self, "fallback_chain", tuple(self.fallback_chain))
+        if any(not (isinstance(f, str) and f) for f in self.fallback_chain):
+            raise ValueError(
+                "fallback_chain must be a tuple of fabric dispatch names"
+            )
+        if len(set(self.fallback_chain)) != len(self.fallback_chain):
+            raise ValueError(f"fallback_chain repeats a fabric: {self.fallback_chain}")
+        if self.quarantine_after < 1:
+            raise ValueError("quarantine_after must be >= 1")
+        if not 0.0 < self.drop_spike_frac <= 1.0:
+            raise ValueError("drop_spike_frac must be in (0, 1]")
+        if self.probe_backoff < 1 or self.probe_backoff_max < self.probe_backoff:
+            raise ValueError(
+                "need 1 <= probe_backoff <= probe_backoff_max "
+                f"(got {self.probe_backoff}, {self.probe_backoff_max})"
+            )
+        if self.recover_after < 1:
+            raise ValueError("recover_after must be >= 1")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -252,6 +294,27 @@ class ScheduleRuntime:
         self.observe_s = 0.0  # cumulative host time inside observe()
         self.replan_s = 0.0  # cumulative host time inside re-plan events
         self.last_event: dict | None = None
+        # ----- health FSM / degraded-fabric state (docs/robustness.md) -----
+        # HEALTHY (chain_pos 0, not probing) -> DEGRADED (chain_pos > 0)
+        # -> PROBING (back at pos 0 on trial) -> HEALTHY | DEGRADED.
+        self._link_mask: np.ndarray | None = None  # [n, n] bool, True = up
+        self._chain_pos = 0  # index into cfg.fallback_chain (0 = preferred)
+        self._anomaly_streak = 0
+        self._clean_streak = 0
+        self._drop_ema: float | None = None  # baseline dropped/routed frac
+        self._clip_streak = 0  # consecutive observes with new phase clips
+        self._last_phase_clips = 0
+        self._probe_at: int | None = None  # steps threshold for next probe
+        self._probe_return_pos = 0  # where a failed probe demotes back to
+        self._probing = False
+        self._backoff = cfg.probe_backoff
+        self.faults = None  # attached core.faults.FaultScenario (or None)
+        self.quarantines = 0
+        self.probe_failures = 0
+        self.fabric_faults = 0  # hard faults fed via record_fault
+        self.masked_replans = 0  # re-plans executed under a link mask
+        self.dark_window_steps = 0  # reconfig dark time (scenario-charged)
+        self.last_fault: dict | None = None
 
     def _on_evict(self, entry) -> None:
         """Selector LRU eviction hook: forget the entry's clipped-plan
@@ -288,6 +351,184 @@ class ScheduleRuntime:
         before the first table / with ``envelope_slack == 0``."""
         return None if self._envelope is None else self._envelope.copy()
 
+    # ------------------------------------------------- faults / health FSM
+    @property
+    def link_mask(self) -> np.ndarray | None:
+        """The active ``[n, n]`` availability mask (True = usable), or
+        None when the fabric is healthy."""
+        return None if self._link_mask is None else self._link_mask.copy()
+
+    def attach_faults(self, scenario) -> None:
+        """Attach a ``core.faults.FaultScenario`` so reconfiguration dark
+        windows are charged to ``dark_window_steps`` on every re-plan."""
+        self.faults = scenario
+
+    def set_link_mask(self, mask: np.ndarray | None) -> None:
+        """Adopt (or clear) a link availability mask and re-plan under it.
+
+        With a mask set, every re-plan routes demand around the dead
+        pairs (``decompose_batch(..., link_mask=...)`` gives them cap 0)
+        and the phase envelope is FROZEN: a degraded fabric must never
+        force the one deliberate recompile mid-incident, so masked plans
+        that would out-grow the envelope clamp at admission instead
+        (guarded by ``benchmarks/compile_smoke.py``).  Clearing the mask
+        re-plans back to the preferred routing.
+        """
+        if mask is None:
+            if self._link_mask is None:
+                return
+            self._link_mask = None
+        else:
+            m = np.asarray(mask, dtype=bool).copy()
+            n = self.cfg.n_ranks
+            if m.shape != (n, n):
+                raise ValueError(
+                    f"link_mask shape {m.shape} does not match the "
+                    f"[{n}, {n}] fabric"
+                )
+            np.fill_diagonal(m, True)  # local traffic never uses the fabric
+            if self._link_mask is not None and np.array_equal(m, self._link_mask):
+                return
+            self._link_mask = m
+            self.masked_replans += 1
+        # plans routed for a different availability mask must never be
+        # re-adopted from the library (a later "library hit" would ship
+        # bytes onto a dark pair), and the selectors' EMAs must reseed
+        # from the routable demand — forget both on every mask change
+        for sel in self.selectors:
+            sel.purge()
+        if self._smoothed is None:
+            return  # nothing planned yet; the first plan will honor the mask
+        proposals = [Proposal("miss", None, float("inf")) for _ in self.selectors]
+        self._replan(proposals)
+        # the caller (training loop) refreshes table() directly on the
+        # fault path; sync the change-detection key so the next observe
+        # doesn't double-count this swap
+        self._key = self.schedule_key
+
+    def record_fault(self, err: Exception) -> None:
+        """React to a hard fabric fault (a raised transfer/validation
+        error): quarantine immediately and, when the error carries an
+        availability mask (``FabricFaultError``), re-plan around it."""
+        self.fabric_faults += 1
+        mask = getattr(err, "link_mask", None)
+        if mask is not None:
+            self.set_link_mask(mask)
+        self._quarantine(f"{type(err).__name__}: {err}")
+
+    def active_fabric(self) -> str | None:
+        """The dispatch name the FSM wants live, or None without a chain."""
+        if not self.cfg.fallback_chain:
+            return None
+        return self.cfg.fallback_chain[self._chain_pos]
+
+    def next_fabric(self) -> str | None:
+        """The fabric a further quarantine would fall back to."""
+        chain = self.cfg.fallback_chain
+        if not chain or self._chain_pos + 1 >= len(chain):
+            return None
+        return chain[self._chain_pos + 1]
+
+    @property
+    def fallback_active(self) -> bool:
+        return bool(self.cfg.fallback_chain) and self._chain_pos > 0
+
+    @property
+    def health_state(self) -> str:
+        if self._probing:
+            return "PROBING"
+        return "DEGRADED" if self.fallback_active else "HEALTHY"
+
+    def _quarantine(self, reason: str) -> None:
+        """Demote the active fabric one position along the chain and arm
+        the exponential-backoff probe timer."""
+        self.quarantines += 1
+        self._anomaly_streak = 0
+        self._clean_streak = 0
+        chain = self.cfg.fallback_chain
+        if self._probing:
+            # the anomaly hit mid-probe: the preferred fabric is still
+            # sick — back to where the probe came from, double the wait
+            self.probe_failures += 1
+            self._backoff = min(self._backoff * 2, self.cfg.probe_backoff_max)
+            self._chain_pos = self._probe_return_pos
+            self._probing = False
+        elif chain and self._chain_pos + 1 < len(chain):
+            self._chain_pos += 1
+        self._probe_at = self.steps + self._backoff
+        self.last_fault = {
+            "step": self.steps,
+            "reason": reason,
+            "fabric": self.active_fabric(),
+            "state": self.health_state,
+        }
+
+    def _health(
+        self,
+        *,
+        loss: float | None,
+        dropped_total: float | None,
+        routed_total: float,
+    ) -> None:
+        """One FSM tick per observation: classify the step as clean or
+        anomalous, then advance HEALTHY/DEGRADED/PROBING accordingly."""
+        reasons = []
+        if loss is not None and not np.isfinite(loss):
+            reasons.append("non-finite loss")
+        if dropped_total is not None and routed_total > 0:
+            # a drop SPIKE, not an absolute level: capacity-factor
+            # backends (dense under an untrained router) drop a steady
+            # fraction by design, so the anomaly is the fraction jumping
+            # past both the configured floor and 3x its own running
+            # baseline.  The first observation seeds the baseline.
+            frac = dropped_total / routed_total
+            if self._drop_ema is not None and (
+                frac > self.cfg.drop_spike_frac
+                and frac > 3.0 * self._drop_ema + 0.01
+            ):
+                reasons.append(
+                    f"dropped-token spike ({dropped_total:.0f}/"
+                    f"{routed_total:.0f}, baseline {self._drop_ema:.3f})"
+                )
+            self._drop_ema = (
+                frac
+                if self._drop_ema is None
+                else 0.8 * self._drop_ema + 0.2 * frac
+            )
+        clips_delta = self.phase_clips - self._last_phase_clips
+        self._last_phase_clips = self.phase_clips
+        self._clip_streak = self._clip_streak + 1 if clips_delta > 0 else 0
+        if self._clip_streak >= 2:
+            reasons.append(f"repeated phase clips (x{self._clip_streak})")
+        if reasons:
+            self._anomaly_streak += 1
+            self._clean_streak = 0
+            if self._probing:
+                self._quarantine("; ".join(reasons))  # failed probe
+            elif self._anomaly_streak >= self.cfg.quarantine_after:
+                self._quarantine("; ".join(reasons))
+            return
+        self._anomaly_streak = 0
+        self._clean_streak += 1
+        if self._probing:
+            if self._clean_streak >= self.cfg.recover_after:
+                # probe survived: preferred fabric is healthy again
+                self._probing = False
+                self._probe_at = None
+                self._backoff = self.cfg.probe_backoff
+        elif (
+            self._chain_pos > 0
+            and self._probe_at is not None
+            and self.steps >= self._probe_at
+            and self._clean_streak >= self.cfg.recover_after
+        ):
+            # backoff elapsed on a clean degraded fabric: trial the
+            # preferred backend (a failed probe demotes right back)
+            self._probe_return_pos = self._chain_pos
+            self._chain_pos = 0
+            self._probing = True
+            self._clean_streak = 0
+
     def _fit_envelope(self, scheds) -> tuple[int, ...] | None:
         """Growth-biased envelope policy.  The envelope must cover every
         current plan's per-slot caps: the first build sizes it with
@@ -313,6 +554,14 @@ class ScheduleRuntime:
         must re-prove itself against the new envelope."""
         if not self.cfg.envelope_slack:
             return None
+        if self._link_mask is not None and self._envelope is not None:
+            # degraded fabric: the envelope is frozen mid-incident.  A
+            # masked re-plan concentrates rerouted demand onto fewer
+            # pairs, which could out-grow the envelope and force the one
+            # deliberate recompile exactly when the fabric is least able
+            # to afford it — instead the table clamps such plans at
+            # admission (set_link_mask docs; compile_smoke-guarded).
+            return tuple(int(v) for v in self._envelope)
         # one pass over the plans: the raw (unslacked) per-slot max drives
         # the growth test, and the slacked need derives from it directly
         raw = phase_envelope(scheds, self._k_max, slack=1.0)
@@ -396,23 +645,40 @@ class ScheduleRuntime:
     def _group_traffic(self, gi: int) -> np.ndarray:
         # Mean (not sum) over the group's layers: the schedule executes
         # per layer, so capacities must be sized for one layer's traffic.
-        return self._smoothed[self.groups[gi]].mean(axis=0)
+        t = self._smoothed[self.groups[gi]].mean(axis=0)
+        if self._link_mask is not None:
+            # score and plan on the ROUTABLE demand: dark-pair traffic
+            # rides surviving links after the masked re-plan, so serving
+            # checks against the raw matrix would see phantom drops and
+            # re-plan every step (apply_link_mask is idempotent with
+            # decompose's own masking)
+            t = apply_link_mask(t, self._link_mask)
+        return t
 
     # -------------------------------------------------------------- observe
-    def observe(self, stats, dropped: np.ndarray | None = None) -> Decision:
+    def observe(
+        self,
+        stats,
+        dropped: np.ndarray | None = None,
+        loss: float | None = None,
+    ) -> Decision:
         """Feed one step's realized routing counts ``[L, n_src, E]``.
 
         ``stats`` may also be the MoE stats pytree the forward emits
         (``{"routing": ..., "dropped": ...}``); ``dropped`` (any shape,
         summed) accumulates into ``admitted_dropped`` — the
-        plan-admitted-but-cut token counter ``metrics()`` surfaces."""
+        plan-admitted-but-cut token counter ``metrics()`` surfaces.
+        ``loss`` (the step's already-fetched host scalar) feeds the
+        health FSM: a non-finite value is an anomaly."""
         t0 = time.perf_counter()
         if isinstance(stats, dict):
             if dropped is None:
                 dropped = stats.get("dropped")
             stats = stats["routing"]
+        dropped_total = None
         if dropped is not None:
-            self.admitted_dropped += float(np.asarray(dropped).sum())
+            dropped_total = float(np.asarray(dropped).sum())
+            self.admitted_dropped += dropped_total
         mats = routing_to_traffic(
             stats, n_ranks=self.cfg.n_ranks, n_experts=self.cfg.n_experts
         )
@@ -431,6 +697,11 @@ class ScheduleRuntime:
             for gi, sel in enumerate(self.selectors)
         ]
         decision = self._apply(proposals)
+        self._health(
+            loss=loss,
+            dropped_total=dropped_total,
+            routed_total=float(mats.sum()),
+        )
         self.observe_s += time.perf_counter() - t0
         return decision
 
@@ -500,9 +771,14 @@ class ScheduleRuntime:
             self.cfg.strategy,
             min_fill=self.cfg.min_fill,
             warm_start=warm if maxweight else None,
+            link_mask=self._link_mask,
         )
         self.decompose_calls += 1
         self.replan_events += 1
+        if self.faults is not None and self.faults.dark_window_steps > 0:
+            # every reconfiguration pays the scenario's dark window while
+            # the switch retrains ("To Reconfigure or Not to Reconfigure")
+            self.dark_window_steps += self.faults.dark_window_steps
         if maxweight:
             self._warm = [warm_state_of(d) for d in decomps[: self.n_layers]]
             for gi, row in group_rows.items():
@@ -582,4 +858,14 @@ class ScheduleRuntime:
                 if self._envelope is None
                 else [int(v) for v in self._envelope]
             ),
+            # degraded-fabric health (docs/robustness.md)
+            "health_state": self.health_state,
+            "active_fabric": self.active_fabric(),
+            "fallback_active": self.fallback_active,
+            "quarantines": self.quarantines,
+            "probe_failures": self.probe_failures,
+            "fabric_faults": self.fabric_faults,
+            "masked_replans": self.masked_replans,
+            "dark_window_steps": self.dark_window_steps,
+            "link_masked": self._link_mask is not None,
         }

@@ -220,6 +220,19 @@ class ScheduleSelector:
         self._touch(entry)
         return changed
 
+    def purge(self) -> None:
+        """Forget every entry, the current schedule, and the smoothed
+        traffic.  Called when the fabric's link availability changes:
+        plans routed for a different mask must never be re-adopted from
+        the library (a "library hit" would ship bytes onto a dark pair),
+        and the EMA must reseed from the new routable demand.  The
+        caller re-plans before the next table build."""
+        self.library = []
+        self.current = None
+        self.smoothed = None
+        self._caps_stack = None
+        self._last_used = {}
+
     def _evict(self) -> None:
         """Drop the least-recently-used entry (never the current one)."""
         candidates = [e for e in self.library if e is not self.current]

@@ -25,6 +25,7 @@ pre-registry config).
 """
 
 from repro.parallel.fabric.base import (
+    DEGRADATION_CHAIN,
     FABRICS,
     Fabric,
     FabricContext,
@@ -34,6 +35,7 @@ from repro.parallel.fabric.base import (
     consumes_table,
     fabric_names,
     get_fabric,
+    next_fabric,
     register_fabric,
     resolve_fabric,
 )
@@ -46,10 +48,17 @@ from repro.parallel.fabric.ppermute import PPermuteFabric
 from repro.parallel.fabric.phase_pipelined import PhasePipelinedFabric
 from repro.parallel.fabric.ragged_a2a import RaggedA2AFabric, ragged_available
 
+# the fault-injection wrapper registers per-scenario via wrap_faulty,
+# not at import time (it is stateful; the five real backends stay the
+# only singletons)
+from repro.parallel.fabric.faulty import FaultInjectionFabric, wrap_faulty
+
 __all__ = [
+    "DEGRADATION_CHAIN",
     "FABRICS",
     "Fabric",
     "FabricContext",
+    "FaultInjectionFabric",
     "PackedTokens",
     "DenseFabric",
     "MonolithicA2AFabric",
@@ -62,7 +71,9 @@ __all__ = [
     "fabric_names",
     "geometry",
     "get_fabric",
+    "next_fabric",
     "ragged_available",
     "register_fabric",
     "resolve_fabric",
+    "wrap_faulty",
 ]

@@ -42,12 +42,40 @@ __all__ = [
     "FabricContext",
     "PackedTokens",
     "FABRICS",
+    "DEGRADATION_CHAIN",
     "register_fabric",
     "get_fabric",
     "fabric_names",
+    "next_fabric",
     "resolve_fabric",
     "consumes_schedule",
 ]
+
+# The default degradation chain (docs/robustness.md): each backend's
+# fallback when the health FSM quarantines it — richest movement first,
+# ending at the fabric-free dense path that cannot fault.
+DEGRADATION_CHAIN = ("ragged_a2a", "phase_pipelined", "a2a", "dense")
+
+
+def next_fabric(name: str) -> str | None:
+    """The backend after ``name`` in the default degradation chain.
+
+    Backends outside the chain (wrappers, future fabrics) degrade
+    straight to ``dense``; ``dense`` itself has nowhere left to fall.
+    """
+    base = name.split(":", 1)[-1] if ":" in name else name
+    if base in DEGRADATION_CHAIN:
+        i = DEGRADATION_CHAIN.index(base)
+        return DEGRADATION_CHAIN[i + 1] if i + 1 < len(DEGRADATION_CHAIN) else None
+    return "dense" if base != "dense" else None
+
+
+def _chain_hint(name: str) -> str:
+    """Suffix for validate errors: where the degradation chain goes next."""
+    nxt = next_fabric(name)
+    if nxt is None:
+        return " [end of degradation chain: no fallback fabric]"
+    return f" [degradation chain: next fabric is {nxt!r}]"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -125,6 +153,7 @@ class Fabric:
         backend on misuse — a ``ScheduleTable`` row handed to a static
         backend (or vice versa) must say *who* rejected it."""
         kind = self.schedule_kind
+        hint = _chain_hint(self.name)
         if kind == "none":
             return None  # dense/a2a ignore plans (documented behavior)
         if kind == "static":
@@ -134,11 +163,12 @@ class Fabric:
                     "this backend bakes a static A2ASchedule into the "
                     "executable; use the 'phase_pipelined' (or "
                     "'ragged_a2a') fabric for swap-without-recompile rows"
+                    + hint
                 )
             if not isinstance(schedule, A2ASchedule):
                 raise ValueError(
                     f"{self.name}: needs a static A2ASchedule "
-                    f"(got {type(schedule).__name__})"
+                    f"(got {type(schedule).__name__})" + hint
                 )
             return schedule
         # row-consuming backends
@@ -147,25 +177,25 @@ class Fabric:
                 f"{self.name}: rejected a static A2ASchedule — this "
                 "backend consumes traced ScheduleTable rows (build one "
                 "with core.ScheduleTable.from_schedules); use the "
-                "'ppermute' fabric for static plans"
+                "'ppermute' fabric for static plans" + hint
             )
         if not isinstance(schedule, ScheduleTable):
             if kind == "optional_row" and schedule is None:
                 return None
             raise ValueError(
                 f"{self.name}: needs a ScheduleTable row "
-                f"(got {type(schedule).__name__})"
+                f"(got {type(schedule).__name__})" + hint
             )
         if not schedule.is_row:
             raise ValueError(
                 f"{self.name}: rejected a full ScheduleTable — pass "
                 "table.row(l) (the stack's scan slices rows "
-                "automatically)"
+                "automatically)" + hint
             )
         if self.uses_mesh and schedule.n != n:
             raise ValueError(
                 f"{self.name}: schedule row plans {schedule.n} ranks, "
-                f"EP axis has {n}"
+                f"EP axis has {n}" + hint
             )
         if self.requires_envelope and schedule.envelope is None:
             raise ValueError(
@@ -173,7 +203,7 @@ class Fabric:
                 "envelope (ScheduleTable.from_schedules(..., "
                 "envelope='auto') or a ScheduleRuntime with "
                 "envelope_slack > 0) — the envelope is the backend's "
-                "static buffer geometry"
+                "static buffer geometry" + hint
             )
         return schedule
 

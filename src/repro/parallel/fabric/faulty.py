@@ -1,0 +1,119 @@
+"""Fault-injection wrapper fabric.
+
+``FaultInjectionFabric`` wraps any registered backend with a
+``core.faults.FaultScenario`` and enforces the scenario at the host
+boundary, the way a real fabric manager surfaces link failures: a
+schedule that routes a dark pair is *refused* (``FabricFaultError``
+naming the wrapped backend, the offending pair/phase, and the next
+fabric in the degradation chain) rather than silently half-delivered.
+The movement itself (pack/dispatch/combine) delegates unchanged — once
+planning routes around the dead pairs there is nothing left to
+perturb, which is exactly the invariant the chaos tests assert.
+
+Two injection surfaces:
+
+* ``validate_schedule`` — delegates to the wrapped backend's checks,
+  then host-checks concrete schedules against the scenario's current
+  link mask.  Traced ``ScheduleTable`` rows inside jit cannot be
+  host-checked (they are tracers); for that path the same check runs in
+  ``core.faults.fault_hook`` against the runtime's numpy plans, so no
+  fault goes unobserved.
+* ``check_transfers`` — an explicit host-side probe (serving loops call
+  it per round with concrete plans) raising on the first dark crossing.
+
+Wrappers register under ``"faulty:<base>"`` via ``wrap_faulty`` so
+``MoECfg.dispatch`` can select them; they mirror the wrapped backend's
+capability flags, keeping every registry contract intact.
+"""
+
+from __future__ import annotations
+
+from repro.core.faults import FaultScenario, check_schedule_mask
+from repro.parallel.fabric.base import (
+    FABRICS,
+    Fabric,
+    get_fabric,
+    next_fabric,
+)
+
+__all__ = ["FaultInjectionFabric", "wrap_faulty"]
+
+
+class FaultInjectionFabric(Fabric):
+    """A registered backend wrapped with a deterministic fault scenario.
+
+    Stateful where plain fabrics are not: ``advance(step)`` moves the
+    scenario clock (the wrapper is per-run, not a shared singleton —
+    ``wrap_faulty`` registers a fresh instance per scenario).
+    """
+
+    def __init__(self, base: Fabric, scenario: FaultScenario):
+        self.base = base
+        self.scenario = scenario
+        self.name = f"faulty:{base.name}"
+        self.uses_mesh = base.uses_mesh
+        self.schedule_kind = base.schedule_kind
+        self.requires_envelope = base.requires_envelope
+        self.step = 0
+        self.faults_raised = 0
+
+    def advance(self, step: int) -> None:
+        """Move the scenario clock (the loop's step counter)."""
+        self.step = int(step)
+
+    # ------------------------------------------------------------ schedule
+    def validate_schedule(self, schedule, *, n: int):
+        sched = self.base.validate_schedule(schedule, n=n)
+        if sched is not None:
+            self._check(sched)
+        return sched
+
+    def check_transfers(self, schedule) -> None:
+        """Host-side probe: raise ``FabricFaultError`` if ``schedule``
+        (concrete ``A2ASchedule``(s) or table rows) crosses a dark pair
+        at the current scenario step."""
+        self._check(schedule)
+
+    def _check(self, schedule) -> None:
+        mask = self.scenario.link_mask(self.step)
+        if mask.all():
+            return
+        try:
+            check_schedule_mask(
+                schedule,
+                mask,
+                backend=self.base.name,
+                next_fabric=next_fabric(self.base.name),
+                step=self.step,
+            )
+        except Exception:
+            self.faults_raised += 1
+            raise
+
+    # ------------------------------------------------------------ pipeline
+    def pack(self, ctx, x_loc, idx, gates):
+        return self.base.pack(ctx, x_loc, idx, gates)
+
+    def dispatch(self, ctx, packed):
+        return self.base.dispatch(ctx, packed)
+
+    def combine(self, ctx, packed, state, ys):
+        return self.base.combine(ctx, packed, state, ys)
+
+    # ----------------------------------------------------------- accounting
+    def dispatch_tokens(self, *, n, cap_uniform=0, schedule=None, envelope=None):
+        return self.base.dispatch_tokens(
+            n=n, cap_uniform=cap_uniform, schedule=schedule, envelope=envelope
+        )
+
+
+def wrap_faulty(base_name: str, scenario: FaultScenario) -> str:
+    """Register a fault-wrapped backend; returns its dispatch name.
+
+    Re-wrapping the same base replaces the previous wrapper (scenarios
+    are per-run).  Tests should ``FABRICS.pop(name)`` when done so the
+    registry stays the five real backends for everyone else.
+    """
+    fab = FaultInjectionFabric(get_fabric(base_name), scenario)
+    FABRICS[fab.name] = fab
+    return fab.name

@@ -9,6 +9,16 @@ Production behaviors exercised here (and tested in multidev_train.py):
   error in production) rolls back to the last checkpoint and continues,
 * deterministic data: batch(step) is pure, so replayed steps see
   identical data,
+* a non-finite loss consumes the same failure budget as a crashed step
+  (``NonFiniteLossError`` -> rollback); donated optimizer state would
+  otherwise carry the NaN forward forever,
+* degraded-fabric fallback: with a runtime whose ``fallback_chain`` is
+  set, hard fabric faults (``FabricFaultError``) quarantine the active
+  backend, re-plan around the fault's link mask, and the loop rebuilds
+  its step on the next fabric in the chain (a deliberate, counted
+  recompile — ``controller.fabric_switches``), probing back to the
+  preferred backend once the runtime's health FSM recovers
+  (docs/robustness.md),
 * straggler note: SPMD steps are globally synchronous, so per-step
   stragglers surface as slow steps, not divergence; mitigation at this
   layer = checkpoint + restart excluding the slow host (elastic restore),
@@ -26,6 +36,7 @@ import jax
 import numpy as np
 
 from repro.checkpoint import CheckpointManager
+from repro.core.faults import FabricFaultError, NonFiniteLossError
 from repro.data import DataConfig, SyntheticStream
 from repro.optim import AdamW, cosine_schedule, ef_int8_init
 from repro.parallel.fabric import (
@@ -139,9 +150,34 @@ def train_loop(
             "first step: prime the runtime (ScheduleRuntime.prime) or "
             "pass a Model with an initial schedule"
         )
+    # degraded-fabric fallback: validate the declared chain up front —
+    # config errors, not transient faults (same fail-fast rationale as
+    # the dispatch checks above)
+    chain = runtime.cfg.fallback_chain if runtime is not None else ()
+    if chain:
+        if moe_cfg is None:
+            raise ValueError(
+                "fallback_chain needs an MoE model (no moe config found)"
+            )
+        if chain[0] != moe_cfg.dispatch:
+            raise ValueError(
+                f"fallback_chain must start at the configured dispatch: "
+                f"chain {chain} vs dispatch {moe_cfg.dispatch!r}"
+            )
+        for fname in chain:
+            if _fabric_consumes(fname) and not _fabric_consumes_table(fname):
+                raise ValueError(
+                    f"fallback_chain entry {fname!r} bakes its schedule "
+                    "into the executable — the FSM cannot swap onto it "
+                    "mid-run; chain table-consuming or schedule-free "
+                    "fabrics only"
+                )
+    current_dispatch = moe_cfg.dispatch if moe_cfg is not None else None
     # ONE executable for the whole run: the schedule is traced input
     # (ScheduleTable), so controller swaps pass new arrays into the same
     # compiled step.  There is no per-assignment compile cache anymore.
+    # (Degradation-chain fabric switches are the exception: each rebuilds
+    # the step on a different backend — a deliberate, counted recompile.)
     step_fn = build_step(model)
     manager = CheckpointManager(loop_cfg.ckpt_dir, keep=loop_cfg.keep)
 
@@ -170,6 +206,7 @@ def train_loop(
     last_failure_step = -1
     step = start_step
     swaps = 0
+    fabric_switches = 0  # degradation-chain step rebuilds (recompiles)
     cache_fn = getattr(step_fn, "_cache_size", lambda: 1)
     # executable count at the first swap: any growth beyond it is a
     # swap-attributable recompile.  (The first couple of steps may compile
@@ -177,12 +214,55 @@ def train_loop(
     # that's jit warmup, not the controller's doing.)
     pre_swap_cache = None
     pending_routing = None  # previous step's routing counts (device)
+    pending_loss = None  # previous step's loss scalar (device)
+    last_loss = None  # previous step's loss, host-fetched (FSM input)
+
+    def switch_fabric(want: str) -> None:
+        """Rebuild the step on another fabric of the degradation chain.
+
+        The model facade is immutable, so the switch is a rebuilt facade
+        + a fresh jit — the ONE kind of mid-run recompile this loop
+        performs on purpose (counted in ``fabric_switches``; the
+        zero-recompile contract of schedule swaps is tracked per
+        executable, so the cache baseline resets here too)."""
+        nonlocal model, step_fn, cache_fn, pre_swap_cache
+        nonlocal consumes_schedule, schedule, current_dispatch, fabric_switches
+        new_cfg = dataclasses.replace(
+            model.cfg, moe=dataclasses.replace(model.cfg.moe, dispatch=want)
+        )
+        model = type(model)(new_cfg, model.schedule)
+        step_fn = build_step(model)
+        cache_fn = getattr(step_fn, "_cache_size", lambda: 1)
+        pre_swap_cache = None
+        consumes_schedule = _fabric_consumes(want)
+        schedule = (
+            runtime.table()
+            if (consumes_schedule and _fabric_consumes_table(want))
+            else (model.schedule if consumes_schedule else None)
+        )
+        current_dispatch = want
+        fabric_switches += 1
+
     t_last = time.perf_counter()
     steps_since_log = 0
     while step < loop_cfg.steps:
         try:
             if failure_hook is not None:
                 failure_hook(step)
+            if pending_loss is not None:
+                # same off-critical-path contract as pending_routing: the
+                # previous step's device work already finished, so this
+                # fetch never blocks.  A NaN/Inf here consumes the
+                # failure budget like a crash — donated state means the
+                # poisoned params are already gone; rollback is the only
+                # way back.
+                last_loss = float(np.asarray(pending_loss))
+                pending_loss = None
+                if not np.isfinite(last_loss):
+                    raise NonFiniteLossError(
+                        f"step {step - 1} produced non-finite loss "
+                        f"{last_loss}; rolling back to the last checkpoint"
+                    )
             if runtime is not None and pending_routing is not None:
                 # Observe the PREVIOUS step's realized routing: its device
                 # computation already finished, so the host fetch never
@@ -196,7 +276,9 @@ def train_loop(
                 pending_routing = None
                 if stats_hook is not None:
                     stats = stats_hook(step, stats)
-                decision = runtime.observe(stats, dropped=dropped)
+                decision = runtime.observe(
+                    stats, dropped=dropped, loss=last_loss
+                )
                 if decision.changed:
                     swaps += 1
                     if consumes_schedule:
@@ -210,6 +292,20 @@ def train_loop(
                         "library miss" if decision.replanned else "library hit",
                         ",".join(decision.actions),
                     )
+            if runtime is not None and chain:
+                # the health FSM may have moved along the degradation
+                # chain (quarantine, or a backoff probe restoring the
+                # preferred backend)
+                want = runtime.active_fabric()
+                if want is not None and want != current_dispatch:
+                    log.info(
+                        "step %d: degradation chain %s -> %s (%s)",
+                        step,
+                        current_dispatch,
+                        want,
+                        runtime.health_state,
+                    )
+                    switch_fabric(want)
             batch = shard_batch(stream.batch(step))
             params, opt_state, ef_state, metrics = step_fn(
                 state["params"], state["opt"], state["ef"], batch, schedule
@@ -217,6 +313,17 @@ def train_loop(
             state = {"params": params, "opt": opt_state, "ef": ef_state}
             if runtime is not None:
                 pending_routing = metrics.pop("moe_stats")
+            pending_loss = metrics["loss"]
+            if step == loop_cfg.steps - 1:
+                # the deferred check would miss the final step: fetch it
+                # synchronously (we're at the end; nothing left to overlap)
+                last_loss = float(np.asarray(pending_loss))
+                pending_loss = None
+                if not np.isfinite(last_loss):
+                    raise NonFiniteLossError(
+                        f"step {step} produced non-finite loss {last_loss}; "
+                        "rolling back to the last checkpoint"
+                    )
             if step >= last_failure_step:
                 # progressed past the failing step: the fault was transient
                 consecutive_failures = 0
@@ -227,6 +334,12 @@ def train_loop(
             if consecutive_failures > loop_cfg.max_failures:
                 raise
             log.warning("step %d failed (%s); restoring last checkpoint", step, err)
+            if runtime is not None and isinstance(err, FabricFaultError):
+                # a hard fabric fault: quarantine the backend and re-plan
+                # around the fault's link mask before the retry (the
+                # rolled-back step then executes a plan the fabric can
+                # honor — bounded by the same failure budget)
+                runtime.record_fault(err)
             manager.wait()
             template = fresh_state()
             ck_step, restored = manager.restore_latest(template)
@@ -238,6 +351,25 @@ def train_loop(
             # step so the returned history has no duplicate step numbers
             history = [h for h in history if h["step"] < step]
             pending_routing = None
+            pending_loss = None
+            last_loss = None
+            if runtime is not None and chain:
+                want = runtime.active_fabric()
+                if want is not None and want != current_dispatch:
+                    log.info(
+                        "step %d: degradation chain %s -> %s (%s)",
+                        step,
+                        current_dispatch,
+                        want,
+                        runtime.health_state,
+                    )
+                    switch_fabric(want)
+                elif consumes_schedule and _fabric_consumes_table(
+                    current_dispatch
+                ):
+                    # no fabric change, but record_fault may have swapped
+                    # in a masked plan — refresh the traced table
+                    schedule = runtime.table()
             t_last = time.perf_counter()
             steps_since_log = 0
             continue
@@ -274,5 +406,7 @@ def train_loop(
             **runtime.metrics(),
             "swaps": swaps,
             "compiles": compiles,
+            "fabric_switches": fabric_switches,
+            "final_dispatch": current_dispatch,
         }
     return out

@@ -193,6 +193,32 @@ class TestScheduleMisuse:
         with pytest.raises(ValueError, match="row"):
             moe.moe_apply(params, cfg, jnp.zeros((1, 4, 32)), schedule=table)
 
+    def test_errors_name_the_fallback_fabric(self):
+        """PR 6 satellite: every schedule-rejection error states the next
+        fabric in the degradation chain, so a failing config tells the
+        operator what to fall back to without a docs round-trip."""
+        from repro.parallel.fabric import DEGRADATION_CHAIN, next_fabric
+
+        cases = [
+            ("ppermute", _row()),
+            ("phase_pipelined", _plan(0)),
+            ("ragged_a2a", _plan(0)),
+            ("ragged_a2a", _row(envelope=None)),
+        ]
+        for name, bad in cases:
+            with pytest.raises(ValueError) as e:
+                get_fabric(name).validate_schedule(bad, n=N_V)
+            nxt = next_fabric(name)
+            assert nxt in DEGRADATION_CHAIN
+            assert f"next fabric is {nxt!r}" in str(e.value), (name, str(e.value))
+
+    def test_end_of_chain_says_so(self):
+        """dense is the chain's floor: its rejections must say there is
+        nowhere left to fall."""
+        table = ScheduleTable.from_schedules([_plan(0), _plan(1)], k_max=N_V)
+        with pytest.raises(ValueError, match="end of degradation chain"):
+            get_fabric("dense").validate_schedule(table, n=N_V)
+
 
 class TestParityMatrixSingleDevice:
     """The parity matrix on one device: every registered fabric resolves

@@ -327,3 +327,190 @@ class TestEnvelopePolicy:
         rt.prime(np.full((N, N), 50.0))
         assert rt.table().envelope is None
         assert rt.metrics()["envelope"] is None
+
+
+class TestHealthFSM:
+    """Degraded-fabric health machine (PR 6): anomaly detection,
+    quarantine/fallback along the chain, exponential-backoff probing,
+    and the fault telemetry ``metrics()`` must surface."""
+
+    def _chained(self, **kw):
+        cfg = dict(
+            fallback_chain=("ragged_a2a", "phase_pipelined", "dense"),
+            quarantine_after=1,
+            probe_backoff=2,
+            recover_after=1,
+        )
+        cfg.update(kw)
+        rt = _runtime(**cfg)
+        rt.prime(np.full((N, N), 100.0))
+        return rt
+
+    def test_metrics_expose_health_telemetry(self):
+        rt = _runtime()
+        rt.prime(np.full((N, N), 50.0))
+        m = rt.metrics()
+        assert m["health_state"] == "HEALTHY"
+        assert m["active_fabric"] is None  # no chain declared
+        assert m["fallback_active"] is False
+        assert m["quarantines"] == 0
+        assert m["probe_failures"] == 0
+        assert m["fabric_faults"] == 0
+        assert m["masked_replans"] == 0
+        assert m["dark_window_steps"] == 0
+        assert m["link_masked"] is False
+
+    def test_chain_validation(self):
+        with pytest.raises(ValueError, match="repeats a fabric"):
+            _runtime(fallback_chain=("dense", "dense"))
+        with pytest.raises(ValueError, match="dispatch names"):
+            _runtime(fallback_chain=("dense", ""))
+        with pytest.raises(ValueError, match="quarantine_after"):
+            _runtime(quarantine_after=0)
+        with pytest.raises(ValueError, match="probe_backoff"):
+            _runtime(probe_backoff=8, probe_backoff_max=4)
+
+    def test_nonfinite_loss_walks_the_chain(self):
+        rt = self._chained(quarantine_after=2)
+        assert rt.active_fabric() == "ragged_a2a"
+        assert rt.next_fabric() == "phase_pipelined"
+        probs = np.full(E, 1.0 / E)
+        rt.observe(_stats(probs), loss=1.0)
+        assert rt.health_state == "HEALTHY"
+        rt.observe(_stats(probs), loss=float("nan"))
+        assert rt.quarantines == 0  # one anomaly < quarantine_after
+        rt.observe(_stats(probs), loss=float("inf"))
+        assert rt.quarantines == 1
+        assert rt.health_state == "DEGRADED"
+        assert rt.fallback_active
+        assert rt.active_fabric() == "phase_pipelined"
+        assert rt.last_fault["reason"].startswith("non-finite loss")
+
+    def test_drop_spike_is_baseline_relative(self):
+        """A steady 30% capacity-drop level (dense under an untrained
+        router) is NOT an anomaly even above ``drop_spike_frac``; only a
+        jump past 3x the running baseline quarantines."""
+        rt = self._chained(drop_spike_frac=0.25, quarantine_after=1)
+        probs = np.full(E, 1.0 / E)
+        routed = float(_stats(probs).sum())
+        for _ in range(6):
+            rt.observe(_stats(probs), dropped=0.3 * routed, loss=1.0)
+        assert rt.quarantines == 0, rt.last_fault
+        # fabric degradation: the fraction spikes to ~95%
+        rt.observe(_stats(probs), dropped=0.95 * routed, loss=1.0)
+        assert rt.quarantines == 1
+        assert "dropped-token spike" in rt.last_fault["reason"]
+
+    def test_probe_failure_backs_off_exponentially(self):
+        rt = self._chained()
+        probs = np.full(E, 1.0 / E)
+        nan = float("nan")
+        rt.observe(_stats(probs), loss=nan)  # steps=1: quarantine
+        assert rt.quarantines == 1 and rt.health_state == "DEGRADED"
+        assert rt.active_fabric() == "phase_pipelined"
+        rt.observe(_stats(probs), loss=1.0)  # steps=2 < probe_at=3
+        assert rt.health_state == "DEGRADED"
+        rt.observe(_stats(probs), loss=1.0)  # steps=3: probe starts
+        assert rt.health_state == "PROBING"
+        assert rt.active_fabric() == "ragged_a2a"
+        rt.observe(_stats(probs), loss=nan)  # failed probe
+        assert rt.probe_failures == 1
+        assert rt.health_state == "DEGRADED"
+        assert rt.active_fabric() == "phase_pipelined"  # back where it was
+        # backoff doubled (2 -> 4): probe_at = 4 + 4 = 8
+        for step in range(5, 8):
+            rt.observe(_stats(probs), loss=1.0)
+            assert rt.health_state == "DEGRADED", step
+        rt.observe(_stats(probs), loss=1.0)  # steps=8: second probe
+        assert rt.health_state == "PROBING"
+        rt.observe(_stats(probs), loss=1.0)  # clean probe: recovered
+        assert rt.health_state == "HEALTHY"
+        assert rt.active_fabric() == "ragged_a2a"
+        assert not rt.fallback_active
+        assert rt.quarantines == 2  # initial + the failed probe
+
+    def test_dark_windows_charged_per_replan(self):
+        from repro.core import FaultScenario
+
+        rt = _runtime()
+        sc = FaultScenario("dark_window", n_ranks=N, dark_window_steps=3)
+        rt.attach_faults(sc)
+        rt.prime(np.full((N, N), 100.0))
+        assert rt.dark_window_steps == 3  # priming plans once
+        hot = np.full(E, 1e-3)
+        hot[-1] = 1.0
+        rt.observe(_stats(hot / hot.sum(), tokens=64000.0))
+        assert rt.replan_events == 2
+        assert rt.dark_window_steps == 6
+        assert rt.metrics()["dark_window_steps"] == 6
+
+    def test_set_link_mask_replans_and_clears(self):
+        rt = _runtime()
+        rt.prime(np.full((N, N), 100.0))
+        replans = rt.replan_events
+        mask = np.ones((N, N), dtype=bool)
+        mask[0, 1] = False
+        rt.set_link_mask(mask)
+        assert rt.metrics()["link_masked"] is True
+        assert rt.masked_replans == 1
+        assert rt.replan_events == replans + 1
+        # every planned schedule now gives the dark pair cap 0
+        for sched in rt.schedules:
+            perms = np.asarray(sched.perms)
+            valid = np.asarray(sched.valid)
+            for k in range(perms.shape[0]):
+                if valid[k, 0]:
+                    assert perms[k, 0] != 1
+        # same mask again: no-op
+        rt.set_link_mask(mask.copy())
+        assert rt.masked_replans == 1
+        assert rt.replan_events == replans + 1
+        rt.set_link_mask(None)
+        assert rt.metrics()["link_masked"] is False
+        assert rt.replan_events == replans + 2
+        rt.set_link_mask(None)  # already clear: no-op
+        assert rt.replan_events == replans + 2
+        with pytest.raises(ValueError, match="link_mask shape"):
+            rt.set_link_mask(np.ones((N + 1, N + 1), bool))
+
+    def test_envelope_frozen_while_masked(self):
+        """A degraded fabric must never force the deliberate recompile
+        mid-incident: masked re-plans clamp into the existing envelope
+        instead of growing it."""
+        rt = _runtime(envelope_slack=1.1)
+        rt.prime(np.where(np.eye(N, dtype=bool), 0.0, 100.0))
+        env = np.asarray(rt.table().envelope)
+        mask = np.ones((N, N), dtype=bool)
+        mask[0, 1] = False
+        rt.set_link_mask(mask)
+        hot = np.full(E, 1e-3)
+        hot[-1] = 1.0
+        rt.observe(_stats(hot / hot.sum(), tokens=64000.0))
+        np.testing.assert_array_equal(np.asarray(rt.table().envelope), env)
+        assert rt.envelope_growths == 0
+        # mask lifted: the same hot regime may now grow it (deliberate)
+        rt.set_link_mask(None)
+        rt.observe(_stats(hot / hot.sum(), tokens=64000.0))
+        rt.table()
+        assert rt.envelope_growths >= 1
+
+    def test_record_fault_adopts_mask_and_quarantines(self):
+        from repro.core import FabricFaultError
+
+        rt = self._chained()
+        mask = np.ones((N, N), dtype=bool)
+        mask[2, 1] = False
+        err = FabricFaultError(
+            "ragged_a2a: link (2 -> 1) is dark",
+            backend="ragged_a2a",
+            pair=(2, 1),
+            phase=0,
+            link_mask=mask,
+            next_fabric="phase_pipelined",
+        )
+        rt.record_fault(err)
+        assert rt.fabric_faults == 1
+        assert rt.quarantines == 1
+        assert rt.health_state == "DEGRADED"
+        assert rt.active_fabric() == "phase_pipelined"
+        assert rt.link_mask is not None and not rt.link_mask[2, 1]

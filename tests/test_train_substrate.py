@@ -337,3 +337,56 @@ class TestTrainLoopFaultTolerance:
         # ~250ms window total the bug reported
         for s in (5, 10):
             assert sleep_s <= entries[s] < 3 * sleep_s, entries
+
+
+class TestNonFiniteLoss:
+    """PR 6 satellite: a NaN/Inf loss is a *failed step*, not a number to
+    log — it must consume the failure budget through the same rollback
+    path a crash does (the old loop logged the NaN and kept training on
+    poisoned optimizer state)."""
+
+    def test_nan_loss_consumes_failure_budget(self, tmp_path):
+        from repro.configs.base import ModelConfig
+        from repro.core import NonFiniteLossError
+        from repro.data import DataConfig
+        from repro.models import Model
+        from repro.train import TrainLoopConfig, train_loop
+
+        cfg = ModelConfig(
+            name="nan-test", family="dense", n_layers=2, d_model=32,
+            n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=64, remat="none",
+        )
+        # an absurd peak LR diverges to NaN within a couple of steps;
+        # rollback replays the same data and LR schedule, so the NaN is
+        # persistent and must exhaust the consecutive-failure budget
+        with pytest.raises(NonFiniteLossError, match="non-finite loss"):
+            train_loop(
+                Model(cfg),
+                DataConfig(vocab_size=64, seq_len=16, global_batch=4),
+                TrainLoopConfig(
+                    steps=10, ckpt_dir=str(tmp_path), ckpt_every=4, keep=3,
+                    peak_lr=1e6, warmup=2, log_every=1, max_failures=2,
+                ),
+            )
+
+    def test_healthy_run_logs_only_finite_losses(self, tmp_path):
+        from repro.configs.base import ModelConfig
+        from repro.data import DataConfig
+        from repro.models import Model
+        from repro.train import TrainLoopConfig, train_loop
+
+        cfg = ModelConfig(
+            name="nan-test", family="dense", n_layers=2, d_model=32,
+            n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=64, remat="none",
+        )
+        res = train_loop(
+            Model(cfg),
+            DataConfig(vocab_size=64, seq_len=16, global_batch=4),
+            TrainLoopConfig(
+                steps=8, ckpt_dir=str(tmp_path), ckpt_every=4,
+                peak_lr=1e-3, warmup=2, log_every=1,
+            ),
+        )
+        assert res["failures"] == 0
+        losses = [h["loss"] for h in res["history"]]
+        assert losses and all(np.isfinite(losses)), losses
