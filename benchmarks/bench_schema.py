@@ -22,8 +22,13 @@ import sys
 # Schema version of a freshly produced entry.  v1: PR 1-4 layout.
 # v2 (PR 5, fabric registry): entries carry ``schema_version`` and
 # ``bytes_moved.fabrics`` — one per-rank MB row per registered dispatch
-# fabric.  Old history entries (no version field) validate as v1.
-SCHEMA_VERSION = 2
+# fabric.  v3 (PR 7, device-resident controller): the controller section
+# splits the host observe timer into fetch/score and adds the on-device
+# rows (``device_observe_us_per_step``, ``device_replan_ms``);
+# ``bytes_moved`` gains ``fabrics_padded`` (the dense-emulation padded
+# figure next to the live per-fabric rows).  Old history entries (lower
+# or no version field) validate against their own version.
+SCHEMA_VERSION = 3
 
 # per-fabric bytes rows every v2 entry must carry (the registry's five
 # backends; listed literally so a malformed bench can't weaken the check
@@ -31,6 +36,18 @@ SCHEMA_VERSION = 2
 _V2_FABRIC_ROWS = (
     "dense", "a2a", "ppermute", "phase_pipelined", "ragged_a2a"
 )
+
+# v3: the on-device controller trend rows plus the host fetch/score
+# split — the numbers the device-vs-host observe comparison plots
+_V3_CONTROLLER_NUMBERS = (
+    "fetch_us_per_step",
+    "score_us_per_step",
+    "device_observe_us_per_step",
+    "device_replan_ms",
+)
+
+# v3: dense-emulation padded bytes, one row per fabric that pads
+_V3_PADDED_ROWS = ("phase_pipelined",)
 
 # (key, required, allowed types).  Sections added later (bytes_moved in
 # PR 4, schema_version in PR 5) are optional so pre-existing history
@@ -147,6 +164,39 @@ def validate_entry(
                         errs.append(
                             f"{where}.bytes_moved.fabrics.{name}: not a "
                             f"finite number ({fx[name]!r})"
+                        )
+    # v3: device-resident controller rows + the padded-bytes sidecar.
+    if version >= 3 or require_current:
+        ctl = entry.get("controller")
+        if isinstance(ctl, dict):  # presence/type already reported above
+            for f in _V3_CONTROLLER_NUMBERS:
+                if f not in ctl:
+                    errs.append(f"{where}.controller: missing {f!r}")
+                elif not _is_number(ctl[f]):
+                    errs.append(
+                        f"{where}.controller.{f}: not a finite number "
+                        f"({ctl[f]!r})"
+                    )
+        bm = entry.get("bytes_moved")
+        if isinstance(bm, dict):  # absence already reported by the v2 block
+            px = bm.get("fabrics_padded")
+            if not isinstance(px, dict):
+                errs.append(
+                    f"{where}.bytes_moved: v3 entries need a "
+                    "'fabrics_padded' object (dense-emulation MB/rank "
+                    "next to the live rows)"
+                )
+            else:
+                for name in _V3_PADDED_ROWS:
+                    if name not in px:
+                        errs.append(
+                            f"{where}.bytes_moved.fabrics_padded: "
+                            f"missing {name!r}"
+                        )
+                    elif not _is_number(px[name]):
+                        errs.append(
+                            f"{where}.bytes_moved.fabrics_padded.{name}: "
+                            f"not a finite number ({px[name]!r})"
                         )
     return errs
 

@@ -271,13 +271,68 @@ def main() -> int:
         )
         return 1
 
+    # 6. device-resident controller (PR 7): the fused train step — loss,
+    # optimizer, and the in-graph observe -> score -> re-plan loop — must
+    # lower to ONE executable, and a drift-triggered in-graph re-plan
+    # (the lax.cond branch actually firing) must cause ZERO recompiles
+    from repro.core import DeviceController
+    from repro.optim import AdamW, cosine_schedule
+    from repro.train.train_step import make_train_step
+
+    model_d = _model(2, "phase_pipelined")
+    rt_d = ScheduleRuntime(
+        ControllerConfig(n_ranks=4, n_experts=8, ema=1.0, cooldown=0), 2
+    )
+    # prime from a hotspot demand estimate: all capacity piles onto one
+    # column, leaving every other pair at min_cap — the model's roughly
+    # uniform realized routing overflows those pairs, so the traced
+    # drift signal fires a real in-graph re-plan within the first steps
+    # (hysteresis_steps=1, no cooldown)
+    skew = np.full((4, 4), 1.0)
+    skew[:, 0] = 500.0
+    np.fill_diagonal(skew, 0.0)
+    rt_d.prime(skew)
+    ctrl, ctrl_state = DeviceController.from_runtime(
+        rt_d, hysteresis_steps=1, cooldown=0
+    )
+    opt_d = AdamW(lr=cosine_schedule(1e-3, 2, 8))
+    fused = jax.jit(make_train_step(model_d, opt_d, controller=ctrl))
+    params_d = model_d.init(jax.random.PRNGKey(0))
+    opt_state_d = opt_d.init(params_d)
+    ef_d = {}
+    tokens_d = jnp.zeros((8, 32), jnp.int32)
+    batch_d = {"tokens": tokens_d, "targets": tokens_d}
+    for _ in range(6):
+        params_d, opt_state_d, ef_d, ctrl_state, _metrics = fused(
+            params_d, opt_state_d, ef_d, batch_d, ctrl_state
+        )
+    replans_d = int(ctrl_state.replans)
+    cache_fused = fused._cache_size()
+    print(
+        f"executable cache after {replans_d} drift-triggered in-graph "
+        f"re-plans in the fused controller step: {cache_fused}"
+    )
+    if replans_d < 1:
+        print(
+            "FAIL: the primed-vs-realized routing mismatch must fire the "
+            "in-graph re-plan (the cond branch never ran)"
+        )
+        return 1
+    if cache_fused != 1:
+        print(
+            "FAIL: the fused controller step must stay ONE executable "
+            "across in-graph re-plans"
+        )
+        return 1
+
     print(
         "OK: depth-L scan traces one layer body for every fabric "
         f"({', '.join(fabric_names())}; single-device lowering — mesh "
         "bodies run in the slow multidev lane); table swaps are "
         "compile-free (in-envelope swaps included; envelope growth AND "
         "adaptive shrink each retrace once; masked fault re-plans swap "
-        "free both ways)"
+        "free both ways; the fused device-controller step is one "
+        "executable with in-graph re-plans at zero recompiles)"
     )
     return 0
 

@@ -57,6 +57,115 @@ def make_controller(cfg, args):
     return runtime, scenario
 
 
+def serve_device(model, params, cfg, args, runtime, scenario, max_len) -> None:
+    """Device-resident controller demo: ONE fused decode executable that
+    folds the demand estimate, scores drop against the live plan, and
+    fires the batched JAX LAP re-plan behind ``lax.cond`` — no routing
+    stats or plans cross to the host mid-stream.
+
+    A drift is injected halfway through the token stream; the run
+    self-asserts it is absorbed in-graph: zero host re-plan events,
+    ``device_replans >= 1``, and the decode executable cache stays at 1.
+    """
+    import numpy as np
+
+    from repro.core import DeviceController
+
+    # prime the host runtime from the round-0 demand estimate, then lift
+    # it into (controller, state); the host planner never runs again
+    est_tokens = float(args.batch * args.prompt_len * cfg.moe.top_k)
+    stats0 = np.broadcast_to(
+        est_tokens * scenario.expert_probs(0)[None, None, :],
+        (runtime.n_layers, 1, cfg.moe.n_experts),
+    )
+    runtime.observe(stats0)
+    ctrl, state = DeviceController.from_runtime(runtime)
+    host_replans0 = runtime.summary()["replan_events"]
+
+    prefill = jax.jit(model.prefill)
+
+    @jax.jit
+    def decode_device(params, token, caches, pos, state, stats):
+        state = ctrl.step(state, stats)
+        logits, caches = model.decode_step(
+            params, token, caches, pos, schedule=ctrl.table_of(state)
+        )
+        return logits, caches, state
+
+    def stats_of(r: int):
+        """Per-token demand estimate [L, 1, E] for drift round ``r``."""
+        per_step = float(args.batch * cfg.moe.top_k)
+        return jnp.asarray(
+            np.broadcast_to(
+                per_step * scenario.expert_probs(r)[None, None, :],
+                (runtime.n_layers, 1, cfg.moe.n_experts),
+            ),
+            jnp.float32,
+        )
+
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0,
+        cfg.vocab_size,
+    )
+    caches = model.init_cache(args.batch, max_len)
+    t0 = time.perf_counter()
+    logits, caches = prefill(
+        params, prompts, caches, schedule=ctrl.table_of(state)
+    )
+    logits.block_until_ready()
+    t_prefill = time.perf_counter() - t0
+
+    token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    out = [token]
+    shift_at = max(args.new_tokens // 2, 1)
+    # the drift-scenario round whose expert_probs are fully drifted
+    # (skew ramps over `window` rounds; hotspot cools off after it)
+    drift_round = scenario.shift_step + (
+        scenario.window if args.drift == "skew" else 0
+    )
+    # warm up the fused executable before timing
+    _ = decode_device(
+        params, token, caches, jnp.int32(args.prompt_len), state, stats_of(0)
+    )
+    t0 = time.perf_counter()
+    for i in range(args.new_tokens):
+        stats = stats_of(0 if i < shift_at else drift_round)
+        logits, caches, state = decode_device(
+            params, token, caches, jnp.int32(args.prompt_len + i),
+            state, stats,
+        )
+        token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out.append(token)
+    jax.block_until_ready(token)
+    t_decode = time.perf_counter() - t0
+
+    toks = args.new_tokens * args.batch
+    print(f"arch={cfg.name} batch={args.batch} prompt={args.prompt_len} "
+          f"controller=device")
+    print(f"prefill: {t_prefill*1e3:.1f} ms")
+    print(f"decode:  {toks} tokens in {t_decode*1e3:.1f} ms "
+          f"({toks/t_decode:.1f} tok/s)")
+    print(f"first generated ids: {jnp.stack(out, axis=1)[0, :10].tolist()}")
+
+    m = ctrl.metrics(state)
+    host_replans = runtime.summary()["replan_events"] - host_replans0
+    recompiles = max(0, getattr(decode_device, "_cache_size", lambda: 1)() - 1)
+    print(
+        f"device controller: {m['device_replans']} in-graph re-plans, "
+        f"drop {m['drop_fraction']:.4f}, {host_replans} host re-plan "
+        f"events mid-stream, {recompiles} recompiles"
+    )
+    # the flag's contract: the mid-stream drift (--drift none excepted)
+    # is absorbed entirely on device
+    assert host_replans == 0, "device mode must not re-plan on the host"
+    assert recompiles == 0, "in-graph re-plans must not retrace"
+    if args.drift != "none":
+        assert m["device_replans"] >= 1, (
+            "mid-stream drift should have fired the in-graph re-plan"
+        )
+    print("device-controller self-check: OK")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-3-8b")
@@ -66,8 +175,16 @@ def main() -> None:
     ap.add_argument("--rounds", type=int, default=1, help="request batches")
     ap.add_argument(
         "--controller",
-        action="store_true",
-        help="plan MoE schedules per round from demand estimates",
+        nargs="?",
+        const="host",
+        default=None,
+        choices=("host", "device"),
+        help="plan MoE schedules from demand estimates: 'host' (default "
+        "when the flag is given bare) re-plans between rounds on the "
+        "host; 'device' runs the observe -> score -> re-plan loop inside "
+        "the decode executable (lax.cond fires the batched JAX LAP on "
+        "traced drift) and self-checks that a mid-stream drift is "
+        "absorbed with zero host re-plan events and zero recompiles",
     )
     ap.add_argument(
         "--drift",
@@ -109,10 +226,18 @@ def main() -> None:
     runtime = scenario = fault_scenario = None
     if args.controller:
         runtime, scenario = make_controller(cfg, args)
+    if args.controller == "device" and runtime is None:
+        raise SystemExit("--controller=device needs an EP-compatible MoE "
+                         "arch (n_experts divisible by --virtual-ranks)")
     if args.faults != "none":
         if runtime is None:
             raise SystemExit("--faults needs --controller (round-level "
                              "re-planning reacts to the fault)")
+        if args.controller == "device":
+            raise SystemExit("--faults needs --controller=host: incident "
+                             "handling (quarantine, masked re-plans) is "
+                             "the host health FSM's job; the device loop "
+                             "absorbs statistical drift, not dark links")
         from repro.core import FaultScenario
 
         fault_scenario = FaultScenario(
@@ -141,6 +266,15 @@ def main() -> None:
             "scheduled dispatch needs --controller (with --virtual-ranks "
             "dividing the arch's n_experts) to plan a schedule"
         )
+    if args.controller == "device":
+        if not consumes_schedule:
+            raise SystemExit(
+                "--controller=device needs a table-consuming dispatch "
+                "(--dispatch scheduled): the in-graph re-plan writes new "
+                "schedule arrays into the same decode executable"
+            )
+        serve_device(model, params, cfg, args, runtime, scenario, max_len)
+        return
 
     # jit once; the schedule is traced input, so controller re-plans swap
     # new table arrays into these same executables

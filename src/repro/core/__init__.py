@@ -23,6 +23,13 @@ from repro.core.cost_models import (
     pipeline_makespan,
 )
 from repro.core.decompose import STRATEGIES, decompose, decompose_batch
+from repro.core.device_controller import (
+    DeviceController,
+    DeviceControllerConfig,
+    DeviceControllerState,
+    apply_link_mask_traced,
+    routing_to_traffic_traced,
+)
 from repro.core.drift import DRIFT_KINDS, DriftScenario
 from repro.core.faults import (
     FAULT_KINDS,
@@ -37,6 +44,12 @@ from repro.core.hierarchical import (
     hierarchical_decompose,
     simulate_hierarchical,
     split_traffic,
+)
+from repro.core.lap_jax import (
+    auction_lap,
+    auction_lap_batch,
+    greedy_phases_jax,
+    matching_weight,
 )
 from repro.core.maxweight import (
     WarmState,
@@ -77,6 +90,9 @@ __all__ = [
     "DRIFT_KINDS",
     "Decision",
     "Decomposition",
+    "DeviceController",
+    "DeviceControllerConfig",
+    "DeviceControllerState",
     "DriftScenario",
     "FAULT_KINDS",
     "FabricFaultError",
@@ -96,6 +112,9 @@ __all__ = [
     "WarmState",
     "a2a_dispatch_tokens",
     "apply_link_mask",
+    "apply_link_mask_traced",
+    "auction_lap",
+    "auction_lap_batch",
     "bvn_coefficients",
     "bvn_decompose",
     "bvn_decompose_batch",
@@ -105,11 +124,13 @@ __all__ = [
     "fault_hook",
     "fit_knee",
     "gen_trace",
+    "greedy_phases_jax",
     "hierarchical_decompose",
     "ideal_a2a_tokens",
     "is_doubly_stochastic",
     "knee_model",
     "linear_model",
+    "matching_weight",
     "maxweight_decompose",
     "maxweight_decompose_batch",
     "order_phases",
@@ -120,6 +141,7 @@ __all__ = [
     "ring_a2a_tokens",
     "ring_schedule",
     "routing_to_traffic",
+    "routing_to_traffic_traced",
     "simulate_decomposition",
     "simulate_ideal",
     "simulate_hierarchical",

@@ -96,6 +96,7 @@ def decompose_batch(
     keep_diagonal: bool = False,
     warm_start: list | None = None,
     link_mask: np.ndarray | None = None,
+    backend: str = "scipy",
     **kwargs,
 ) -> list[Decomposition]:
     """Decompose a stack of traffic matrices ``[L, n, n]`` in one call.
@@ -107,6 +108,12 @@ def decompose_batch(
     one fabric-wide ``[n, n]`` availability mask shared by every layer:
     link outages are physical, so all layers route around the same dark
     pairs (``core.faults.apply_link_mask`` semantics).
+
+    ``backend`` (max-weight only) picks the LAP solver for cold phases:
+    ``"scipy"`` runs Jonker-Volgenant per layer, ``"jax"`` solves every
+    round's matchings for the whole stack as one batched device call
+    (``core.lap_jax`` Jacobi auction, assignment weight equal to scipy
+    on integer token counts).
     """
     stack = np.asarray(matrices, dtype=np.float64)
     if stack.ndim != 3 or stack.shape[1] != stack.shape[2]:
@@ -127,10 +134,18 @@ def decompose_batch(
         from repro.core.maxweight import maxweight_decompose_batch
 
         out = maxweight_decompose_batch(
-            stack, warm_start=warm_start, link_mask=link_mask, **kwargs
+            stack,
+            warm_start=warm_start,
+            link_mask=link_mask,
+            backend=backend,
+            **kwargs,
         )
     elif warm_start is not None:
         raise ValueError("warm_start is only supported for 'maxweight'")
+    elif backend != "scipy":
+        raise ValueError(
+            f"backend={backend!r} is only supported for 'maxweight'"
+        )
     elif strategy in ("bvn", "bvn-bottleneck"):
         from repro.core.bvn import bvn_decompose_batch
 

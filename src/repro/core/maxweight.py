@@ -305,6 +305,69 @@ def maxweight_decompose(
     return d
 
 
+def _greedy_phases_batch_auction(
+    residuals: np.ndarray,
+    *,
+    max_matchings: int | None,
+    min_fill: float,
+    phases_done: list[int],
+) -> tuple[list[list], list[list], list[int]]:
+    """The `_greedy_phases` control flow over a residual stack, with every
+    round's LAP solved as ONE batched device call (``core.lap_jax``'s
+    Jacobi auction) instead of L sequential scipy solves.
+
+    Per-layer semantics are identical to the scipy path — same min_fill
+    deferral, same max_matchings cap, same full-clear residual sweep —
+    only the matchings come from the auction (equal assignment weight;
+    tie-breaks may differ, so perms are equivalent, not bit-identical).
+    """
+    from repro.core.lap_jax import auction_lap_batch
+
+    L, n, _ = residuals.shape
+    idx = np.arange(n)
+    perms_out: list[list] = [[] for _ in range(L)]
+    sents_out: list[list] = [[] for _ in range(L)]
+    greedy_counts = [0] * L
+    hard_caps = [int((residuals[i] > 0).sum()) + 1 for i in range(L)]
+    in_sweep = [False] * L
+    done = [bool(residuals[i].max() <= 0) for i in range(L)]
+    while not all(done):
+        batch = np.asarray(auction_lap_batch(residuals), dtype=np.int64)
+        for i in range(L):
+            if done[i]:
+                continue
+            perm = batch[i]
+            sent = residuals[i][idx, perm].copy()
+            if not in_sweep[i]:
+                capped = (
+                    max_matchings is not None
+                    and len(perms_out[i]) + phases_done[i] >= max_matchings
+                ) or len(perms_out[i]) >= hard_caps[i]
+                if not capped:
+                    if min_fill > 0.0:
+                        keep = sent >= min_fill * sent.max()
+                        sent = np.where(keep, sent, 0.0)
+                    if sent.sum() <= 0:
+                        done[i] = True
+                        continue
+                    residuals[i][idx, perm] -= sent
+                    perms_out[i].append(perm)
+                    sents_out[i].append(sent)
+                    greedy_counts[i] += 1
+                    done[i] = bool(residuals[i].max() <= 0)
+                    continue
+                in_sweep[i] = True
+            # Capped: sweep the residual with full-clear matchings.
+            if sent.sum() <= 0:
+                done[i] = True
+                continue
+            residuals[i][idx, perm] = 0.0
+            perms_out[i].append(perm)
+            sents_out[i].append(sent)
+            done[i] = bool(residuals[i].max() <= 0)
+    return perms_out, sents_out, greedy_counts
+
+
 def maxweight_decompose_batch(
     matrices: np.ndarray,
     *,
@@ -312,6 +375,7 @@ def maxweight_decompose_batch(
     min_fill: float = 0.0,
     warm_start: list[WarmState | None] | None = None,
     link_mask: np.ndarray | None = None,
+    backend: str = "scipy",
 ) -> list[Decomposition]:
     """Decompose a stack of traffic matrices ``[L, n, n]`` in one call.
 
@@ -321,6 +385,14 @@ def maxweight_decompose_batch(
     cold).  ``link_mask`` is one fabric-wide ``[n, n]`` availability mask
     applied to every layer (outages are physical, not per-layer).
     Returns one ``Decomposition`` per layer.
+
+    ``backend`` picks the LAP solver for cold phases: ``"scipy"``
+    (Jonker-Volgenant, one matrix at a time) or ``"jax"`` (the batched
+    Jacobi auction of ``core.lap_jax`` — one device call per phase round
+    across all layers, equal assignment weight to scipy on the
+    integer-valued token counts the planner sees; ties may break
+    differently).  Warm replays never solve a LAP, so the backend only
+    matters for cold layers.
     """
     stack = np.asarray(matrices, dtype=np.float64)
     if stack.ndim != 3 or stack.shape[1] != stack.shape[2]:
@@ -329,9 +401,12 @@ def maxweight_decompose_batch(
         raise ValueError("traffic matrices must be nonnegative")
     if warm_start is not None and len(warm_start) != stack.shape[0]:
         raise ValueError("warm_start must align with the matrix stack")
-    out: list[Decomposition] = []
-    for i in range(stack.shape[0]):
-        out.append(
+    if backend not in ("scipy", "jax"):
+        raise ValueError(
+            f"unknown LAP backend {backend!r}; one of ('scipy', 'jax')"
+        )
+    if backend == "scipy":
+        return [
             maxweight_decompose(
                 stack[i],
                 max_matchings=max_matchings,
@@ -339,7 +414,73 @@ def maxweight_decompose_batch(
                 warm_start=warm_start[i] if warm_start is not None else None,
                 link_mask=link_mask,
             )
+            for i in range(stack.shape[0])
+        ]
+    # --- batched auction backend: mask + warm-replay per layer on the
+    # host (both LAP-free), then solve all cold residuals together.
+    L = stack.shape[0]
+    masked = stack
+    mask_metas: list[dict | None] = [None] * L
+    if link_mask is not None:
+        from repro.core.faults import apply_link_mask
+
+        masked = np.empty_like(stack)
+        for i in range(L):
+            mask_metas[i] = {}
+            masked[i] = apply_link_mask(
+                stack[i], link_mask, meta=mask_metas[i]
+            )
+    residuals = masked.copy()
+    warm_perms_l: list[np.ndarray] = []
+    warm_sents_l: list[np.ndarray] = []
+    warm_hits: list[bool] = []
+    n = stack.shape[1]
+    for i in range(L):
+        ws = warm_start[i] if warm_start is not None else None
+        hit = (
+            ws is not None
+            and ws.support.shape == masked[i].shape
+            and ws.min_fill == min_fill
+            and ws.max_matchings == max_matchings
+            and bool(np.array_equal(masked[i] > 0, ws.support))
         )
+        warm_hits.append(hit)
+        if hit:
+            wp = ws.perms if min_fill == 0.0 else ws.perms[: ws.n_greedy]
+            p, s = _warm_replay(residuals[i], wp, min_fill)
+        else:
+            p = np.zeros((0, n), dtype=np.int64)
+            s = np.zeros((0, n))
+        warm_perms_l.append(p)
+        warm_sents_l.append(s)
+    cold_perms, cold_sents, cold_greedy = _greedy_phases_batch_auction(
+        residuals,
+        max_matchings=max_matchings,
+        min_fill=min_fill,
+        phases_done=[p.shape[0] for p in warm_perms_l],
+    )
+    out: list[Decomposition] = []
+    for i in range(L):
+        perms, sent = warm_perms_l[i], warm_sents_l[i]
+        if cold_perms[i]:
+            perms = np.concatenate([perms, np.stack(cold_perms[i])])
+            sent = np.concatenate([sent, np.stack(cold_sents[i])])
+        d = _build(
+            masked[i],
+            perms,
+            sent,
+            max_matchings=max_matchings,
+            min_fill=min_fill,
+            warm_hit=warm_hits[i],
+            n_greedy=warm_perms_l[i].shape[0] + cold_greedy[i],
+        )
+        d.meta["lap_backend"] = "jax"
+        if mask_metas[i] is not None:
+            d.meta["link_masked"] = True
+            d.meta["unroutable_tokens"] = mask_metas[i].get(
+                "unroutable_tokens", 0.0
+            )
+        out.append(d)
     return out
 
 

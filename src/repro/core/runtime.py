@@ -292,6 +292,8 @@ class ScheduleRuntime:
         self.envelope_shrinks = 0  # sustained-underuse shrink => recompile
         self.admitted_dropped = 0.0  # plan-admitted tokens cut at grouping
         self.observe_s = 0.0  # cumulative host time inside observe()
+        self.fetch_s = 0.0  # observe() time blocked on device->host fetch
+        self.score_s = 0.0  # observe() time spent scoring/selecting
         self.replan_s = 0.0  # cumulative host time inside re-plan events
         self.last_event: dict | None = None
         # ----- health FSM / degraded-fabric state (docs/robustness.md) -----
@@ -675,10 +677,17 @@ class ScheduleRuntime:
             if dropped is None:
                 dropped = stats.get("dropped")
             stats = stats["routing"]
+        # --- fetch: materializing possibly-device arrays on the host is
+        # where a per-step observe blocks on the device; timed apart from
+        # scoring so the on-device controller's win is attributable
+        # (callers that pre-fetched see fetch_us ~ 0).
         dropped_total = None
         if dropped is not None:
             dropped_total = float(np.asarray(dropped).sum())
             self.admitted_dropped += dropped_total
+        stats = np.asarray(stats, dtype=np.float64)
+        t1 = time.perf_counter()
+        self.fetch_s += t1 - t0
         mats = routing_to_traffic(
             stats, n_ranks=self.cfg.n_ranks, n_experts=self.cfg.n_experts
         )
@@ -702,7 +711,9 @@ class ScheduleRuntime:
             dropped_total=dropped_total,
             routed_total=float(mats.sum()),
         )
-        self.observe_s += time.perf_counter() - t0
+        now = time.perf_counter()
+        self.score_s += now - t1
+        self.observe_s += now - t0
         return decision
 
     def prime(self, traffic: np.ndarray) -> Decision:
@@ -832,6 +843,12 @@ class ScheduleRuntime:
             "library_sizes": [len(s.library) for s in self.selectors],
             "observe_us_per_step": (
                 round(self.observe_s / self.steps * 1e6, 2) if self.steps else 0.0
+            ),
+            "fetch_us_per_step": (
+                round(self.fetch_s / self.steps * 1e6, 2) if self.steps else 0.0
+            ),
+            "score_us_per_step": (
+                round(self.score_s / self.steps * 1e6, 2) if self.steps else 0.0
             ),
             "replan_ms_per_event": (
                 round(self.replan_s / self.replan_events * 1e3, 3)

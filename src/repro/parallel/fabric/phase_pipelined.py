@@ -46,6 +46,7 @@ from typing import Any
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.cost_models import phase_dispatch_tokens
 from repro.parallel.collectives import a2a_combine, a2a_dispatch
 from repro.parallel.fabric import geometry as g
 from repro.parallel.fabric.base import (
@@ -249,13 +250,35 @@ class PhasePipelinedFabric(Fabric):
     def dispatch_tokens(
         self, *, n: int, cap_uniform: int = 0, schedule=None, envelope=None
     ):
+        """The bytes the *plan* puts on the wire: per rank, ``envelope[k]``
+        slots for each phase slot the plan has it participate in, zero on
+        dark pairs — ``phase_dispatch_tokens(valid, envelope)``, the same
+        figure a circuit fabric or the ``ragged_a2a`` backend carries.
+        The single-device dense emulation additionally pads every live
+        phase onto a full all_to_all-shaped buffer; that emulation tax is
+        an artifact of emulating circuits with a2a collectives, not
+        traffic the algorithm asks for — it is reported separately via
+        ``dispatch_tokens_padded`` so the two stay side by side."""
+        if schedule is None or envelope is None:
+            raise ValueError(
+                "phase_pipelined accounting needs the plan's valid mask "
+                "and the envelope"
+            )
+        k = min(schedule.valid.shape[0], len(np.asarray(envelope)))
+        return float(
+            np.mean(
+                phase_dispatch_tokens(
+                    schedule.valid[:k], np.asarray(envelope)[:k]
+                )
+            )
+        )
+
+    def dispatch_tokens_padded(self, *, n: int, envelope=None):
         """What the dense *emulation* ships: each live phase slot rides a
         full all_to_all-shaped ``[n, ...]`` buffer with one live
         destination, so every rank pays ``(n - 1) * envelope[k]`` slots
-        per live phase slot — participation or not.  A circuit fabric or
-        the ``ragged_a2a`` backend carries only the live pair's bytes
-        (``phase_dispatch_tokens``); the gap is the emulation tax, not
-        the algorithm's."""
+        per live phase slot — participation or not.  The gap to
+        ``dispatch_tokens`` is the emulation tax, not the algorithm's."""
         if envelope is None:
             raise ValueError(
                 "phase_pipelined accounting needs the envelope"

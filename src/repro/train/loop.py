@@ -76,6 +76,8 @@ def train_loop(
     failure_hook: Callable[[int], None] | None = None,
     runtime=None,
     stats_hook: Callable | None = None,
+    device_controller=None,
+    device_ctrl_state=None,
 ) -> dict:
     """Run (or resume) training.  Returns final metrics/history.
 
@@ -94,7 +96,34 @@ def train_loop(
     stats_hook: optional fn(step, stats) -> stats applied to the observed
       routing counts before ``runtime.observe`` (drift injection in tests
       and the drift-scenario examples).
+    device_controller + device_ctrl_state: a ``core.DeviceController``
+      and its initial ``DeviceControllerState`` select the device-resident
+      controller instead of ``runtime``: the observe -> score -> re-plan
+      loop runs *inside* the jitted step (``lax.cond`` fires the batched
+      JAX LAP re-plan on traced drift), so routing stats never cross to
+      the host on steady-state steps.  The host reads controller
+      telemetry (``DeviceController.metrics``) only on the logging
+      cadence.  Mutually exclusive with ``runtime``/``stats_hook`` (the
+      host-driven path stays available as the parity oracle).
     """
+    if device_controller is not None:
+        if runtime is not None:
+            raise ValueError(
+                "device_controller and runtime are mutually exclusive: "
+                "the device controller replaces the host observe loop "
+                "(keep the runtime path as a separate parity run)"
+            )
+        if stats_hook is not None:
+            raise ValueError(
+                "stats_hook needs host-fetched routing stats; the device "
+                "controller never surfaces them — inject drift through "
+                "the data stream instead"
+            )
+        if device_ctrl_state is None:
+            raise ValueError(
+                "device_controller needs an initial state: build one via "
+                "DeviceController.init_state or .from_runtime"
+            )
     stream = SyntheticStream(data_cfg)
     opt = AdamW(
         lr=cosine_schedule(loop_cfg.peak_lr, loop_cfg.warmup, loop_cfg.steps)
@@ -108,6 +137,7 @@ def train_loop(
                 microbatches=loop_cfg.microbatches,
                 grad_compress=loop_cfg.grad_compress,
                 collect_routing=runtime is not None,
+                controller=device_controller,
             ),
             donate_argnums=(0, 1, 2),
         )
@@ -121,7 +151,16 @@ def train_loop(
         moe_cfg.dispatch
     )
     schedule = None
-    if runtime is not None and consumes_schedule:
+    if device_controller is not None:
+        if not consumes_schedule or not _fabric_consumes_table(
+            moe_cfg.dispatch if moe_cfg is not None else ""
+        ):
+            raise ValueError(
+                "device_controller needs a table-consuming fabric "
+                "('phase_pipelined' or 'ragged_a2a'): the in-graph re-plan "
+                "writes new schedule arrays into the SAME executable"
+            )
+    elif runtime is not None and consumes_schedule:
         # fail fast: config errors, not transient faults — left to the
         # step function they would trace-fail max_failures+1 times.
         if not _fabric_consumes_table(moe_cfg.dispatch):
@@ -216,6 +255,9 @@ def train_loop(
     pending_routing = None  # previous step's routing counts (device)
     pending_loss = None  # previous step's loss scalar (device)
     last_loss = None  # previous step's loss, host-fetched (FSM input)
+    # device-controller mode: executable count after jit warmup — any
+    # growth past it would mean an in-graph re-plan retraced (contract: 0)
+    device_cache_base = None
 
     def switch_fabric(want: str) -> None:
         """Rebuild the step on another fabric of the degradation chain.
@@ -267,15 +309,18 @@ def train_loop(
                 # Observe the PREVIOUS step's realized routing: its device
                 # computation already finished, so the host fetch never
                 # blocks on in-flight work (off the critical path).
-                stats = np.asarray(
-                    pending_routing["routing"], dtype=np.float64
-                )
-                dropped = np.asarray(
-                    pending_routing["dropped"], dtype=np.float64
-                )
+                stats = pending_routing["routing"]
+                dropped = pending_routing["dropped"]
                 pending_routing = None
                 if stats_hook is not None:
-                    stats = stats_hook(step, stats)
+                    # the hook's contract is numpy in / numpy out — fetch
+                    # here (fetch_us then reads ~0 inside observe)
+                    stats = stats_hook(
+                        step, np.asarray(stats, dtype=np.float64)
+                    )
+                # device arrays pass through: runtime.observe does the
+                # host fetch itself and times it as fetch_us_per_step,
+                # keeping the host-vs-device observe cost attributable
                 decision = runtime.observe(
                     stats, dropped=dropped, loss=last_loss
                 )
@@ -307,10 +352,26 @@ def train_loop(
                     )
                     switch_fabric(want)
             batch = shard_batch(stream.batch(step))
-            params, opt_state, ef_state, metrics = step_fn(
-                state["params"], state["opt"], state["ef"], batch, schedule
-            )
+            if device_controller is not None:
+                # fused step: schedule derivation, the observe -> score ->
+                # re-plan loop, and the drift-conditional LAP all run
+                # in-graph — no routing stats reach the host here
+                params, opt_state, ef_state, device_ctrl_state, metrics = (
+                    step_fn(
+                        state["params"],
+                        state["opt"],
+                        state["ef"],
+                        batch,
+                        device_ctrl_state,
+                    )
+                )
+            else:
+                params, opt_state, ef_state, metrics = step_fn(
+                    state["params"], state["opt"], state["ef"], batch, schedule
+                )
             state = {"params": params, "opt": opt_state, "ef": ef_state}
+            if device_controller is not None and device_cache_base is None:
+                device_cache_base = cache_fn()
             if runtime is not None:
                 pending_routing = metrics.pop("moe_stats")
             pending_loss = metrics["loss"]
@@ -381,7 +442,14 @@ def train_loop(
             dt_step = (now - t_last) / steps_since_log
             t_last = now
             steps_since_log = 0
-            history.append({"step": step, "loss": loss, "dt_s": dt_step})
+            entry = {"step": step, "loss": loss, "dt_s": dt_step}
+            if device_controller is not None:
+                # the ONE place routing telemetry crosses to the host in
+                # device-controller mode: the explicit logging cadence
+                dm = device_controller.metrics(device_ctrl_state)
+                entry["device_replans"] = dm["device_replans"]
+                entry["drop_fraction"] = dm["drop_fraction"]
+            history.append(entry)
             log.info("step %d loss %.4f (%.3fs/step)", step, loss, dt_step)
         step += 1
         if step % loop_cfg.ckpt_every == 0 or step == loop_cfg.steps:
@@ -409,4 +477,19 @@ def train_loop(
             "fabric_switches": fabric_switches,
             "final_dispatch": current_dispatch,
         }
+    elif device_controller is not None:
+        # same honesty for the fused path: executable-cache growth after
+        # warmup would mean an in-graph re-plan retraced — contract is 0
+        compiles = (
+            max(0, cache_fn() - device_cache_base)
+            if device_cache_base is not None
+            else 0
+        )
+        out["controller"] = {
+            **device_controller.metrics(device_ctrl_state),
+            "mode": "device",
+            "compiles": compiles,
+            "final_dispatch": current_dispatch,
+        }
+        out["device_ctrl_state"] = device_ctrl_state
     return out

@@ -126,6 +126,7 @@ def make_train_step(
     microbatches: int = 1,
     grad_compress: str | None = None,
     collect_routing: bool = False,
+    controller=None,
 ):
     """Returns train_step(params, opt_state, ef_state, batch) ->
     (params, opt_state, ef_state, metrics).
@@ -146,7 +147,18 @@ def make_train_step(
     swaps in a re-planned table (same leaf shapes) without recompiling.
     ``None`` (dense/a2a dispatch, or a static schedule held by the model)
     keeps the legacy behavior.
+
+    ``controller`` (a ``core.DeviceController``) selects the FUSED
+    device-resident variant instead:
+    ``train_step(params, opt_state, ef_state, batch, ctrl_state) ->
+    (params, opt_state, ef_state, ctrl_state, metrics)``.  The schedule
+    is derived from the controller state *inside* the trace
+    (``controller.table_of``), the step's realized routing counts feed
+    ``controller.step`` in-graph, and drift-triggered re-plans fire
+    behind ``lax.cond`` — one executable, zero host syncs on the
+    steady-state path (routing stats never appear in ``metrics``).
     """
+    collect_routing = collect_routing or controller is not None
 
     def loss_fn(params, batch, schedule):
         if collect_routing:
@@ -197,4 +209,21 @@ def make_train_step(
             metrics["moe_stats"] = aux
         return params, opt_state, ef_state, metrics
 
-    return train_step
+    if controller is None:
+        return train_step
+
+    def train_step_device(params, opt_state, ef_state, batch, ctrl_state):
+        table = controller.table_of(ctrl_state)
+        loss, aux, grads = grads_of(params, batch, table)
+        if grad_compress == "ef8":
+            grads, ef_state = ef_int8_compress(grads, ef_state)
+        params, opt_state, stats = optimizer.update(grads, opt_state, params)
+        ctrl_state = controller.step(
+            ctrl_state, aux["routing"], aux["dropped"]
+        )
+        # routing stats stay on device: the controller consumed them;
+        # the host reads controller telemetry on its logging cadence.
+        metrics = {"loss": loss, **stats}
+        return params, opt_state, ef_state, ctrl_state, metrics
+
+    return train_step_device
