@@ -502,11 +502,13 @@ def bench_bytes_moved() -> dict:
     the PR-over-PR trend lines stay continuous.
     """
     from repro.core import (
+        WIRE_DTYPES,
         a2a_dispatch_tokens,
         decompose,
         phase_dispatch_tokens,
         phase_envelope,
         plan_schedule,
+        wire_bytes_per_token,
     )
     from repro.parallel.fabric import get_fabric
 
@@ -549,6 +551,21 @@ def bench_bytes_moved() -> dict:
             "phase_pipelined"
         ).dispatch_tokens_padded(n=n, envelope=env),
     }
+    # per-wire-dtype rows (schema v4): the same slot counts priced at
+    # each registered codec's wire format (payload + per-slot scale
+    # sidecar) — the bf16 row reproduces the legacy ``fabrics`` table
+    wire_mb = {
+        w: {
+            k: round(
+                float(np.mean(v))
+                * wire_bytes_per_token(d_model, w, dtype_bytes)
+                / 2**20,
+                3,
+            )
+            for k, v in fabric_tokens.items()
+        }
+        for w in sorted(WIRE_DTYPES)
+    }
     out = {
         "n": n,
         "phases": sched.num_phases,
@@ -567,6 +584,8 @@ def bench_bytes_moved() -> dict:
         "fabrics": {k: to_mb(v) for k, v in fabric_tokens.items()},
         # dense-emulation padded bytes next to the live rows (schema v3)
         "fabrics_padded": {k: to_mb(v) for k, v in padded_tokens.items()},
+        # per-wire-dtype bytes rows (schema v4)
+        "wire": wire_mb,
         "dense_allreduce_mb_per_rank": round(
             tokens_per_rank * n * token_b / 2**20, 3
         ),
@@ -587,6 +606,15 @@ def bench_bytes_moved() -> dict:
     assert fx["a2a"] == out["monolithic_mb_per_rank"], out
     assert fx["ppermute"] <= fx["ragged_a2a"], out
     assert out["fabrics_padded"]["phase_pipelined"] > fx["phase_pipelined"], out
+    # acceptance: quantized wire rows at or below 0.55x the bf16
+    # envelope bytes on this skewed draw (payload 8x smaller, the f32
+    # per-slot scale sidecar accounted honestly), bf16 row unchanged
+    assert out["wire"]["bf16"] == fx, out
+    for w in ("fp8", "int8"):
+        assert (
+            out["wire"][w]["ragged_a2a"]
+            <= 0.55 * out["wire"]["bf16"]["ragged_a2a"]
+        ), out
     return out
 
 

@@ -26,9 +26,13 @@ import sys
 # splits the host observe timer into fetch/score and adds the on-device
 # rows (``device_observe_us_per_step``, ``device_replan_ms``);
 # ``bytes_moved`` gains ``fabrics_padded`` (the dense-emulation padded
-# figure next to the live per-fabric rows).  Old history entries (lower
+# figure next to the live per-fabric rows).  v4 (PR 8, low-precision
+# wire): ``bytes_moved`` gains ``wire`` — one per-fabric MB row per
+# registered wire codec (bf16/fp8/int8), with the quantized ragged_a2a
+# rows required to sit at or below 0.55x the bf16 envelope bytes (the
+# CI-asserted payoff of quantized dispatch).  Old history entries (lower
 # or no version field) validate against their own version.
-SCHEMA_VERSION = 3
+SCHEMA_VERSION = 4
 
 # per-fabric bytes rows every v2 entry must carry (the registry's five
 # backends; listed literally so a malformed bench can't weaken the check
@@ -48,6 +52,11 @@ _V3_CONTROLLER_NUMBERS = (
 
 # v3: dense-emulation padded bytes, one row per fabric that pads
 _V3_PADDED_ROWS = ("phase_pipelined",)
+
+# v4: per-wire-dtype bytes tables (every registered codec, every fabric
+# row) and the quantized-envelope acceptance ratio vs the bf16 row
+_V4_WIRE_DTYPES = ("bf16", "fp8", "int8")
+_V4_WIRE_RATIO = 0.55
 
 # (key, required, allowed types).  Sections added later (bytes_moved in
 # PR 4, schema_version in PR 5) are optional so pre-existing history
@@ -198,6 +207,56 @@ def validate_entry(
                             f"{where}.bytes_moved.fabrics_padded.{name}: "
                             f"not a finite number ({px[name]!r})"
                         )
+    # v4: per-wire-dtype bytes rows + the quantized-envelope ratio gate.
+    if version >= 4 or require_current:
+        bm = entry.get("bytes_moved")
+        if isinstance(bm, dict):  # absence already reported by the v2 block
+            wire = bm.get("wire")
+            if not isinstance(wire, dict):
+                errs.append(
+                    f"{where}.bytes_moved: v4 entries need a 'wire' "
+                    "object (per-wire-dtype MB/rank rows per fabric)"
+                )
+            else:
+                for w in _V4_WIRE_DTYPES:
+                    rows = wire.get(w)
+                    if not isinstance(rows, dict):
+                        errs.append(
+                            f"{where}.bytes_moved.wire: missing {w!r} "
+                            "(one per-fabric row table per codec)"
+                        )
+                        continue
+                    for name in _V2_FABRIC_ROWS:
+                        if name not in rows:
+                            errs.append(
+                                f"{where}.bytes_moved.wire.{w}: "
+                                f"missing {name!r}"
+                            )
+                        elif not _is_number(rows[name]):
+                            errs.append(
+                                f"{where}.bytes_moved.wire.{w}.{name}: "
+                                f"not a finite number ({rows[name]!r})"
+                            )
+                # acceptance ratio: quantized envelope bytes must beat
+                # the bf16 row by the documented margin on the skewed
+                # draw (the whole point of shipping a smaller payload)
+                bf16 = wire.get("bf16")
+                if isinstance(bf16, dict) and _is_number(
+                    bf16.get("ragged_a2a")
+                ):
+                    base = bf16["ragged_a2a"]
+                    for w in ("fp8", "int8"):
+                        rows = wire.get(w)
+                        if not isinstance(rows, dict) or not _is_number(
+                            rows.get("ragged_a2a")
+                        ):
+                            continue  # absence already reported above
+                        if rows["ragged_a2a"] > _V4_WIRE_RATIO * base:
+                            errs.append(
+                                f"{where}.bytes_moved.wire.{w}.ragged_a2a:"
+                                f" {rows['ragged_a2a']} exceeds "
+                                f"{_V4_WIRE_RATIO} x bf16 row ({base})"
+                            )
     return errs
 
 

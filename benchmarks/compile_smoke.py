@@ -25,6 +25,13 @@ recompiled.  This smoke guards the properties per fabric:
    (masked re-plan around dark pairs) and lifting it again are plain
    table swaps under the frozen envelope — the fault path costs ZERO
    recompiles end to end.
+6. **Fused device-controller step** (PR 7): the train step with the
+   in-graph observe -> score -> re-plan loop lowers to ONE executable
+   and drift-triggered in-graph re-plans cause ZERO recompiles.
+7. **Quantized-wire swaps** (PR 8): with ``MoECfg.wire_dtype="fp8"``
+   the wire codec is static config (QDQ ops traced into the step, not
+   traced data), so quantized phase_pipelined/ragged_a2a steps must
+   swap re-planned tables at ZERO recompiles, exactly like bf16.
 
 Exit code != 0 on regression, so CI fails fast.
 
@@ -40,13 +47,13 @@ import jax
 import numpy as np
 
 
-def _model(n_layers: int, dispatch: str = "scheduled"):
+def _model(n_layers: int, dispatch: str = "scheduled", wire_dtype: str = "bf16"):
     from repro.configs.base import ModelConfig, MoECfg
     from repro.models import Model
 
     return Model(
         ModelConfig(
-            name=f"smoke-{dispatch}-{n_layers}",
+            name=f"smoke-{dispatch}-{wire_dtype}-{n_layers}",
             family="moe",
             n_layers=n_layers,
             d_model=32,
@@ -55,7 +62,8 @@ def _model(n_layers: int, dispatch: str = "scheduled"):
             d_ff=64,
             vocab_size=128,
             moe=MoECfg(
-                n_experts=8, top_k=2, d_ff_expert=32, dispatch=dispatch
+                n_experts=8, top_k=2, d_ff_expert=32, dispatch=dispatch,
+                wire_dtype=wire_dtype,
             ),
             remat="none",
         )
@@ -325,6 +333,32 @@ def main() -> int:
         )
         return 1
 
+    # 7. low-precision wire (PR 8): the wire codec is static config —
+    # QDQ ops traced into the step once, never traced data — so a
+    # quantized model must keep the exact swap economics of bf16:
+    # re-planned tables (and in-envelope ragged tables) swap at ZERO
+    # recompiles.  Asserted on phase_pipelined (monolithic tables) and
+    # ragged_a2a (envelope tables; dense-emulation fallback off-TPU).
+    for fabric_q, env_q in (("phase_pipelined", None), ("ragged_a2a", env)):
+        model_q = _model(4, fabric_q, wire_dtype="fp8")
+        params_q = model_q.init(jax.random.PRNGKey(0))
+        q = jax.jit(
+            lambda p, b, s, m=model_q: m.loss(p, b, schedule=s)
+        )
+        q(params_q, batch, _table(4, seed=1, envelope=env_q))
+        q(params_q, batch, _table(4, seed=2, envelope=env_q))
+        cache_q = q._cache_size()
+        print(
+            f"executable cache after fp8-wire table swap "
+            f"[{fabric_q}]: {cache_q}"
+        )
+        if cache_q != 1:
+            print(
+                f"FAIL: [{fabric_q}] a table swap under wire_dtype=fp8 "
+                "recompiled the step — the codec must stay static config"
+            )
+            return 1
+
     print(
         "OK: depth-L scan traces one layer body for every fabric "
         f"({', '.join(fabric_names())}; single-device lowering — mesh "
@@ -332,7 +366,8 @@ def main() -> int:
         "compile-free (in-envelope swaps included; envelope growth AND "
         "adaptive shrink each retrace once; masked fault re-plans swap "
         "free both ways; the fused device-controller step is one "
-        "executable with in-graph re-plans at zero recompiles)"
+        "executable with in-graph re-plans at zero recompiles; fp8-wire "
+        "phase_pipelined/ragged steps swap tables at zero recompiles)"
     )
     return 0
 

@@ -212,12 +212,25 @@ def main() -> None:
         choices=(*fabric_names(), "scheduled"),
         help="override the arch's MoE dispatch fabric",
     )
+    from repro.parallel.fabric import codec_names
+
+    ap.add_argument(
+        "--wire-dtype",
+        default=None,
+        choices=codec_names(),
+        help="override the wire codec (fp8/int8 quantize cross-rank "
+        "dispatch slots; bf16 is the bit-exact passthrough)",
+    )
     args = ap.parse_args()
 
     cfg = smoke_config(args.arch)  # reduced config: CPU-friendly demo
     if args.dispatch and cfg.moe is not None:
         cfg = dataclasses.replace(
             cfg, moe=dataclasses.replace(cfg.moe, dispatch=args.dispatch)
+        )
+    if args.wire_dtype and cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, wire_dtype=args.wire_dtype)
         )
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))

@@ -48,6 +48,7 @@ def small_moe(
     n_layers: int = 12,
     d_model: int = 512,
     d_ff: int = 1024,
+    wire_dtype: str = "bf16",
 ) -> ModelConfig:
     """~180M params at the defaults: mixtral-flavored, laptop-trainable.
     The size knobs let CI shrink it to a seconds-long smoke."""
@@ -60,7 +61,10 @@ def small_moe(
         n_kv_heads=2,
         d_ff=d_ff,
         vocab_size=32000,
-        moe=MoECfg(n_experts=8, top_k=2, d_ff_expert=d_ff, dispatch=dispatch),
+        moe=MoECfg(
+            n_experts=8, top_k=2, d_ff_expert=d_ff, dispatch=dispatch,
+            wire_dtype=wire_dtype,
+        ),
         remat="none",
     )
 
@@ -80,6 +84,16 @@ def main() -> None:
         choices=(*fabric_names(), "scheduled"),
         help="MoE dispatch fabric (default: dense; a2a under --mesh); "
         "'scheduled' resolves by schedule type",
+    )
+    from repro.parallel.fabric import codec_names
+
+    ap.add_argument(
+        "--wire-dtype",
+        default="bf16",
+        choices=codec_names(),
+        help="wire codec tokens ride the dispatch fabric in (fp8/int8 "
+        "quantize cross-rank slots with per-slot scales; bf16 is the "
+        "bit-exact passthrough)",
     )
     ap.add_argument(
         "--drift",
@@ -120,7 +134,8 @@ def main() -> None:
 
     dispatch = args.dispatch or ("a2a" if args.mesh else "dense")
     cfg = small_moe(
-        dispatch, n_layers=args.layers, d_model=args.d_model, d_ff=args.d_ff
+        dispatch, n_layers=args.layers, d_model=args.d_model,
+        d_ff=args.d_ff, wire_dtype=args.wire_dtype,
     )
     model = Model(cfg)
     print(f"{cfg.name}: {cfg.param_count()/1e6:.0f}M params "

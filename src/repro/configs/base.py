@@ -25,6 +25,13 @@ class MoECfg:
     # (A2ASchedule -> ppermute, ScheduleTable -> phase_pipelined).
     # Unknown names raise at apply time listing the registered fabrics.
     dispatch: str = "dense"
+    # wire codec, by registry name (repro.parallel.fabric.codec): the
+    # dtype dispatched token slots ride the fabric in.  "bf16" is the
+    # bit-exact passthrough; "fp8" (e4m3 + per-slot f32 scale) and
+    # "int8" (symmetric + per-slot f32 scale) roughly halve the bytes on
+    # the wire (cost_models.wire_bytes_per_token prices it, the bytes
+    # bench reports it).  Unknown names raise listing the codecs.
+    wire_dtype: str = "bf16"
     schedule_strategy: Literal["maxweight", "shift"] = "maxweight"
     # 2D expert sharding: expert FFN width sharded over 'data' (kills the
     # per-microbatch ZeRO-3 expert-weight regathers; tokens are

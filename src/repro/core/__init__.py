@@ -13,6 +13,7 @@ Public API:
 from repro.core.baselines import ideal_a2a_tokens, ring_a2a_tokens
 from repro.core.bvn import bvn_coefficients, bvn_decompose, bvn_decompose_batch
 from repro.core.cost_models import (
+    WIRE_DTYPES,
     CommModel,
     ComputeModel,
     a2a_dispatch_tokens,
@@ -21,6 +22,7 @@ from repro.core.cost_models import (
     linear_model,
     phase_dispatch_tokens,
     pipeline_makespan,
+    wire_bytes_per_token,
 )
 from repro.core.decompose import STRATEGIES, decompose, decompose_batch
 from repro.core.device_controller import (
@@ -138,6 +140,8 @@ __all__ = [
     "phase_envelope",
     "pipeline_makespan",
     "plan_schedule",
+    "WIRE_DTYPES",
+    "wire_bytes_per_token",
     "ring_a2a_tokens",
     "ring_schedule",
     "routing_to_traffic",

@@ -32,10 +32,45 @@ __all__ = [
     "linear_model",
     "fit_knee",
     "CommModel",
+    "WIRE_DTYPES",
+    "wire_bytes_per_token",
     "a2a_dispatch_tokens",
     "phase_dispatch_tokens",
     "pipeline_makespan",
 ]
+
+# ------------------------------------------------------- wire dtype pricing
+# What one dispatched token slot costs on the wire per codec
+# (``MoECfg.wire_dtype``; executed by ``parallel.fabric.codec``):
+# (payload bytes per element, per-slot scale sidecar bytes).  The scale
+# sidecar is the f32 per-slot quantization scale the envelope ships next
+# to the payload — accounted honestly, it is real wire traffic.
+WIRE_DTYPES: dict[str, tuple[int | None, int]] = {
+    "bf16": (None, 0),  # passthrough: payload rides at the compute width
+    "fp8": (1, 4),      # e4m3 payload + f32 per-slot scale
+    "int8": (1, 4),     # symmetric int8 payload + f32 per-slot scale
+}
+
+
+def wire_bytes_per_token(
+    d_model: int, wire_dtype: str = "bf16", compute_bytes: int = 2
+) -> float:
+    """Bytes one token slot puts on the wire under ``wire_dtype``.
+
+    The dtype-aware term every byte account multiplies slot counts by
+    (``Fabric.dispatch_bytes``, the bytes bench, ``CommModel``): payload
+    elements at the codec width — the compute width for the ``bf16``
+    passthrough — plus the per-slot scale sidecar quantized codecs ship.
+    Unknown names raise listing the registered codecs.
+    """
+    try:
+        payload, sidecar = WIRE_DTYPES[wire_dtype]
+    except KeyError:
+        raise ValueError(
+            f"unknown wire_dtype {wire_dtype!r}: registered wire codecs "
+            f"are {', '.join(sorted(WIRE_DTYPES))}"
+        ) from None
+    return float(d_model * (compute_bytes if payload is None else payload) + sidecar)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -103,6 +138,7 @@ class CommModel:
 
     tokens_per_us: float
     reconf_us: float = 0.01
+    bytes_per_token: float = 8192.0  # d_model=4096 bf16 default
 
     @staticmethod
     def from_hardware(
@@ -111,11 +147,19 @@ class CommModel:
         d_model: int = 4096,
         dtype_bytes: int = 2,
         reconf_us: float = 0.01,
+        wire_dtype: str = "bf16",
     ) -> "CommModel":
-        bytes_per_token = d_model * dtype_bytes
+        """``wire_dtype`` selects the dispatch codec's bytes-per-token
+        term (see ``wire_bytes_per_token``), so the simulator and the
+        selector score quantized plans with the bytes their wire really
+        carries — ``dtype_bytes`` stays the *compute* width the ``bf16``
+        passthrough ships."""
+        bytes_per_token = wire_bytes_per_token(d_model, wire_dtype, dtype_bytes)
         bytes_per_us = link_gbps * 1e9 / 8 / 1e6
         return CommModel(
-            tokens_per_us=bytes_per_us / bytes_per_token, reconf_us=reconf_us
+            tokens_per_us=bytes_per_us / bytes_per_token,
+            reconf_us=reconf_us,
+            bytes_per_token=bytes_per_token,
         )
 
     def comm_us(self, tokens) -> np.ndarray | float:
@@ -133,7 +177,8 @@ def a2a_dispatch_tokens(n: int, cap_slots: int) -> int:
     planned traffic — ``(n - 1) * cap_slots`` slots cross the fabric per
     rank.  This is the traced path's legacy cost (and its dark-fiber
     waste: padding bytes ride circuits the plan left idle).  Multiply by
-    ``d_model * dtype_bytes`` for bytes.
+    ``wire_bytes_per_token`` for bytes — what one slot costs depends on
+    the wire codec, not just the compute dtype.
     """
     return (n - 1) * int(cap_slots)
 

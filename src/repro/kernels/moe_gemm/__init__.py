@@ -1,11 +1,23 @@
-from repro.kernels.moe_gemm.kernel import moe_gemm_grouped_pallas
-from repro.kernels.moe_gemm.ops import moe_gemm, row_block_meta, select_block_sizes
+from repro.kernels.moe_gemm.kernel import (
+    moe_gemm_grouped_pallas,
+    moe_gemm_grouped_pallas_dgrad,
+    moe_gemm_grouped_pallas_wgrad,
+)
+from repro.kernels.moe_gemm.ops import (
+    moe_gemm,
+    row_block_meta,
+    select_backward_block_f,
+    select_block_sizes,
+)
 from repro.kernels.moe_gemm.ref import moe_gemm_ref
 
 __all__ = [
     "moe_gemm",
     "moe_gemm_grouped_pallas",
+    "moe_gemm_grouped_pallas_dgrad",
+    "moe_gemm_grouped_pallas_wgrad",
     "moe_gemm_ref",
     "row_block_meta",
+    "select_backward_block_f",
     "select_block_sizes",
 ]

@@ -152,6 +152,242 @@ def moe_gemm_grouped_pallas(
     )(block_meta, x, w_gate, w_up, w_down)
 
 
+# ------------------------------------------------------------- backward
+# Real Pallas backward for the grouped launch (the custom_vjp's einsum-
+# oracle re-linearization replaced on supported shapes).  Both kernels
+# share the forward's scalar-prefetched group-metadata prologue — the
+# SAME [E * C/BC] occupancy table, so they must run at the forward's
+# block_c — and its occupancy skip.  The skip is *exact* in the
+# backward: a dark row block's forward output is constant zeros, so its
+# cotangent contributes nothing to dx (the rows are dead) nor to the
+# weight gradients (d out/d w is zero there) — more faithful to the
+# primal kernel than the oracle backward, which differentiates rows the
+# forward never computed.
+#
+# Math per expert (f32 throughout; silu'(a) = s + a*s*(1-s)):
+#     a = x @ wg        u = x @ wu        s = sigmoid(a)
+#     dh  = go @ wd^T
+#     da  = dh * u * s * (1 + a * (1 - s))
+#     du  = dh * s * a
+#     dx  = da @ wg^T + du @ wu^T                      (dgrad)
+#     dwg = x^T @ da    dwu = x^T @ du    dwd = h^T @ go  (wgrad)
+# dgrad keeps the forward grid (E, C/BC, F/BF): F is the contraction,
+# accumulated in the same [BC, d] f32 scratch.  wgrad transposes the
+# grid to (E, F/BF, C/BC) — C is its contraction — and holds three f32
+# accumulators ([d, BF] x2 + [BF, d] = 12*d*BF bytes), which is why the
+# backward gets its own, smaller block_f (ops.select_backward_block_f).
+
+_F32 = jnp.float32
+
+
+def _silu_grads(x, go, wg, wu, wd):
+    """Shared dgrad/wgrad prologue on one (row-block, f-block) tile:
+    recompute the SwiGLU activations and backprop through them.
+    Returns (da [BC, BF], du [BC, BF], h [BC, BF]) in f32."""
+    a = jnp.dot(x, wg, preferred_element_type=_F32)
+    u = jnp.dot(x, wu, preferred_element_type=_F32)
+    s = jax.nn.sigmoid(a)
+    dh = jax.lax.dot_general(
+        go, wd, (((1,), (1,)), ((), ())), preferred_element_type=_F32
+    )
+    da = dh * u * s * (1.0 + a * (1.0 - s))
+    du = dh * s * a
+    return da, du, s * a * u
+
+
+def _grouped_dgrad_kernel(
+    meta_ref, go_ref, x_ref, wg_ref, wu_ref, wd_ref, dx_ref, acc_ref, *,
+    n_fblocks, n_cblocks,
+):
+    eb = pl.program_id(0)
+    cb = pl.program_id(1)
+    fb = pl.program_id(2)
+    occupied = meta_ref[eb * n_cblocks + cb] > 0
+
+    @pl.when(fb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(occupied)
+    def _compute():
+        x = x_ref[0]
+        da, du, _ = _silu_grads(x, go_ref[0], wg_ref[0], wu_ref[0], wd_ref[0])
+        # dx += da @ wg^T + du @ wu^T (contract the F tile)
+        acc_ref[...] += jax.lax.dot_general(
+            da, wg_ref[0], (((1,), (1,)), ((), ())),
+            preferred_element_type=_F32,
+        )
+        acc_ref[...] += jax.lax.dot_general(
+            du, wu_ref[0], (((1,), (1,)), ((), ())),
+            preferred_element_type=_F32,
+        )
+
+    @pl.when(fb == n_fblocks - 1)
+    def _flush():
+        dx_ref[0] = acc_ref[...].astype(dx_ref.dtype)
+
+
+def _grouped_wgrad_kernel(
+    meta_ref, go_ref, x_ref, wg_ref, wu_ref, wd_ref,
+    dwg_ref, dwu_ref, dwd_ref, awg_ref, awu_ref, awd_ref, *,
+    n_fblocks, n_cblocks,
+):
+    eb = pl.program_id(0)
+    cb = pl.program_id(2)  # C is the innermost (accumulation) axis here
+    occupied = meta_ref[eb * n_cblocks + cb] > 0
+
+    @pl.when(cb == 0)
+    def _init():
+        awg_ref[...] = jnp.zeros_like(awg_ref)
+        awu_ref[...] = jnp.zeros_like(awu_ref)
+        awd_ref[...] = jnp.zeros_like(awd_ref)
+
+    @pl.when(occupied)
+    def _compute():
+        x = x_ref[0]
+        go = go_ref[0]
+        da, du, h = _silu_grads(x, go, wg_ref[0], wu_ref[0], wd_ref[0])
+        # contract the row block: dwg/dwu [d, BF], dwd [BF, d]
+        awg_ref[...] += jax.lax.dot_general(
+            x, da, (((0,), (0,)), ((), ())), preferred_element_type=_F32
+        )
+        awu_ref[...] += jax.lax.dot_general(
+            x, du, (((0,), (0,)), ((), ())), preferred_element_type=_F32
+        )
+        awd_ref[...] += jax.lax.dot_general(
+            h.astype(x.dtype), go, (((0,), (0,)), ((), ())),
+            preferred_element_type=_F32,
+        )
+
+    @pl.when(cb == n_cblocks - 1)
+    def _flush():
+        dwg_ref[0] = awg_ref[...].astype(dwg_ref.dtype)
+        dwu_ref[0] = awu_ref[...].astype(dwu_ref.dtype)
+        dwd_ref[0] = awd_ref[...].astype(dwd_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_c", "block_f", "interpret")
+)
+def moe_gemm_grouped_pallas_dgrad(
+    go,
+    x,
+    block_meta,
+    w_gate,
+    w_up,
+    w_down,
+    *,
+    block_c: int = 128,
+    block_f: int = 128,
+    interpret: bool = True,
+):
+    """dx for the grouped launch: grid (E, C/BC, F/BF), occupancy-
+    skipped row blocks (dark blocks' dx is exactly zero — their forward
+    output was constant).  ``block_c`` must be the forward's (the meta
+    table is indexed per forward row block); ``block_f`` is the
+    backward's own tile (see ``ops.select_backward_block_f``)."""
+    e, c, d = x.shape
+    f = w_gate.shape[-1]
+    bc = min(block_c, c)
+    bf = min(block_f, f)
+    assert c % bc == 0 and f % bf == 0, (c, bc, f, bf)
+    n_fblocks = f // bf
+    n_cblocks = c // bc
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(e, n_cblocks, n_fblocks),
+        in_specs=[
+            pl.BlockSpec((1, bc, d), lambda e, i, k, m: (e, i, 0)),  # go
+            pl.BlockSpec((1, bc, d), lambda e, i, k, m: (e, i, 0)),  # x
+            pl.BlockSpec((1, d, bf), lambda e, i, k, m: (e, 0, k)),  # wg
+            pl.BlockSpec((1, d, bf), lambda e, i, k, m: (e, 0, k)),  # wu
+            pl.BlockSpec((1, bf, d), lambda e, i, k, m: (e, k, 0)),  # wd
+        ],
+        out_specs=pl.BlockSpec((1, bc, d), lambda e, i, k, m: (e, i, 0)),
+        scratch_shapes=[pltpu.VMEM((bc, d), jnp.float32)],
+    )
+    kwargs = {}
+    params = _compiler_params(interpret)
+    if params is not None:
+        kwargs["compiler_params"] = params
+    return pl.pallas_call(
+        functools.partial(
+            _grouped_dgrad_kernel, n_fblocks=n_fblocks, n_cblocks=n_cblocks
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((e, c, d), x.dtype),
+        interpret=interpret,
+        **kwargs,
+    )(block_meta, go, x, w_gate, w_up, w_down)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_c", "block_f", "interpret")
+)
+def moe_gemm_grouped_pallas_wgrad(
+    go,
+    x,
+    block_meta,
+    w_gate,
+    w_up,
+    w_down,
+    *,
+    block_c: int = 128,
+    block_f: int = 128,
+    interpret: bool = True,
+):
+    """(dwg, dwu, dwd) for the grouped launch: grid (E, F/BF, C/BC) —
+    the row dim is the contraction here, accumulated across three f32
+    VMEM scratch tiles and flushed on the last row block.  Shares the
+    forward's meta table (same ``block_c``); dark row blocks contribute
+    nothing to any weight gradient, exactly like the primal."""
+    e, c, d = x.shape
+    f = w_gate.shape[-1]
+    bc = min(block_c, c)
+    bf = min(block_f, f)
+    assert c % bc == 0 and f % bf == 0, (c, bc, f, bf)
+    n_fblocks = f // bf
+    n_cblocks = c // bc
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(e, n_fblocks, n_cblocks),
+        in_specs=[
+            pl.BlockSpec((1, bc, d), lambda e, j, i, m: (e, i, 0)),  # go
+            pl.BlockSpec((1, bc, d), lambda e, j, i, m: (e, i, 0)),  # x
+            pl.BlockSpec((1, d, bf), lambda e, j, i, m: (e, 0, j)),  # wg
+            pl.BlockSpec((1, d, bf), lambda e, j, i, m: (e, 0, j)),  # wu
+            pl.BlockSpec((1, bf, d), lambda e, j, i, m: (e, j, 0)),  # wd
+        ],
+        out_specs=[
+            pl.BlockSpec((1, d, bf), lambda e, j, i, m: (e, 0, j)),  # dwg
+            pl.BlockSpec((1, d, bf), lambda e, j, i, m: (e, 0, j)),  # dwu
+            pl.BlockSpec((1, bf, d), lambda e, j, i, m: (e, j, 0)),  # dwd
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((d, bf), jnp.float32),
+            pltpu.VMEM((d, bf), jnp.float32),
+            pltpu.VMEM((bf, d), jnp.float32),
+        ],
+    )
+    kwargs = {}
+    params = _compiler_params(interpret)
+    if params is not None:
+        kwargs["compiler_params"] = params
+    return pl.pallas_call(
+        functools.partial(
+            _grouped_wgrad_kernel, n_fblocks=n_fblocks, n_cblocks=n_cblocks
+        ),
+        grid_spec=grid_spec,
+        out_shape=(
+            jax.ShapeDtypeStruct((e, d, f), w_gate.dtype),
+            jax.ShapeDtypeStruct((e, d, f), w_up.dtype),
+            jax.ShapeDtypeStruct((e, f, d), w_down.dtype),
+        ),
+        interpret=interpret,
+        **kwargs,
+    )(block_meta, go, x, w_gate, w_up, w_down)
+
+
 @functools.partial(
     jax.jit, static_argnames=("block_c", "block_f", "interpret")
 )

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 
 from repro.kernels.moe_gemm.kernel import (
     moe_gemm_grouped_pallas,
+    moe_gemm_grouped_pallas_dgrad,
+    moe_gemm_grouped_pallas_wgrad,
     moe_gemm_pallas,
 )
 from repro.kernels.moe_gemm.ref import moe_gemm_ref
@@ -28,18 +30,47 @@ from repro.kernels.moe_gemm.ref import moe_gemm_ref
 # cells (capacity x d_model x d_ff_expert).  Values are (block_c, block_f).
 AUTOTUNE_TABLE: dict[tuple[int, int, int], tuple[int, int]] = {
     # Mixtral-8x7B-ish: d=4096, f=14336
+    (256, 4096, 14336): (256, 512),
     (512, 4096, 14336): (256, 512),
     (1024, 4096, 14336): (256, 512),
     (2048, 4096, 14336): (512, 512),
-    # DBRX-ish: d=6144, f=10752
+    # DBRX-ish (dbrx_132b): d=6144, f=10752
+    (256, 6144, 10752): (256, 256),
     (512, 6144, 10752): (256, 256),
     (1024, 6144, 10752): (256, 256),
-    # Qwen3-MoE-ish fine-grained experts: d=4096, f=1536
+    (2048, 6144, 10752): (256, 256),
+    # Qwen3-MoE-ish fine-grained experts (qwen3_moe_235b): d=4096, f=1536
+    (256, 4096, 1536): (256, 512),
     (512, 4096, 1536): (256, 512),
     (1024, 4096, 1536): (512, 512),
+    (2048, 4096, 1536): (512, 512),
     # test/bench shapes
     (128, 64, 128): (128, 128),
     (256, 128, 256): (128, 128),
+}
+
+# Backward block_f per (C, d, f).  The backward shares the forward's
+# block_c (dgrad and wgrad index the same scalar-prefetched occupancy
+# table), but wgrad holds three f32 accumulators (12 * d * block_f
+# bytes), so the forward's wide f tiles blow VMEM — the backward runs a
+# narrower f tile.  block_f=128 keeps the accumulators at 6.3 MB for
+# d=4096 / 9.4 MB for d=6144, inside the budget with the five input
+# blocks double-buffered.
+AUTOTUNE_TABLE_BWD: dict[tuple[int, int, int], int] = {
+    (256, 4096, 14336): 128,
+    (512, 4096, 14336): 128,
+    (1024, 4096, 14336): 128,
+    (2048, 4096, 14336): 128,
+    (256, 6144, 10752): 128,
+    (512, 6144, 10752): 128,
+    (1024, 6144, 10752): 128,
+    (2048, 6144, 10752): 128,
+    (256, 4096, 1536): 128,
+    (512, 4096, 1536): 128,
+    (1024, 4096, 1536): 128,
+    (2048, 4096, 1536): 128,
+    (128, 64, 128): 128,
+    (256, 128, 256): 128,
 }
 
 # Conservative VMEM working-set budget (bytes): x + w_gate + w_up + w_down
@@ -86,12 +117,72 @@ def select_block_sizes(
     return None
 
 
+def _bwd_vmem_bytes(bc: int, bf: int, d: int, dtype_bytes: int) -> int:
+    """wgrad working set (the backward's VMEM hot spot): go + x row
+    blocks, three weight tiles, and the three f32 accumulators."""
+    blocks = 2 * bc * d * dtype_bytes + 3 * d * bf * dtype_bytes
+    accs = 12 * d * bf  # [d, bf] x2 + [bf, d], f32
+    return blocks + accs
+
+
+def select_backward_block_f(
+    c: int,
+    d: int,
+    f: int,
+    block_c: int,
+    *,
+    dtype_bytes: int = 2,
+    interpret: bool = False,
+) -> int | None:
+    """Pick the backward kernels' block_f, or None if the backward
+    cannot be tiled (callers fall back to the einsum-oracle VJP).
+
+    ``block_c`` is fixed to the forward's choice — dgrad and wgrad index
+    the forward's scalar-prefetched occupancy table, which is laid out
+    per forward row block.  Table hit wins; otherwise the largest f
+    divisor whose wgrad working set (three f32 accumulators dominate)
+    fits the VMEM budget."""
+    bc = min(block_c, c)
+    if c % bc:
+        return None
+    hit = AUTOTUNE_TABLE_BWD.get((c, d, f))
+    if hit is not None and f % hit == 0:
+        return hit
+    floor = 8 if interpret else 128
+    cands_f = _divisor_blocks(f, floor) or ([f] if (interpret and f > 0) else [])
+    for bf in cands_f:
+        if _bwd_vmem_bytes(bc, bf, d, dtype_bytes) <= _VMEM_BUDGET:
+            return bf
+    return None
+
+
+def _pallas_bwd(meta_i, x, w_gate, w_up, w_down, g, *, block_c, bwd_block_f, interpret):
+    """The real Pallas backward: dgrad + wgrad launches sharing the
+    forward's occupancy table (dark row blocks contribute nothing — the
+    exact VJP of the occupancy-skipped primal).  Cotangent and grads in
+    the primal dtypes; both kernels accumulate in f32."""
+    g = g.astype(x.dtype)
+    dx = moe_gemm_grouped_pallas_dgrad(
+        g, x, meta_i, w_gate, w_up, w_down,
+        block_c=block_c, block_f=bwd_block_f, interpret=interpret,
+    )
+    dwg, dwu, dwd = moe_gemm_grouped_pallas_wgrad(
+        g, x, meta_i, w_gate, w_up, w_down,
+        block_c=block_c, block_f=bwd_block_f, interpret=interpret,
+    )
+    return dx, dwg, dwu, dwd
+
+
 @functools.lru_cache(maxsize=None)
-def _differentiable_kernel(block_c: int, block_f: int, interpret: bool):
-    """Pallas forward + einsum-oracle backward (the kernel body uses a
-    scratch accumulator + pl.when, which Pallas AD cannot transpose).
-    The backward re-linearizes through the oracle — standard remat; both
-    paths accumulate in f32, so gradients agree to kernel tolerance."""
+def _differentiable_kernel(
+    block_c: int, block_f: int, interpret: bool, bwd_block_f: int | None = None
+):
+    """Pallas forward + Pallas backward (the kernel body uses a scratch
+    accumulator + pl.when, which Pallas AD cannot transpose — the
+    backward is its own pair of dgrad/wgrad launches, run at full
+    occupancy here since the ungrouped forward computes every row).
+    ``bwd_block_f=None`` keeps the einsum-oracle backward — the parity
+    reference, and the fallback for shapes the backward cannot tile."""
 
     @jax.custom_vjp
     def fn(x, w_gate, w_up, w_down):
@@ -107,20 +198,39 @@ def _differentiable_kernel(block_c: int, block_f: int, interpret: bool):
         )
         return out, (x, w_gate, w_up, w_down)
 
-    def bwd(residuals, g):
+    def bwd_oracle(residuals, g):
         _, vjp = jax.vjp(moe_gemm_ref, *residuals)
         return vjp(g)
 
-    fn.defvjp(fwd, bwd)
+    def bwd_pallas(residuals, g):
+        x, w_gate, w_up, w_down = residuals
+        e, c, _ = x.shape
+        bc = min(block_c, c)
+        meta_i = jnp.full((e * (c // bc),), bc, jnp.int32)  # all occupied
+        return _pallas_bwd(
+            meta_i, x, w_gate, w_up, w_down, g,
+            block_c=block_c, bwd_block_f=bwd_block_f, interpret=interpret,
+        )
+
+    fn.defvjp(fwd, bwd_oracle if bwd_block_f is None else bwd_pallas)
     return fn
 
 
 @functools.lru_cache(maxsize=None)
-def _differentiable_grouped_kernel(block_c: int, block_f: int, interpret: bool):
-    """Grouped-launch forward (block-skip metadata prologue) + einsum-
-    oracle backward.  ``meta`` rides as a float32 array so the custom_vjp
-    can hand back an ordinary zero cotangent (occupancy counts carry no
-    gradient); the kernel consumes it as int32 scalar-prefetch."""
+def _differentiable_grouped_kernel(
+    block_c: int, block_f: int, interpret: bool, bwd_block_f: int | None = None
+):
+    """Grouped-launch forward (block-skip metadata prologue) + Pallas
+    backward reusing the SAME metadata: dgrad keeps the forward grid,
+    wgrad transposes it, and both skip the row blocks the forward
+    skipped — exact, since a dark block's output is constant zeros.
+    ``meta`` rides as a float32 array so the custom_vjp can hand back an
+    ordinary zero cotangent (occupancy counts carry no gradient); the
+    kernels consume it as int32 scalar-prefetch.  ``bwd_block_f=None``
+    keeps the einsum-oracle backward (parity reference + untileable-
+    shape fallback; note the oracle differentiates rows the forward
+    never computed, so it only matches when their cotangents are
+    zero — which gate-weighted combines guarantee)."""
 
     @jax.custom_vjp
     def fn(meta, x, w_gate, w_up, w_down):
@@ -132,12 +242,20 @@ def _differentiable_grouped_kernel(block_c: int, block_f: int, interpret: bool):
     def fwd(meta, x, w_gate, w_up, w_down):
         return fn(meta, x, w_gate, w_up, w_down), (meta, x, w_gate, w_up, w_down)
 
-    def bwd(residuals, g):
+    def bwd_oracle(residuals, g):
         meta, *primals = residuals
         _, vjp = jax.vjp(moe_gemm_ref, *primals)
         return (jnp.zeros_like(meta), *vjp(g))
 
-    fn.defvjp(fwd, bwd)
+    def bwd_pallas(residuals, g):
+        meta, x, w_gate, w_up, w_down = residuals
+        grads = _pallas_bwd(
+            meta.astype(jnp.int32), x, w_gate, w_up, w_down, g,
+            block_c=block_c, bwd_block_f=bwd_block_f, interpret=interpret,
+        )
+        return (jnp.zeros_like(meta), *grads)
+
+    fn.defvjp(fwd, bwd_oracle if bwd_block_f is None else bwd_pallas)
     return fn
 
 
@@ -173,7 +291,9 @@ def moe_gemm(
     ``block_c``/``block_f`` override the autotune table; ``interpret``
     defaults to True off-TPU.  Falls back to the einsum oracle when the
     shape cannot be tiled.  Differentiable: forward runs the kernel,
-    backward goes through the einsum oracle's VJP.
+    backward runs the Pallas dgrad/wgrad kernels at the forward's
+    ``block_c`` with ``select_backward_block_f``'s f tile (shapes whose
+    backward cannot be tiled keep the einsum-oracle VJP).
 
     ``row_valid`` ([E, C] bool) is the grouped-launch metadata: True rows
     hold real admitted tokens.  It is reduced to per-row-block occupancy
@@ -200,11 +320,14 @@ def moe_gemm(
     if c % min(block_c, c) or f % min(block_f, f):
         return moe_gemm_ref(x, w_gate, w_up, w_down)
     bc = int(min(block_c, c))
+    bwd_bf = select_backward_block_f(
+        c, d, f, bc, dtype_bytes=x.dtype.itemsize, interpret=interpret
+    )
     if row_valid is not None:
         meta = row_block_meta(row_valid, bc)
         return _differentiable_grouped_kernel(
-            int(block_c), int(block_f), bool(interpret)
+            int(block_c), int(block_f), bool(interpret), bwd_bf
         )(meta, x, w_gate, w_up, w_down)
-    return _differentiable_kernel(int(block_c), int(block_f), bool(interpret))(
-        x, w_gate, w_up, w_down
-    )
+    return _differentiable_kernel(
+        int(block_c), int(block_f), bool(interpret), bwd_bf
+    )(x, w_gate, w_up, w_down)

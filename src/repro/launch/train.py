@@ -54,6 +54,13 @@ def main(argv=None) -> None:
         "--dispatch", default=None,
         choices=[None, *fabric_names(), "scheduled"],
     )
+    from repro.parallel.fabric import codec_names
+
+    ap.add_argument(
+        "--wire-dtype", default=None, choices=[None, *codec_names()],
+        help="wire codec for dispatch payloads (fp8/int8 quantize "
+        "cross-rank slots with per-slot scales)",
+    )
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--grad-compress", default=None, choices=[None, "ef8"])
     ap.add_argument("--ckpt", default="/tmp/repro_train_ckpt")
@@ -63,6 +70,10 @@ def main(argv=None) -> None:
     if cfg.moe is not None and args.dispatch:
         cfg = dataclasses.replace(
             cfg, moe=dataclasses.replace(cfg.moe, dispatch=args.dispatch)
+        )
+    if cfg.moe is not None and args.wire_dtype:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, wire_dtype=args.wire_dtype)
         )
     mesh = build_mesh()
     log.info("mesh %s, arch %s (%.1fM params)", dict(mesh.shape), cfg.name,

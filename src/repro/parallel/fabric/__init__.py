@@ -40,6 +40,13 @@ from repro.parallel.fabric.base import (
     resolve_fabric,
 )
 
+from repro.parallel.fabric.codec import (
+    CODECS,
+    WireCodec,
+    codec_names,
+    get_codec,
+)
+
 # importing the backend modules registers them
 from repro.parallel.fabric import geometry  # noqa: F401
 from repro.parallel.fabric.dense import DenseFabric
@@ -54,12 +61,14 @@ from repro.parallel.fabric.ragged_a2a import RaggedA2AFabric, ragged_available
 from repro.parallel.fabric.faulty import FaultInjectionFabric, wrap_faulty
 
 __all__ = [
+    "CODECS",
     "DEGRADATION_CHAIN",
     "FABRICS",
     "Fabric",
     "FabricContext",
     "FaultInjectionFabric",
     "PackedTokens",
+    "WireCodec",
     "DenseFabric",
     "MonolithicA2AFabric",
     "PPermuteFabric",
@@ -67,9 +76,11 @@ __all__ = [
     "RaggedA2AFabric",
     "as_fabric_schedule",
     "consumes_schedule",
+    "codec_names",
     "consumes_table",
     "fabric_names",
     "geometry",
+    "get_codec",
     "get_fabric",
     "next_fabric",
     "ragged_available",

@@ -49,6 +49,7 @@ class MonolithicA2AFabric(Fabric):
             buf, pos, gate, live,
             admitted=jnp.ones((t * m.top_k,), bool),  # no plan: admit all
             meta=cap,
+            wire=g.wire_mask_buckets(live, ctx.e_local, ctx.me),
         )
 
     def dispatch(self, ctx: FabricContext, packed: PackedTokens):

@@ -35,7 +35,9 @@ from typing import Any, Callable, ClassVar
 
 import jax
 
+from repro.core.cost_models import wire_bytes_per_token
 from repro.core.schedule import A2ASchedule, ScheduleTable
+from repro.parallel.fabric.codec import get_codec
 
 __all__ = [
     "Fabric",
@@ -120,6 +122,10 @@ class PackedTokens:
     live: jax.Array
     admitted: jax.Array
     meta: Any = None
+    # slot-shaped bool mask of slots that CROSS the fabric (live remote
+    # slots; local and padding slots excluded) — the wire codec's domain.
+    # None = nothing crosses (the schedule-less dense path).
+    wire: Any = None
 
 
 class Fabric:
@@ -227,16 +233,65 @@ class Fabric:
         with ``packed.buf``'s slot layout."""
         raise NotImplementedError
 
+    # ----------------------------------------------------------- wire codec
+    def wire_encode(self, ctx: FabricContext, packed: PackedTokens):
+        """Quantize the wire-crossing slots to ``MoECfg.wire_dtype``'s
+        codec before dispatch (QDQ + STE — see ``fabric.codec``).  The
+        codec's domain is ``packed.wire``, the mask each backend's
+        ``pack`` sets; the bf16 passthrough (and maskless packs) return
+        ``packed`` unchanged, keeping the default path bit-exact."""
+        codec = get_codec(getattr(ctx.moe, "wire_dtype", "bf16"))
+        if codec.is_identity or packed.wire is None:
+            return packed
+        return dataclasses.replace(
+            packed, buf=codec.apply(packed.buf, packed.wire)
+        )
+
+    def wire_decode(self, ctx: FabricContext, packed: PackedTokens, y_slots):
+        """Quantize the processed slots' return leg through the same
+        codec — combine output is slot-aligned with ``packed.buf``, so
+        the pack-time wire mask marks exactly the slots whose results
+        crossed back."""
+        codec = get_codec(getattr(ctx.moe, "wire_dtype", "bf16"))
+        if codec.is_identity or packed.wire is None:
+            return y_slots
+        return codec.apply(y_slots, packed.wire)
+
     # ----------------------------------------------------------- accounting
     def dispatch_tokens(
         self, *, n: int, cap_uniform: int = 0, schedule=None, envelope=None
     ):
         """Per-rank dispatch slot tokens this backend puts on the wire
-        (mean over ranks; multiply by ``d_model * dtype_bytes`` for
-        bytes).  The number the bench's ``bytes_moved`` table tracks —
-        each backend documents what it counts (padding included, local
-        traffic excluded)."""
+        (mean over ranks).  The number the bench's ``bytes_moved`` table
+        tracks — each backend documents what it counts (padding
+        included, local traffic excluded).  Slots are *counts*, not
+        bytes: what one slot costs depends on the wire codec, so bytes
+        come from ``dispatch_bytes`` (slots × ``wire_bytes_per_token``),
+        never from a hard-wired ``d_model * dtype_bytes`` multiplier."""
         raise NotImplementedError
+
+    def dispatch_bytes(
+        self,
+        *,
+        d_model: int,
+        wire_dtype: str = "bf16",
+        compute_bytes: int = 2,
+        n: int,
+        cap_uniform: int = 0,
+        schedule=None,
+        envelope=None,
+    ):
+        """Per-rank dispatch bytes under ``wire_dtype``'s codec:
+        ``dispatch_tokens`` slots priced at ``wire_bytes_per_token``
+        (payload at the codec width + the per-slot scale sidecar
+        quantized codecs ship — accounted honestly)."""
+        tokens = self.dispatch_tokens(
+            n=n, cap_uniform=cap_uniform, schedule=schedule,
+            envelope=envelope,
+        )
+        return tokens * wire_bytes_per_token(
+            d_model, wire_dtype, compute_bytes
+        )
 
 
 # ------------------------------------------------------------------ registry

@@ -1,0 +1,123 @@
+"""Wire codecs: low-precision payloads for the dispatch fabric.
+
+``MoECfg.wire_dtype`` names the codec tokens ride the fabric in.  The
+``bf16`` default is a passthrough (payload at the compute width — the
+historic behavior, bit-exact); ``fp8`` ships e4m3 payloads and ``int8``
+symmetric int8 payloads, both with one f32 scale per slot (the
+``optim/compression.py`` idiom, per-slot instead of per-tensor so a hot
+token cannot wash out a cold one's resolution).
+
+Execution is quantize-dequantize (QDQ) at the fabric seams: the base
+``Fabric.wire_encode`` hook QDQs the wire-crossing slots of the packed
+send buffer before ``dispatch``, and ``wire_decode`` QDQs the processed
+slots the combine leg returns.  This is numerically identical to
+physically moving (payload, scale) pairs and dequantizing on arrival:
+dequantization is per-slot elementwise and every movement primitive in
+this repo (all_to_all, ppermute, ragged_all_to_all, the dense
+emulation's masked adds) permutes or zero-fills whole slots, so
+dequantize-then-move == move-then-dequantize exactly.  QDQ keeps the
+collectives dtype-agnostic while the bytes accounting
+(``cost_models.wire_bytes_per_token``, ``Fabric.dispatch_bytes``)
+prices what the payload+sidecar wire format actually carries.
+
+Gradients pass straight through (STE): quantization noise is treated as
+round-off, not as something to differentiate — the same contract as the
+bf16 cast it replaces.  Local slots (src == dst, never on the wire) are
+left untouched, mirroring how admission never clips local traffic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cost_models import WIRE_DTYPES
+
+__all__ = ["WireCodec", "CODECS", "get_codec", "codec_names"]
+
+_EPS = 1e-12  # zero-slot guard: amax 0 -> scale eps -> QDQ(0) == 0 exactly
+_INT8_MAX = 127.0
+_E4M3_MAX = 448.0  # float8_e4m3fn finite max
+
+
+def _int8_encode(x):
+    """[..., d] f32 -> (int8 payload, f32 scale [..., 1]), symmetric."""
+    scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / _INT8_MAX + _EPS
+    q = jnp.clip(jnp.round(x / scale), -_INT8_MAX, _INT8_MAX)
+    return q.astype(jnp.int8), scale
+
+
+def _fp8_encode(x):
+    """[..., d] f32 -> (e4m3 payload, f32 scale [..., 1]).
+
+    The slot's amax maps to the e4m3 finite max; the clip guards the
+    saturating cast (e4m3fn has no inf — overflow would be NaN)."""
+    scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / _E4M3_MAX + _EPS
+    q = jnp.clip(x / scale, -_E4M3_MAX, _E4M3_MAX)
+    return q.astype(jnp.float8_e4m3fn), scale
+
+
+def _scaled_decode(q, scale):
+    """(payload, scale) -> f32 values (both quantized codecs)."""
+    return q.astype(jnp.float32) * scale
+
+
+@dataclasses.dataclass(frozen=True)
+class WireCodec:
+    """One wire payload format.  ``encode`` maps f32 slots to
+    (payload, per-slot scale); ``decode`` inverts it at f32.  ``None``
+    encode marks the identity passthrough (payload at compute width)."""
+
+    name: str
+    encode: Callable | None = None
+    decode: Callable | None = None
+
+    @property
+    def is_identity(self) -> bool:
+        return self.encode is None
+
+    def qdq(self, x):
+        """decode∘encode at f32 — the codec's value map on the wire."""
+        return self.decode(*self.encode(x))
+
+    def apply(self, buf, wire):
+        """QDQ the wire-crossing slots of ``buf`` ([..., d]; ``wire``
+        is the slot-shaped bool mask, None = nothing crosses).  Values
+        round-trip the wire format at f32; gradients pass through
+        unchanged (STE).  Identity codec and maskless buffers return
+        ``buf`` untouched — the bit-exact bf16 default."""
+        if self.encode is None or wire is None:
+            return buf
+        x = buf.astype(jnp.float32)
+        y = x + jax.lax.stop_gradient(self.qdq(x) - x)
+        return jnp.where(wire[..., None], y, x).astype(buf.dtype)
+
+
+CODECS: dict[str, WireCodec] = {
+    "bf16": WireCodec("bf16"),
+    "fp8": WireCodec("fp8", _fp8_encode, _scaled_decode),
+    "int8": WireCodec("int8", _int8_encode, _scaled_decode),
+}
+# one registry, one price list: a codec without a bytes-per-token entry
+# (or vice versa) would let the bench lie about the wire
+assert set(CODECS) == set(WIRE_DTYPES), "codec registry out of sync with cost-model pricing"
+
+
+def codec_names() -> tuple[str, ...]:
+    """Registered codec names, sorted (error messages + benches)."""
+    return tuple(sorted(CODECS))
+
+
+def get_codec(name: str) -> WireCodec:
+    """Look up a codec by ``MoECfg.wire_dtype`` value; unknown names
+    raise listing the registered codecs."""
+    try:
+        return CODECS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown wire_dtype {name!r}: registered wire codecs are "
+            f"{', '.join(codec_names())}"
+        ) from None

@@ -68,9 +68,21 @@ class DenseFabric(Fabric):
             x_loc, idx.reshape(-1), gates.reshape(-1), m.n_experts, cap,
             admitted=admitted,
         )
+        wire = None
+        if row is not None:
+            # virtual fabric: a slot "crosses the wire" iff its token's
+            # contiguous virtual source block differs from its bucket's
+            # virtual destination rank — the same src/dst convention the
+            # admission mask enforces, so scheduled wire-codec semantics
+            # are observable without a mesh (pad slots die via ``live``)
+            dst_v = jnp.arange(m.n_experts, dtype=jnp.int32) // (
+                m.n_experts // row.n
+            )
+            src_v = (pos * row.n) // t
+            wire = live & (src_v != dst_v[:, None])
         if admitted is None:
             admitted = jnp.ones((t * m.top_k,), bool)
-        return PackedTokens(buf, pos, gate, live, admitted)
+        return PackedTokens(buf, pos, gate, live, admitted, wire=wire)
 
     def dispatch(self, ctx: FabricContext, packed: PackedTokens):
         # capacity dim sharded over the DP axis ('fsdp'->data) so expert

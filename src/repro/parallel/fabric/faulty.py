@@ -100,6 +100,12 @@ class FaultInjectionFabric(Fabric):
     def combine(self, ctx, packed, state, ys):
         return self.base.combine(ctx, packed, state, ys)
 
+    def wire_encode(self, ctx, packed):
+        return self.base.wire_encode(ctx, packed)
+
+    def wire_decode(self, ctx, packed, y_slots):
+        return self.base.wire_decode(ctx, packed, y_slots)
+
     # ----------------------------------------------------------- accounting
     def dispatch_tokens(self, *, n, cap_uniform=0, schedule=None, envelope=None):
         return self.base.dispatch_tokens(

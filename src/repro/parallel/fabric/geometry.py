@@ -28,6 +28,7 @@ __all__ = [
     "pack_slots",
     "ungroup",
     "rank_in_group",
+    "wire_mask_buckets",
     "admission_mask",
     "phase_serving",
     "phase_slot_assign",
@@ -135,6 +136,19 @@ def rank_in_group(key: jax.Array) -> jax.Array:
     )
     first = jax.lax.cummax(jnp.where(is_start, idxs, 0))
     return jnp.zeros_like(idxs).at[order].set(idxs - first)
+
+
+def wire_mask_buckets(live: jax.Array, e_local: int, me) -> jax.Array:
+    """Wire-crossing slots in a ``[n * e_local, cap]`` bucket layout.
+
+    A slot crosses the fabric iff it is live AND its bucket's
+    destination rank (``bucket // e_local``) is not ``me`` — local
+    buckets never leave the rank and padding never ships payload, so
+    neither belongs to the wire codec's domain (mirroring how admission
+    never clips local traffic).  Shared by every uniform-bucket backend
+    (a2a, ppermute, the phase-pipelined monolithic fallback)."""
+    dst = jnp.arange(live.shape[0], dtype=jnp.int32) // e_local
+    return live & (dst != me)[:, None]
 
 
 def admission_mask(

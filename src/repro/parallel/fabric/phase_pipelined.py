@@ -112,7 +112,12 @@ class PhasePipelinedFabric(Fabric):
             dst_k=dst_k,
             on_all=on_all,
         )
-        return PackedTokens(buf, pos, gate, live, admitted, meta=meta)
+        # wire domain: every live slot in the phase-major remote region
+        # (the local block at the tail never leaves the rank)
+        wire = live & (jnp.arange(n_slots) < meta.s_remote)
+        return PackedTokens(
+            buf, pos, gate, live, admitted, meta=meta, wire=wire
+        )
 
     def _pack_mono(self, ctx: FabricContext, x_loc, idx, gates):
         m = ctx.moe
@@ -131,7 +136,10 @@ class PhasePipelinedFabric(Fabric):
             x_loc, idx.reshape(-1), gates.reshape(-1), n * e_local, c_max,
             admitted=admitted,
         )
-        return PackedTokens(buf, pos, gate, live, admitted, meta=c_max)
+        return PackedTokens(
+            buf, pos, gate, live, admitted, meta=c_max,
+            wire=g.wire_mask_buckets(live, e_local, ctx.me),
+        )
 
     # ------------------------------------------------------ phase transfer
     # The one seam between phase_pipelined and ragged_a2a: everything

@@ -70,6 +70,7 @@ class PPermuteFabric(Fabric):
             buf, pos, gate, live,
             admitted=jnp.ones((t * m.top_k,), bool),  # plan caps via buckets
             meta=(sched_pe, c_max),
+            wire=g.wire_mask_buckets(live, e_local, ctx.me),
         )
 
     def dispatch(self, ctx: FabricContext, packed: PackedTokens):

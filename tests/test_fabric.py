@@ -481,6 +481,261 @@ class TestEnvelopeShrink:
         assert (np.asarray(rt.table().envelope) <= env).all()
 
 
+class TestWireCodecProperties:
+    """PR 8 satellite: dequantize∘quantize properties of the wire codecs
+    on adversarial slots — zeros, inf-adjacent magnitudes, single-token
+    slots — straight against ``repro.parallel.fabric.codec``."""
+
+    def test_registry_matches_pricing(self):
+        from repro.core import WIRE_DTYPES
+        from repro.parallel.fabric import CODECS, codec_names, get_codec
+
+        assert set(CODECS) == set(WIRE_DTYPES)
+        assert codec_names() == tuple(sorted(CODECS))
+        with pytest.raises(ValueError, match="bf16.*fp8.*int8"):
+            get_codec("fp4")
+
+    def test_bf16_is_identity_passthrough(self):
+        from repro.parallel.fabric import get_codec
+
+        codec = get_codec("bf16")
+        assert codec.is_identity
+        buf = jnp.ones((3, 4, 8), jnp.bfloat16)
+        wire = jnp.ones((3, 4), bool)
+        assert codec.apply(buf, wire) is buf  # not merely equal: untouched
+
+    @pytest.mark.parametrize("wire", ["fp8", "int8"])
+    def test_maskless_buffer_is_untouched(self, wire):
+        from repro.parallel.fabric import get_codec
+
+        buf = jnp.ones((2, 8), jnp.float32)
+        assert get_codec(wire).apply(buf, None) is buf
+
+    @pytest.mark.parametrize("wire", ["fp8", "int8"])
+    def test_zero_slots_round_trip_exactly(self, wire):
+        """All-zero slots (envelope padding) must QDQ to exact zeros —
+        the eps scale guard, not a 0/0 NaN."""
+        from repro.parallel.fabric import get_codec
+
+        codec = get_codec(wire)
+        x = jnp.zeros((3, 5, 32), jnp.float32)
+        q, scale = codec.encode(x)
+        assert np.isfinite(np.asarray(scale)).all()
+        assert (np.asarray(codec.qdq(x)) == 0.0).all()
+
+    def test_int8_error_bounded_by_half_step(self):
+        """Symmetric int8: round-off is at most half a quantization step
+        of the slot's own amax — per-slot scales mean a hot slot cannot
+        wash out a cold one."""
+        from repro.parallel.fabric import get_codec
+
+        codec = get_codec("int8")
+        rng = np.random.default_rng(0)
+        # wildly mixed per-slot magnitudes, including a near-zero slot
+        x = rng.normal(size=(6, 32)) * (10.0 ** rng.integers(-4, 4, (6, 1)))
+        x = jnp.asarray(x, jnp.float32)
+        amax = np.abs(np.asarray(x)).max(axis=-1, keepdims=True)
+        err = np.abs(np.asarray(codec.qdq(x)) - np.asarray(x))
+        assert (err <= amax / 127.0 * 0.5 + 1e-6).all()
+
+    def test_fp8_error_bounded_by_e4m3_resolution(self):
+        """e4m3: half-ulp relative error (2^-4) for normals plus one
+        subnormal step of the scaled format near zero."""
+        from repro.parallel.fabric import get_codec
+
+        codec = get_codec("fp8")
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.normal(size=(6, 32)) * 3.0, jnp.float32)
+        _, scale = codec.encode(x)
+        err = np.abs(np.asarray(codec.qdq(x)) - np.asarray(x))
+        bound = 0.0625 * np.abs(np.asarray(x)) + np.asarray(scale)
+        assert (err <= bound).all()
+
+    @pytest.mark.parametrize("wire", ["fp8", "int8"])
+    def test_inf_adjacent_magnitudes_stay_finite(self, wire):
+        """Slots touching the f32 range edge (3e38) must survive the
+        wire: finite output, signs preserved, no e4m3fn overflow-NaN."""
+        from repro.parallel.fabric import get_codec
+
+        codec = get_codec(wire)
+        x = jnp.asarray(
+            [[3e38, -3e38, 1e-30, 0.0, -1.5, 2.5e37, -7e36, 1.0]],
+            jnp.float32,
+        )
+        y = np.asarray(codec.qdq(x))
+        assert np.isfinite(y).all()
+        big = np.abs(np.asarray(x)) >= 1e37
+        assert (np.sign(y[big]) == np.sign(np.asarray(x)[big])).all()
+        # the amax element round-trips within codec resolution
+        assert abs(y[0, 0] - 3e38) <= 0.0625 * 3e38
+
+    @pytest.mark.parametrize("wire", ["fp8", "int8"])
+    def test_single_token_slots(self, wire):
+        """A slot holding one scalar feature (d=1) is its own amax: the
+        value maps to the codec's top code and round-trips tightly."""
+        from repro.parallel.fabric import get_codec
+
+        codec = get_codec(wire)
+        x = jnp.asarray([[3.7], [-0.003], [1e5], [0.0]], jnp.float32)
+        y = np.asarray(codec.qdq(x))
+        err = np.abs(y - np.asarray(x))
+        assert (err <= 0.01 * np.abs(np.asarray(x)) + 1e-9).all()
+
+    @pytest.mark.parametrize("wire", ["fp8", "int8"])
+    def test_ste_gradient_is_identity(self, wire):
+        """Gradients pass straight through the QDQ seam (STE) — wire
+        noise is round-off, not a differentiable transform."""
+        from repro.parallel.fabric import get_codec
+
+        codec = get_codec(wire)
+        buf = jax.random.normal(jax.random.PRNGKey(0), (4, 8), jnp.float32)
+        mask = jnp.asarray([True, False, True, True])
+        g = jax.grad(lambda b: (codec.apply(b, mask) * 3.0).sum())(buf)
+        np.testing.assert_allclose(np.asarray(g), 3.0)
+
+
+class TestWireDtypeParity:
+    """PR 8: the wire_dtype axis of the parity matrix.  Quantized wires
+    must track the bf16 values within the codec's documented tolerance,
+    keep routing/drop stats bit-identical (admission precedes the
+    codec), and leave fabrics where nothing crosses the wire exact."""
+
+    # documented max-abs tolerance on unit-scale activations (d_model=32
+    # MoE outputs; measured ~0.11 / ~0.023 on the seeded draw)
+    VALUE_TOL = {"fp8": 0.25, "int8": 0.06}
+    # grad tolerance relative to the bf16 grads' own max magnitude
+    GRAD_RTOL = {"fp8": 0.08, "int8": 0.03}
+
+    def setup_method(self):
+        self.x = jax.random.normal(
+            jax.random.PRNGKey(1), (4, 32, 32), jnp.float32
+        )
+        self.params = moe.moe_init(jax.random.PRNGKey(0), _cfg())
+
+    def _sched_for(self, name):
+        if name in ("phase_pipelined", "ragged_a2a"):
+            return _row(seed=2)
+        if name == "ppermute":
+            return _plan(2)
+        return None
+
+    @pytest.mark.parametrize("name", ALL_FABRICS)
+    @pytest.mark.parametrize("wire", ["fp8", "int8"])
+    def test_values_track_bf16_within_codec_tolerance(self, name, wire):
+        sched = self._sched_for(name)
+        y_ref, st_ref = moe.moe_apply(
+            self.params, _cfg(name), self.x, schedule=sched,
+            return_stats=True,
+        )
+        y_q, st_q = moe.moe_apply(
+            self.params, _cfg(name, wire_dtype=wire), self.x,
+            schedule=sched, return_stats=True,
+        )
+        err = float(jnp.abs(y_q - y_ref).max())
+        assert err <= self.VALUE_TOL[wire], (name, wire, err)
+        # admission runs before the codec: routing and drop stats are
+        # bit-identical, and the generous-capacity draw stays drop-free
+        for a, b in zip(jax.tree.leaves(st_q), jax.tree.leaves(st_ref)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert float(np.asarray(st_q["dropped"]).sum()) == 0.0
+        if name in ("phase_pipelined", "ragged_a2a"):
+            # a schedule row marks cross-virtual-rank slots: the codec
+            # must actually engage, not silently no-op
+            assert err > 0.0, (name, wire)
+        else:
+            # no wire mask on one device: quantization never touches
+            # local traffic, so the output is bit-exact
+            assert err == 0.0, (name, wire)
+
+    @pytest.mark.parametrize("name", ["dense", "phase_pipelined"])
+    def test_explicit_bf16_wire_is_bit_exact(self, name):
+        sched = self._sched_for(name)
+        y_def = moe.moe_apply(self.params, _cfg(name), self.x, schedule=sched)
+        y_bf16 = moe.moe_apply(
+            self.params, _cfg(name, wire_dtype="bf16"), self.x,
+            schedule=sched,
+        )
+        np.testing.assert_array_equal(np.asarray(y_def), np.asarray(y_bf16))
+
+    @pytest.mark.parametrize("wire", ["fp8", "int8"])
+    def test_grads_track_bf16_within_tolerance(self, wire):
+        """STE grads through the quantized wire stay close to the bf16
+        grads (difference is quantization noise times loss curvature)."""
+        row = self._sched_for("phase_pipelined")
+
+        def loss(p, cfg):
+            return (
+                moe.moe_apply(p, cfg, self.x, schedule=row) ** 2
+            ).sum()
+
+        g_ref = jax.grad(loss)(self.params, _cfg("phase_pipelined"))
+        g_q = jax.grad(loss)(
+            self.params, _cfg("phase_pipelined", wire_dtype=wire)
+        )
+        scale = max(
+            float(jnp.abs(g).max()) for g in jax.tree.leaves(g_ref)
+        )
+        for a, b in zip(jax.tree.leaves(g_q), jax.tree.leaves(g_ref)):
+            assert np.isfinite(np.asarray(a)).all()
+            err = float(jnp.abs(a - b).max())
+            assert err <= self.GRAD_RTOL[wire] * scale, (wire, err, scale)
+
+    def test_unknown_wire_dtype_raises_listing_codecs(self):
+        cfg = _cfg("phase_pipelined", wire_dtype="fp4")
+        with pytest.raises(ValueError, match="bf16.*fp8.*int8"):
+            moe.moe_apply(
+                self.params, cfg, self.x, schedule=self._sched_for(
+                    "phase_pipelined"
+                ),
+            )
+
+    def test_row_fabrics_agree_under_quantization(self):
+        """phase_pipelined and ragged_a2a share pack geometry AND wire
+        masks — their quantized outputs must agree exactly."""
+        row = _row(seed=3)
+        outs = [
+            moe.moe_apply(
+                self.params, _cfg(name, wire_dtype="fp8"), self.x,
+                schedule=row,
+            )
+            for name in ("phase_pipelined", "ragged_a2a")
+        ]
+        np.testing.assert_array_equal(
+            np.asarray(outs[0]), np.asarray(outs[1])
+        )
+
+    def test_dispatch_bytes_prices_the_wire(self):
+        """Fabric.dispatch_bytes = slot count x wire format price: the
+        quantized envelope bytes sit at the documented ratio."""
+        from repro.core import wire_bytes_per_token
+
+        row_sched = _plan(5, n=8)
+        from repro.core.schedule import phase_envelope
+
+        env = phase_envelope([row_sched], row_sched.num_phases, slack=1.5)
+        fab = get_fabric("ragged_a2a")
+        d_model = 4096
+        toks = fab.dispatch_tokens(n=8, schedule=row_sched, envelope=env)
+        for w in ("bf16", "fp8", "int8"):
+            got = fab.dispatch_bytes(
+                d_model=d_model, wire_dtype=w, n=8,
+                schedule=row_sched, envelope=env,
+            )
+            assert got == pytest.approx(
+                toks * wire_bytes_per_token(d_model, w)
+            )
+        bf16 = fab.dispatch_bytes(
+            d_model=d_model, wire_dtype="bf16", n=8,
+            schedule=row_sched, envelope=env,
+        )
+        for w in ("fp8", "int8"):
+            q = fab.dispatch_bytes(
+                d_model=d_model, wire_dtype=w, n=8,
+                schedule=row_sched, envelope=env,
+            )
+            assert q <= 0.55 * bf16, (w, q, bf16)
+
+
 class TestFabricDocsContract:
     def test_every_fabric_documents_itself(self):
         for name, fab in FABRICS.items():

@@ -101,8 +101,8 @@ def test_moe_gemm_grouped_partial_block_computes_everything():
 
 
 def test_moe_gemm_grouped_grads_match_oracle():
-    """custom_vjp: grouped forward, einsum-oracle backward — grads of a
-    gate-masked loss match the pure-oracle grads."""
+    """custom_vjp: grouped forward + the Pallas dgrad/wgrad backward
+    (PR 8) — grads of a gate-masked loss match the pure-oracle grads."""
     x, wg, wu, wd = _grouped_inputs(seed=2)
     rv = jnp.zeros((4, 128), bool).at[:, :64].set(True)
     mask = rv[..., None].astype(x.dtype)
@@ -120,6 +120,150 @@ def test_moe_gemm_grouped_grads_match_oracle():
         np.testing.assert_allclose(
             np.asarray(a, np.float32), np.asarray(b, np.float32),
             rtol=1e-4, atol=1e-4,
+        )
+
+
+# -------------------------------------------------- Pallas backward (PR 8)
+def test_backward_block_f_selected_for_test_shape():
+    """The shapes this file sweeps must take the Pallas backward, not
+    the oracle fallback — otherwise the grad tests above prove nothing
+    about the kernels."""
+    from repro.kernels.moe_gemm import select_backward_block_f
+
+    assert select_backward_block_f(128, 64, 128, 64, interpret=True) == 128
+    # production table hit
+    assert select_backward_block_f(2048, 4096, 14336, 512) == 128
+    # block_c not dividing C: the shared occupancy-table layout breaks
+    assert select_backward_block_f(100, 64, 128, 64, interpret=True) is None
+    # compiled mode with no >=128 divisor of f: untileable -> oracle
+    assert select_backward_block_f(256, 64, 24, 128, interpret=False) is None
+
+
+def test_moe_gemm_ungrouped_pallas_backward_matches_ref_vjp():
+    """The ungrouped kernel's Pallas backward (full occupancy) against
+    jax's own VJP of the einsum oracle, unmasked cotangent."""
+    x, wg, wu, wd = _grouped_inputs(seed=3)
+    g = jax.random.normal(jax.random.PRNGKey(9), x.shape) * 0.3
+
+    def run(fn):
+        out, vjp = jax.vjp(fn, x, wg, wu, wd)
+        return out, vjp(g)
+
+    out_k, gk = run(lambda *a: moe_gemm(*a, block_c=64, block_f=64, interpret=True))
+    out_r, gr = run(moe_gemm_ref)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r), rtol=2e-5, atol=2e-5)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4
+        )
+
+
+def test_moe_gemm_pallas_backward_vs_oracle_backward_factory():
+    """Same forward, both backward flavors of the grouped custom_vjp —
+    the Pallas dgrad/wgrad pair against the einsum-oracle VJP it
+    replaces, on a partially occupied grid with gate-masked cotangents
+    (the only regime where the oracle is valid)."""
+    from repro.kernels.moe_gemm.ops import (
+        _differentiable_grouped_kernel,
+        row_block_meta,
+    )
+
+    x, wg, wu, wd = _grouped_inputs(seed=4)
+    rv = np.zeros((4, 128), bool)
+    for i, ct in enumerate([128, 64, 0, 8]):
+        rv[i, :ct] = True
+    rv = jnp.asarray(rv)
+    meta = row_block_meta(rv, 64)
+    mask = rv[..., None].astype(x.dtype)
+
+    def loss(kernel):
+        def f(x, wg, wu, wd):
+            return ((kernel(meta, x, wg, wu, wd) * mask) ** 2).sum()
+        return jax.grad(f, argnums=(0, 1, 2, 3))(x, wg, wu, wd)
+
+    g_pallas = loss(_differentiable_grouped_kernel(64, 64, True, 64))
+    g_oracle = loss(_differentiable_grouped_kernel(64, 64, True, None))
+    for a, b in zip(g_pallas, g_oracle):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4
+        )
+
+
+def test_moe_gemm_grouped_dark_block_dgrad_is_exact_zero():
+    """Dark row blocks (zero occupancy) produced constant-zero forward
+    output, so their input cotangent is exactly zero — the backward
+    skips them like the forward did, even when the upstream cotangent
+    there is garbage (unmasked).  This is where the Pallas backward is
+    MORE faithful than the oracle, which backprops rows that were never
+    computed."""
+    from repro.kernels.moe_gemm.ops import (
+        _differentiable_grouped_kernel,
+        row_block_meta,
+    )
+
+    x, wg, wu, wd = _grouped_inputs(seed=5)
+    rv = jnp.zeros((4, 128), bool).at[:2, :].set(True)  # experts 2,3 dark
+    meta = row_block_meta(rv, 64)
+    kernel = _differentiable_grouped_kernel(64, 64, True, 64)
+    out, vjp = jax.vjp(lambda *a: kernel(meta, *a), x, wg, wu, wd)
+    g = jnp.ones_like(out)  # garbage upstream cotangent on dark rows
+    dx, dwg, dwu, dwd = vjp(g)
+    assert float(jnp.abs(dx[2:]).max()) == 0.0
+    assert float(jnp.abs(dwg[2:]).max()) == 0.0
+    assert float(jnp.abs(dwu[2:]).max()) == 0.0
+    assert float(jnp.abs(dwd[2:]).max()) == 0.0
+    # the live experts still get real grads
+    assert float(jnp.abs(dx[:2]).max()) > 0.0
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_moe_gemm_dgrad_wgrad_kernels_match_ref_vjp(dtype):
+    """The raw dgrad/wgrad launches at full occupancy against the
+    oracle VJP, both dtypes (kernels accumulate f32 either way)."""
+    from repro.kernels.moe_gemm import (
+        moe_gemm_grouped_pallas_dgrad,
+        moe_gemm_grouped_pallas_wgrad,
+    )
+
+    e, c, d, f = 2, 128, 64, 128
+    x, wg, wu, wd = (a.astype(dtype) for a in _grouped_inputs(e, c, d, f, seed=6))
+    g = (jax.random.normal(jax.random.PRNGKey(7), (e, c, d)) * 0.3).astype(dtype)
+    meta = jnp.full((e * (c // 64),), 64, jnp.int32)
+    dx = moe_gemm_grouped_pallas_dgrad(
+        g, x, meta, wg, wu, wd, block_c=64, block_f=64, interpret=True
+    )
+    dwg, dwu, dwd = moe_gemm_grouped_pallas_wgrad(
+        g, x, meta, wg, wu, wd, block_c=64, block_f=64, interpret=True
+    )
+    _, vjp = jax.vjp(moe_gemm_ref, x, wg, wu, wd)
+    refs = vjp(g)
+    for a, b in zip((dx, dwg, dwu, dwd), refs):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32), **_tol(dtype)
+        )
+
+
+def test_moe_gemm_backward_block_shape_independent():
+    """Backward values must not depend on the backward f tile."""
+    x, wg, wu, wd = _grouped_inputs(seed=8)
+    rv = jnp.zeros((4, 128), bool).at[:, :96].set(True)
+    mask = rv[..., None].astype(x.dtype)
+    from repro.kernels.moe_gemm.ops import (
+        _differentiable_grouped_kernel,
+        row_block_meta,
+    )
+
+    meta = row_block_meta(rv, 32)
+
+    def grads(bwd_bf):
+        kernel = _differentiable_grouped_kernel(32, 64, True, bwd_bf)
+        def f(x, wg, wu, wd):
+            return ((kernel(meta, x, wg, wu, wd) * mask) ** 2).sum()
+        return jax.grad(f, argnums=(0, 1, 2, 3))(x, wg, wu, wd)
+
+    for a, b in zip(grads(32), grads(128)):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5
         )
 
 

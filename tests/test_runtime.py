@@ -258,6 +258,90 @@ class TestEndToEndDrift:
         post_shift = [h["loss"] for h in res["history"] if h["step"] >= shift_at]
         assert post_shift[-1] < post_shift[0], post_shift
 
+    def test_hybrid_interleave_controller_end_to_end(self, tmp_path):
+        """PR 8 satellite: the controller over a heterogeneous
+        jamba-style stack — mamba + one attention layer per period, MoE
+        FFN on every SECOND layer only.  The controller's world is the
+        MoE sublattice: its table has ``n_moe_layers`` rows (not
+        ``n_layers``), observe/score/re-plan run over exactly those
+        layers, and warm hits at the steady-state re-plan count MoE
+        layers only.  Rides the quantized wire (``int8``) so the
+        low-precision path is exercised inside a real training loop."""
+        from repro.configs.base import HybridCfg, ModelConfig, MoECfg
+        from repro.data import DataConfig
+        from repro.models import Model
+        from repro.train import TrainLoopConfig, train_loop
+
+        cfg = ModelConfig(
+            name="jamba-drift-test",
+            family="hybrid",
+            n_layers=4,
+            d_model=32,
+            n_heads=4,
+            n_kv_heads=2,
+            d_ff=64,
+            vocab_size=128,
+            hybrid=HybridCfg(
+                period=4, attn_index=2, d_state=8, conv_width=2, expand=2
+            ),
+            moe=MoECfg(
+                n_experts=E, top_k=2, d_ff_expert=32, every=2,
+                wire_dtype="int8",
+            ),
+            remat="none",
+        )
+        model = Model(cfg)
+        # the interleave: mamba / moe / attention / moe
+        assert [cfg.ffn_kind(l) == "moe" for l in range(4)] == [
+            False, True, False, True
+        ]
+        assert model.n_moe_layers == 2
+        rt = ScheduleRuntime(
+            ControllerConfig(n_ranks=N, n_experts=E, ema=1.0, cooldown=2),
+            model.n_moe_layers,
+        )
+        shift_at = 10
+        base = np.linspace(1.0, 2.0, E)
+        base /= base.sum()
+        seen_shapes = []
+
+        def drift_hook(step, stats):
+            # the loop hands the hook MoE-sublattice stats: one row per
+            # dispatching layer, never one per stack layer
+            seen_shapes.append(stats.shape[0])
+            probs = base if step < shift_at else base**6 / (base**6).sum()
+            totals = stats.sum(axis=(1, 2), keepdims=True)
+            return np.broadcast_to(
+                probs[None, None, :], stats.shape
+            ) * totals
+
+        res = train_loop(
+            model,
+            DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=8),
+            TrainLoopConfig(
+                steps=24,
+                ckpt_dir=str(tmp_path),
+                ckpt_every=12,
+                peak_lr=5e-3,
+                warmup=5,
+                log_every=2,
+            ),
+            runtime=rt,
+            stats_hook=drift_hook,
+        )
+        assert set(seen_shapes) == {model.n_moe_layers}
+        ctl = res["controller"]
+        assert ctl["replan_events"] >= 2
+        assert ctl["decompose_calls"] == ctl["replan_events"]
+        # steady-state re-plan warm path sized by the MoE sublattice
+        assert rt.last_event["cold"] == 0
+        assert rt.last_event["warm_hits"] == model.n_moe_layers
+        assert len(rt.table().caps) >= 1
+        assert rt.table().num_layers == model.n_moe_layers
+        losses = [h["loss"] for h in res["history"]]
+        assert all(np.isfinite(losses))
+        assert np.mean(losses[-3:]) < np.mean(losses[:3]), losses
+
 
 class TestPhaseClipAccounting:
     """``phase_clips`` must not drift when the selector's LRU bound
