@@ -497,6 +497,13 @@ def bench_bytes_moved() -> dict:
       circuit fabric would carry.
     * **dense** — zero dispatch bytes (it pays a [T, d] all-reduce
       instead, reported separately as ``dense_allreduce_mb_per_rank``).
+    * **hierarchical** — the same draw planned two-level (schema v5):
+      pod-local traffic on the electrical intra fabric, the off-block
+      remainder on the circuit-scheduled inter fabric; reported as an
+      ``{"intra", "inter"}`` split.  Acceptance: the inter row must not
+      exceed the off-block-diagonal share of ``ragged_a2a``'s bytes —
+      planning only the seam-crossing demand can't cost more wire than
+      the flat plan already spends crossing the seam.
 
     The legacy ``monolithic/phase_env/static_ppermute`` keys are kept so
     the PR-over-PR trend lines stay continuous.
@@ -505,6 +512,7 @@ def bench_bytes_moved() -> dict:
         WIRE_DTYPES,
         a2a_dispatch_tokens,
         decompose,
+        hierarchical_plan,
         phase_dispatch_tokens,
         phase_envelope,
         plan_schedule,
@@ -544,6 +552,24 @@ def bench_bytes_moved() -> dict:
             n=n, schedule=sched, envelope=env
         ),
     }
+    # hierarchical (schema v5): same draw planned two-level with the
+    # SAME decomposition knobs as the flat plan (min_fill prunes low-
+    # fill phases at both levels); each level's own envelope rides its
+    # child table, the composed fabric sums them
+    pod_size = 4
+    htab = hierarchical_plan(
+        regime, pod_size, n_layers=1,
+        decompose_kwargs={"min_fill": 0.1},
+    )
+    hier_tokens = get_fabric("hierarchical").dispatch_tokens_split(
+        n=n, schedule=htab.row(0)
+    )
+    # the off-block-diagonal share of the flat ragged plan: envelope
+    # slots whose live phase permutation crosses the pod seam — the wire
+    # budget the flat plan already spends on inter-host traffic
+    pod_of = np.arange(n) // pod_size
+    cross = pod_of[np.asarray(sched.perms)] != pod_of[None, :]
+    off_block = phase_dispatch_tokens(np.asarray(sched.valid) & cross, env)
     # the single-device dense emulation's padded figure, side by side
     # with the live plan bytes (the gap is the emulation tax)
     padded_tokens = {
@@ -553,19 +579,25 @@ def bench_bytes_moved() -> dict:
     }
     # per-wire-dtype rows (schema v4): the same slot counts priced at
     # each registered codec's wire format (payload + per-slot scale
-    # sidecar) — the bf16 row reproduces the legacy ``fabrics`` table
-    wire_mb = {
-        w: {
-            k: round(
-                float(np.mean(v))
-                * wire_bytes_per_token(d_model, w, dtype_bytes)
-                / 2**20,
-                3,
-            )
-            for k, v in fabric_tokens.items()
+    # sidecar) — the bf16 row reproduces the legacy ``fabrics`` table.
+    # The hierarchical split prices like the fabric's dispatch_bytes:
+    # intra slots always ride the electrical links at compute width
+    # (the codec never touches them), only inter slots take the codec.
+    def _wire_row(w: str) -> dict:
+        at = lambda t, fmt: round(
+            float(np.mean(t))
+            * wire_bytes_per_token(d_model, fmt, dtype_bytes)
+            / 2**20,
+            3,
+        )
+        row = {k: at(v, w) for k, v in fabric_tokens.items()}
+        row["hierarchical"] = {
+            "intra": at(hier_tokens["intra"], "bf16"),
+            "inter": at(hier_tokens["inter"], w),
         }
-        for w in sorted(WIRE_DTYPES)
-    }
+        return row
+
+    wire_mb = {w: _wire_row(w) for w in sorted(WIRE_DTYPES)}
     out = {
         "n": n,
         "phases": sched.num_phases,
@@ -580,8 +612,17 @@ def bench_bytes_moved() -> dict:
         "envelope_overhead_vs_static": round(
             float(np.mean(phase)) / max(float(np.mean(static)), 1e-9), 3
         ),
-        # per-fabric rows via the registry's own accounting (schema v2)
-        "fabrics": {k: to_mb(v) for k, v in fabric_tokens.items()},
+        # per-fabric rows via the registry's own accounting (schema v2;
+        # the hierarchical intra/inter split is the schema v5 addition)
+        "fabrics": {
+            **{k: to_mb(v) for k, v in fabric_tokens.items()},
+            "hierarchical": {
+                "intra": to_mb(hier_tokens["intra"]),
+                "inter": to_mb(hier_tokens["inter"]),
+            },
+        },
+        "pod_size": pod_size,
+        "ragged_off_block_mb_per_rank": to_mb(off_block),
         # dense-emulation padded bytes next to the live rows (schema v3)
         "fabrics_padded": {k: to_mb(v) for k, v in padded_tokens.items()},
         # per-wire-dtype bytes rows (schema v4)
@@ -615,6 +656,18 @@ def bench_bytes_moved() -> dict:
             out["wire"][w]["ragged_a2a"]
             <= 0.55 * out["wire"]["bf16"]["ragged_a2a"]
         ), out
+    # acceptance (schema v5): planning only the seam-crossing demand
+    # must not cost more inter-host wire than the flat ragged plan
+    # already spends crossing the seam on this skewed draw — and that
+    # off-block share is itself a fraction of the full ragged row
+    hier = fx["hierarchical"]
+    assert hier["inter"] <= out["ragged_off_block_mb_per_rank"], out
+    assert out["ragged_off_block_mb_per_rank"] <= fx["ragged_a2a"], out
+    # the codec prices only the inter seam: intra is bf16 under every
+    # wire dtype, inter shrinks with the quantized payload
+    for w in ("fp8", "int8"):
+        assert out["wire"][w]["hierarchical"]["intra"] == hier["intra"], out
+        assert out["wire"][w]["hierarchical"]["inter"] < hier["inter"], out
     return out
 
 
@@ -846,9 +899,16 @@ def run() -> dict:
         f"{bm['phase_env_mb_per_rank']}MB ({bm['saving_vs_monolithic']:.0%} "
         f"saved; static ppermute floor {bm['static_ppermute_mb_per_rank']}MB)"
     )
+    fmt_row = lambda v: (
+        "+".join(f"{lvl}:{mb}" for lvl, mb in v.items())
+        if isinstance(v, dict)
+        else v
+    )
     print(
         "per-fabric MB/rank: "
-        + ", ".join(f"{k}={v}" for k, v in sorted(bm["fabrics"].items()))
+        + ", ".join(f"{k}={fmt_row(v)}" for k, v in sorted(bm["fabrics"].items()))
+        + f" (pod_size={bm['pod_size']}, ragged off-block share "
+        f"{bm['ragged_off_block_mb_per_rank']}MB)"
     )
     ft = results["faults"]
     print(

@@ -30,9 +30,14 @@ import sys
 # wire): ``bytes_moved`` gains ``wire`` — one per-fabric MB row per
 # registered wire codec (bf16/fp8/int8), with the quantized ragged_a2a
 # rows required to sit at or below 0.55x the bf16 envelope bytes (the
-# CI-asserted payoff of quantized dispatch).  Old history entries (lower
-# or no version field) validate against their own version.
-SCHEMA_VERSION = 4
+# CI-asserted payoff of quantized dispatch).  v5 (PR 9, hierarchical
+# fabric): ``bytes_moved.fabrics`` (and each ``wire`` codec table)
+# gains a ``hierarchical`` row split into ``intra``/``inter`` MB/rank —
+# the two composed levels are priced separately because only the inter
+# seam rides the circuit fabric (and the wire codec).  Old history
+# entries (lower or no version field) validate against their own
+# version.
+SCHEMA_VERSION = 5
 
 # per-fabric bytes rows every v2 entry must carry (the registry's five
 # backends; listed literally so a malformed bench can't weaken the check
@@ -57,6 +62,10 @@ _V3_PADDED_ROWS = ("phase_pipelined",)
 # row) and the quantized-envelope acceptance ratio vs the bf16 row
 _V4_WIRE_DTYPES = ("bf16", "fp8", "int8")
 _V4_WIRE_RATIO = 0.55
+
+# v5: the hierarchical fabric's bytes split into its two levels (keys of
+# the ``hierarchical`` row object, in ``fabrics`` and every wire table)
+_V5_HIER_LEVELS = ("intra", "inter")
 
 # (key, required, allowed types).  Sections added later (bytes_moved in
 # PR 4, schema_version in PR 5) are optional so pre-existing history
@@ -257,6 +266,38 @@ def validate_entry(
                                 f" {rows['ragged_a2a']} exceeds "
                                 f"{_V4_WIRE_RATIO} x bf16 row ({base})"
                             )
+    # v5: the hierarchical row splits into intra/inter levels — in the
+    # fabrics table and in every wire codec table.
+    if version >= 5 or require_current:
+        bm = entry.get("bytes_moved")
+        if isinstance(bm, dict):  # absence already reported by the v2 block
+
+            def _check_hier(rows: dict, label: str) -> None:
+                h = rows.get("hierarchical")
+                if not isinstance(h, dict):
+                    errs.append(
+                        f"{label}: v5 entries need a 'hierarchical' "
+                        "object split into intra/inter MB/rank rows"
+                    )
+                    return
+                for lvl in _V5_HIER_LEVELS:
+                    if lvl not in h:
+                        errs.append(f"{label}.hierarchical: missing {lvl!r}")
+                    elif not _is_number(h[lvl]):
+                        errs.append(
+                            f"{label}.hierarchical.{lvl}: not a finite "
+                            f"number ({h[lvl]!r})"
+                        )
+
+            fx = bm.get("fabrics")
+            if isinstance(fx, dict):  # absence already reported (v2)
+                _check_hier(fx, f"{where}.bytes_moved.fabrics")
+            wire = bm.get("wire")
+            if isinstance(wire, dict):  # absence already reported (v4)
+                for w in _V4_WIRE_DTYPES:
+                    rows = wire.get(w)
+                    if isinstance(rows, dict):  # absence reported (v4)
+                        _check_hier(rows, f"{where}.bytes_moved.wire.{w}")
     return errs
 
 

@@ -32,6 +32,13 @@ recompiled.  This smoke guards the properties per fabric:
    the wire codec is static config (QDQ ops traced into the step, not
    traced data), so quantized phase_pipelined/ragged_a2a steps must
    swap re-planned tables at ZERO recompiles, exactly like bf16.
+8. **Hierarchical dual-table swaps** (PR 9): a ``HierarchicalTable``
+   carries BOTH levels' plans as one pytree (per-level envelopes are
+   the static aux): an intra-only re-plan and a both-level re-plan must
+   each swap into the jitted step at ZERO recompiles, and in the fused
+   device-controller step an intra-only drift must fire only the intra
+   ``lax.cond`` — the inter phase-plan leaves pass through untouched
+   (no inter re-plan, no retrace).
 
 Exit code != 0 on regression, so CI fails fast.
 
@@ -84,6 +91,22 @@ def _table(n_layers: int, n_ranks: int = 4, seed: int = 0, envelope=None):
     )
 
 
+def _htraffics(n_layers: int, n_ranks: int = 4, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    ms = []
+    for _ in range(n_layers):
+        m = rng.random((n_ranks, n_ranks)) * 500
+        np.fill_diagonal(m, 0)
+        ms.append(m)
+    return np.stack(ms)
+
+
+def _htable(n_layers: int, seed: int = 0, pod_size: int = 2):
+    from repro.core import hierarchical_plan
+
+    return hierarchical_plan(_htraffics(n_layers, seed=seed), pod_size)
+
+
 def _schedule_for(fabric: str, n_layers: int):
     """A schedule the fabric consumes on a single device (where mesh
     fabrics run through the virtual dense fallback — the traced-row
@@ -92,6 +115,8 @@ def _schedule_for(fabric: str, n_layers: int):
 
     if fabric in ("dense", "a2a"):
         return None
+    if fabric == "hierarchical":
+        return _htable(n_layers)  # the composed two-level table
     if get_fabric(fabric).schedule_kind == "static":
         return None  # static plans can't ride the scan as traced rows
     envelope = "auto" if get_fabric(fabric).requires_envelope else None
@@ -129,6 +154,7 @@ def main() -> int:
         key = (
             sched2 is None,
             getattr(sched2, "envelope", None) is not None,
+            type(sched2).__name__,  # HierarchicalTable lowers its own body
         )
         if key not in lowered:
             lowered[key] = (
@@ -359,6 +385,118 @@ def main() -> int:
             )
             return 1
 
+    # 8. hierarchical dual-table swaps (PR 9): the composed table's two
+    # levels swap independently into the SAME executable, and in the
+    # fused controller step an intra-only drift fires only the intra
+    # re-plan cond — the inter plan leaves pass through untouched
+    from repro.core import (
+        HierarchicalDeviceController,
+        HierarchicalRuntime,
+        hierarchical_decompose,
+        plan_schedule,
+    )
+
+    model_h = _model(4, "hierarchical")
+    params_h = model_h.init(jax.random.PRNGKey(0))
+    htab = _htable(4, seed=1)
+    w = jax.jit(lambda p, b, s: model_h.loss(p, b, schedule=s))
+    w(params_h, batch, htab)
+    intra_scheds, inter_scheds = [], []
+    for mat in _htraffics(4, seed=1) * 0.7:
+        i_d, e_d = hierarchical_decompose(mat, 2)
+        intra_scheds.append(plan_schedule(i_d))
+        inter_scheds.append(plan_schedule(e_d))
+    alt_intra = htab.update(intra=htab.intra.update(intra_scheds))
+    w(params_h, batch, alt_intra)
+    cache_hi = w._cache_size()
+    alt_both = alt_intra.update(inter=htab.inter.update(inter_scheds))
+    w(params_h, batch, alt_both)
+    cache_hb = w._cache_size()
+    print(
+        f"executable cache after hierarchical intra-only swap: {cache_hi}; "
+        f"after dual-table swap: {cache_hb}"
+    )
+    if cache_hi != 1 or cache_hb != 1:
+        print(
+            "FAIL: hierarchical dual-table swaps must reuse the one "
+            "executable (per-level envelopes are the static aux)"
+        )
+        return 1
+
+    # fused step: prime the intra level off-estimate (the realized
+    # routing will drift it) while the inter level is primed with the
+    # EXACT realized inter traffic — only the intra cond may fire
+    from repro.core.runtime import routing_to_traffic
+
+    model_h2 = _model(2, "hierarchical")
+    params_h2 = model_h2.init(jax.random.PRNGKey(0))
+    tokens_h = jnp.zeros((8, 32), jnp.int32)
+    batch_h = {"tokens": tokens_h, "targets": tokens_h}
+    probe = _htable(2, seed=1)
+    _, aux_h = model_h2.loss_and_stats(params_h2, batch_h, schedule=probe)
+    realized = routing_to_traffic(
+        np.asarray(aux_h["routing"]), n_ranks=4, n_experts=8
+    )
+    from repro.core.hierarchical import same_pod_mask as _same_pod
+
+    same = _same_pod(4, 2)
+    skew_h = realized.copy()
+    skew_h[:, same] = 1.0  # intra estimate far off the realized counts
+    for layer in skew_h:
+        layer[0, 1] = layer[2, 3] = 500.0
+        np.fill_diagonal(layer, 0.0)
+    hrt = HierarchicalRuntime(
+        ControllerConfig(n_ranks=4, n_experts=8, ema=1.0, cooldown=0),
+        2, pod_size=2,
+    )
+    hrt.prime(skew_h)  # per-layer: the inter estimate is exact
+    hctrl, hstate = HierarchicalDeviceController.from_runtime(
+        hrt, hysteresis_steps=1, cooldown=0
+    )
+    inter0 = jax.tree.leaves(hctrl.inter.table_of(hstate.inter))
+    # lr=0 freezes the router: realized routing is identical every step,
+    # so the ONLY drift is the skewed intra estimate — the cleanest
+    # intra-only-drift stimulus
+    opt_h = AdamW(lr=0.0)
+    fused_h = jax.jit(make_train_step(model_h2, opt_h, controller=hctrl))
+    opt_state_h = opt_h.init(params_h2)
+    ef_h = {}
+    for _ in range(6):
+        params_h2, opt_state_h, ef_h, hstate, _m = fused_h(
+            params_h2, opt_state_h, ef_h, batch_h, hstate
+        )
+    intra_replans = int(hstate.intra.replans)
+    inter_replans = int(hstate.inter.replans)
+    cache_hf = fused_h._cache_size()
+    inter1 = jax.tree.leaves(hctrl.inter.table_of(hstate.inter))
+    inter_same = all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(inter0, inter1)
+    )
+    print(
+        f"fused hierarchical step: {intra_replans} intra re-plans, "
+        f"{inter_replans} inter re-plans, cache {cache_hf}, "
+        f"inter plan leaves unchanged: {inter_same}"
+    )
+    if intra_replans < 1:
+        print(
+            "FAIL: the skewed intra estimate vs realized routing must "
+            "fire the intra in-graph re-plan"
+        )
+        return 1
+    if inter_replans != 0 or not inter_same:
+        print(
+            "FAIL: intra-only drift must leave the inter phase plan "
+            "untouched (no inter re-plan, identical plan leaves)"
+        )
+        return 1
+    if cache_hf != 1:
+        print(
+            "FAIL: the fused hierarchical controller step must stay ONE "
+            "executable across intra-only drift re-plans"
+        )
+        return 1
+
     print(
         "OK: depth-L scan traces one layer body for every fabric "
         f"({', '.join(fabric_names())}; single-device lowering — mesh "
@@ -367,7 +505,9 @@ def main() -> int:
         "adaptive shrink each retrace once; masked fault re-plans swap "
         "free both ways; the fused device-controller step is one "
         "executable with in-graph re-plans at zero recompiles; fp8-wire "
-        "phase_pipelined/ragged steps swap tables at zero recompiles)"
+        "phase_pipelined/ragged steps swap tables at zero recompiles; "
+        "hierarchical dual tables swap both levels at zero recompiles "
+        "with intra drift never retracing the inter plan)"
     )
     return 0
 

@@ -35,18 +35,28 @@ def make_controller(cfg, args):
     if cfg.moe is None or cfg.moe.n_experts % args.virtual_ranks:
         print("controller disabled: arch has no EP-compatible MoE")
         return None, None
-    from repro.core import ControllerConfig, DriftScenario, ScheduleRuntime
-
-    runtime = ScheduleRuntime(
-        ControllerConfig(
-            n_ranks=args.virtual_ranks,
-            n_experts=cfg.moe.n_experts,
-            ema=0.6,
-            cooldown=1,
-            group_by="model",
-        ),
-        Model(cfg).n_moe_layers,
+    from repro.core import (
+        ControllerConfig,
+        DriftScenario,
+        HierarchicalRuntime,
+        ScheduleRuntime,
     )
+
+    ctrl_cfg = ControllerConfig(
+        n_ranks=args.virtual_ranks,
+        n_experts=cfg.moe.n_experts,
+        ema=0.6,
+        cooldown=1,
+        group_by="model",
+    )
+    if cfg.moe.dispatch == "hierarchical":
+        # two-level controller: each level re-plans on its own traffic
+        # split, so intra drift never forces a circuit re-plan
+        runtime = HierarchicalRuntime(
+            ctrl_cfg, Model(cfg).n_moe_layers, pod_size=cfg.moe.pod_size
+        )
+    else:
+        runtime = ScheduleRuntime(ctrl_cfg, Model(cfg).n_moe_layers)
     scenario = DriftScenario(
         args.drift,
         cfg.moe.n_experts,
@@ -69,7 +79,11 @@ def serve_device(model, params, cfg, args, runtime, scenario, max_len) -> None:
     """
     import numpy as np
 
-    from repro.core import DeviceController
+    from repro.core import (
+        DeviceController,
+        HierarchicalDeviceController,
+        HierarchicalRuntime,
+    )
 
     # prime the host runtime from the round-0 demand estimate, then lift
     # it into (controller, state); the host planner never runs again
@@ -79,7 +93,14 @@ def serve_device(model, params, cfg, args, runtime, scenario, max_len) -> None:
         (runtime.n_layers, 1, cfg.moe.n_experts),
     )
     runtime.observe(stats0)
-    ctrl, state = DeviceController.from_runtime(runtime)
+    # the composed fabric lifts into the two-level controller: both
+    # tables live on device and each level re-plans on its own split
+    ctrl_cls = (
+        HierarchicalDeviceController
+        if isinstance(runtime, HierarchicalRuntime)
+        else DeviceController
+    )
+    ctrl, state = ctrl_cls.from_runtime(runtime)
     host_replans0 = runtime.summary()["replan_events"]
 
     prefill = jax.jit(model.prefill)
@@ -221,6 +242,12 @@ def main() -> None:
         help="override the wire codec (fp8/int8 quantize cross-rank "
         "dispatch slots; bf16 is the bit-exact passthrough)",
     )
+    ap.add_argument(
+        "--pod-size", type=int, default=None,
+        help="ranks per pod for --dispatch=hierarchical (must divide "
+        "--virtual-ranks; pod-local slots stay bf16 on the electrical "
+        "level, only the circuit-scheduled remainder takes the codec)",
+    )
     args = ap.parse_args()
 
     cfg = smoke_config(args.arch)  # reduced config: CPU-friendly demo
@@ -231,6 +258,10 @@ def main() -> None:
     if args.wire_dtype and cfg.moe is not None:
         cfg = dataclasses.replace(
             cfg, moe=dataclasses.replace(cfg.moe, wire_dtype=args.wire_dtype)
+        )
+    if args.pod_size and cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, pod_size=args.pod_size)
         )
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))

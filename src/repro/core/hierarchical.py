@@ -1,4 +1,4 @@
-"""Hierarchical (pod-aware) decomposition — beyond-paper extension.
+"""Hierarchical (pod-aware) decomposition and the two-level controller.
 
 Multi-pod fabrics are two-level: fast intra-pod links (ICI, ~50 GB/s) and
 slower inter-pod links (DCI).  A *flat* decomposition is oblivious: any
@@ -15,18 +15,86 @@ slow link's duration.  The hierarchical scheduler splits the traffic:
 Intra and inter fabrics are disjoint hardware, so the two schedules
 execute concurrently; makespan = max(intra, inter) + compute pipeline.
 ``simulate_hierarchical`` reuses the paper's simulator per level.
+
+Beyond the offline planner, this module owns the *executable* two-level
+path (the ``hierarchical`` fabric backend consumes it):
+
+  * ``HierarchicalTable`` — a registered pytree pairing an intra and an
+    inter ``ScheduleTable`` (plus the static ``pod_size`` aux).  Either
+    child can be swapped independently (``update``) without touching the
+    other — which is what keeps intra drift re-plans from invalidating
+    the inter circuit plan.
+  * ``hierarchical_plan`` / ``hierarchical_plan_traced`` — the host and
+    in-graph planners emitting ``(intra, inter)`` plans; the traced form
+    reuses ``greedy_phases_jax`` per level, batching the block-diagonal
+    intra solve over pods exactly as the host ``decompose_batch(blocks,
+    ...)`` does.
+  * ``HierarchicalRuntime`` — a ``ScheduleRuntime`` subclass acting as
+    the inter (circuit) level, carrying an internal intra runtime; each
+    level observes only its half of the traffic, so their re-plan
+    decisions are independent.
+  * ``HierarchicalDeviceController`` — the device-resident twin: one
+    routing fold, a traced split, and two ``lax.cond`` re-plan branches.
 """
 
 from __future__ import annotations
 
+import dataclasses
+
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.cost_models import CommModel, ComputeModel
 from repro.core.decompose import decompose, decompose_batch
+from repro.core.device_controller import (
+    DeviceController,
+    DeviceControllerState,
+    routing_to_traffic_traced,
+)
+from repro.core.lap_jax import greedy_phases_jax
+from repro.core.runtime import Decision, ScheduleRuntime
+from repro.core.schedule import ScheduleTable, plan_schedule
 from repro.core.simulator import SimResult, simulate_decomposition
 from repro.core.types import Decomposition, StackedPhases
 
-__all__ = ["split_traffic", "hierarchical_decompose", "simulate_hierarchical"]
+__all__ = [
+    "HierarchicalControllerState",
+    "HierarchicalDeviceController",
+    "HierarchicalRuntime",
+    "HierarchicalTable",
+    "check_pod_size",
+    "hierarchical_decompose",
+    "hierarchical_plan",
+    "hierarchical_plan_traced",
+    "same_pod_mask",
+    "simulate_hierarchical",
+    "split_traffic",
+    "split_traffic_traced",
+]
+
+
+def check_pod_size(n: int, pod_size: int) -> int:
+    """Validate that ``pod_size`` tiles an ``n``-rank fabric into whole
+    pods.  Raises a named ``ValueError`` (CLI misuse must not surface as
+    a bare assert) and returns the validated int."""
+    n = int(n)
+    p = int(pod_size)
+    if p < 1 or n % p:
+        divisors = [d for d in range(1, n + 1) if n % d == 0]
+        raise ValueError(
+            f"pod_size={pod_size} does not tile the n={n} rank fabric "
+            f"into whole pods; valid divisors of {n}: {divisors}"
+        )
+    return p
+
+
+def same_pod_mask(n: int, pod_size: int) -> np.ndarray:
+    """``[n, n]`` bool — True where src and dst share a pod (the
+    block-diagonal region, including the diagonal itself)."""
+    check_pod_size(n, pod_size)
+    pod = np.arange(n) // pod_size
+    return pod[:, None] == pod[None, :]
 
 
 def split_traffic(matrix: np.ndarray, pod_size: int):
@@ -34,22 +102,41 @@ def split_traffic(matrix: np.ndarray, pod_size: int):
 
     Every entry lands in exactly one part (``intra + inter == matrix``
     identically — the partition neither drops nor duplicates demand mass).
+    Batched over any leading dims (``[..., n, n]``).
     """
     a = np.asarray(matrix, dtype=np.float64)
-    n = a.shape[0]
-    assert n % pod_size == 0, (n, pod_size)
-    mask = (np.arange(n)[:, None] // pod_size) == (
-        np.arange(n)[None, :] // pod_size
-    )
+    n = a.shape[-1]
+    check_pod_size(n, pod_size)
+    mask = same_pod_mask(n, pod_size)
     intra = np.where(mask, a, 0.0)
     inter = np.where(mask, 0.0, a)
     return intra, inter
 
 
+def split_traffic_traced(matrix: jax.Array, pod_size: int):
+    """Traced twin of ``split_traffic``: ``[..., n, n]`` device arrays in,
+    ``(intra, inter)`` out.  ``pod_size`` is static (trace-time)."""
+    a = jnp.asarray(matrix, jnp.float32)
+    n = a.shape[-1]
+    check_pod_size(n, pod_size)
+    pod = jnp.arange(n, dtype=jnp.int32) // pod_size
+    mask = pod[:, None] == pod[None, :]
+    return jnp.where(mask, a, 0.0), jnp.where(mask, 0.0, a)
+
+
 def _union_pod_phases(decomps, pod_size: int, n: int, intra_offdiag) -> Decomposition:
     """Combine per-pod decompositions: phase k = block-diagonal union of
     each pod's phase k (identity in exhausted pods — pods' circuits run
-    in parallel, so the union's duration is the max pod phase)."""
+    in parallel, so the union's duration is the max pod phase).
+
+    Invariant: ``intra_offdiag`` (and therefore the returned
+    ``Decomposition.matrix``) has a ZERO diagonal.  The per-pod
+    decompositions run ``keep_diagonal=False``, so no phase ever carries
+    local (src == dst) tokens — the union's ``matrix`` must match, or
+    ``simulate_decomposition(..., local_tokens=...)`` would count the
+    diagonal twice: once as phase traffic and once as the local-compute
+    term.  Regression-tested in ``tests/test_hierarchical.py``.
+    """
     k_max = max((d.num_phases for d in decomps), default=0)
     perms = np.broadcast_to(np.arange(n), (k_max, n)).copy()
     alloc = np.zeros((k_max, n))
@@ -71,9 +158,14 @@ def _union_pod_phases(decomps, pod_size: int, n: int, intra_offdiag) -> Decompos
 
 
 def hierarchical_decompose(
-    matrix: np.ndarray, pod_size: int, strategy: str = "maxweight"
+    matrix: np.ndarray, pod_size: int, strategy: str = "maxweight", **kwargs
 ):
-    """Returns (intra Decomposition over n ranks, inter Decomposition)."""
+    """Returns (intra Decomposition over n ranks, inter Decomposition).
+
+    ``kwargs`` forward to both levels' decompositions (``min_fill`` etc.
+    — the same knobs ``decompose`` takes), so a two-level plan can be
+    pruned/configured exactly like the flat plan it is compared against.
+    """
     a = np.asarray(matrix, dtype=np.float64)
     n = a.shape[0]
     intra, inter = split_traffic(a, pod_size)
@@ -83,13 +175,517 @@ def hierarchical_decompose(
         intra.reshape(pods, pod_size, pods, pod_size)
         .transpose(0, 2, 1, 3)[np.arange(pods), np.arange(pods)]
     )
-    per_pod = decompose_batch(blocks, strategy, keep_diagonal=False)
+    per_pod = decompose_batch(blocks, strategy, keep_diagonal=False, **kwargs)
+    # the union Decomposition's matrix excludes local (diagonal) tokens:
+    # see the _union_pod_phases invariant
     intra_offdiag = intra.copy()
     np.fill_diagonal(intra_offdiag, 0.0)
     intra_d = _union_pod_phases(per_pod, pod_size, n, intra_offdiag)
-    inter_d = decompose(inter, strategy, keep_diagonal=True)
+    inter_d = decompose(inter, strategy, keep_diagonal=True, **kwargs)
     inter_d.strategy = "hier-inter"
     return intra_d, inter_d
+
+
+# --------------------------------------------------------------------------
+# The executable two-level path: tables and planners
+# --------------------------------------------------------------------------
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class HierarchicalTable:
+    """An intra and an inter ``ScheduleTable`` riding as ONE pytree.
+
+    The children are ordinary array pytrees (leaves swap without
+    recompiling); ``pod_size`` is static aux — like the envelope, it is
+    part of the jit cache key.  ``row(l)`` slices both children, so the
+    pair rides ``lax.scan`` exactly as a flat table does.
+
+    ``merged()`` folds the pair into one flat ``ScheduleTable`` whose
+    phase axis is ``[intra slots | inter slots]`` — the form the shared
+    phase-pipelined geometry consumes.  Each child's served-phase prefix
+    is folded into ``valid``/``caps`` and the merged ``n_phases`` is the
+    constant total slot count, so the prefix test downstream
+    (``arange(k_max) < n_phases``) cannot gate live inter slots behind a
+    pod's shorter intra plan.
+    """
+
+    intra: ScheduleTable
+    inter: ScheduleTable
+    pod_size: int = 2
+
+    def tree_flatten(self):
+        return (self.intra, self.inter), self.pod_size
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(intra=children[0], inter=children[1], pod_size=aux)
+
+    # ------------------------------------------------ delegated geometry
+    @property
+    def is_row(self) -> bool:
+        return self.intra.is_row
+
+    @property
+    def n(self) -> int:
+        return self.intra.n
+
+    @property
+    def k_max(self) -> int:
+        return self.intra.k_max + self.inter.k_max
+
+    @property
+    def num_layers(self) -> int:
+        return self.intra.num_layers
+
+    @property
+    def envelope(self):
+        """Concatenated static envelope (None unless both levels carry
+        one — the hierarchical fabric requires both)."""
+        if self.intra.envelope is None or self.inter.envelope is None:
+            return None
+        return tuple(self.intra.envelope) + tuple(self.inter.envelope)
+
+    def row(self, l):
+        return HierarchicalTable(
+            self.intra.row(l), self.inter.row(l), self.pod_size
+        )
+
+    def update(self, intra=None, inter=None) -> "HierarchicalTable":
+        """Swap either level's table independently — intra drift re-plans
+        leave the inter plan arrays (and the static aux) untouched."""
+        return HierarchicalTable(
+            intra if intra is not None else self.intra,
+            inter if inter is not None else self.inter,
+            self.pod_size,
+        )
+
+    def pair_caps(self, e_local: int):
+        """Per-(src, dst) planned per-expert capacity: each pair lives in
+        exactly one level, so the sum is the pair's own level's cap."""
+        return self.intra.pair_caps(e_local) + self.inter.pair_caps(e_local)
+
+    def envelope_slots(self, e_local: int):
+        return tuple(self.intra.envelope_slots(e_local)) + tuple(
+            self.inter.envelope_slots(e_local)
+        )
+
+    def merged(self) -> ScheduleTable:
+        ia, ie = self.intra, self.inter
+
+        def on(tab):
+            k = jnp.arange(tab.k_max)
+            if tab.is_row:
+                return k < tab.n_phases
+            return k[None, :] < tab.n_phases[:, None]
+
+        on_i, on_e = on(ia), on(ie)
+        return ScheduleTable(
+            perms=jnp.concatenate([ia.perms, ie.perms], axis=-2),
+            caps=jnp.concatenate(
+                [jnp.where(on_i, ia.caps, 0), jnp.where(on_e, ie.caps, 0)],
+                axis=-1,
+            ),
+            valid=jnp.concatenate(
+                [ia.valid & on_i[..., None], ie.valid & on_e[..., None]],
+                axis=-2,
+            ),
+            offsets=jnp.concatenate([ia.offsets, ie.offsets], axis=-2),
+            n_phases=jnp.full_like(ie.n_phases, ia.k_max + ie.k_max),
+            envelope=self.envelope,
+        )
+
+
+def hierarchical_plan(
+    traffic: np.ndarray,
+    pod_size: int,
+    *,
+    n_layers: int | None = None,
+    strategy: str = "maxweight",
+    k_max_intra: int | None = None,
+    k_max_inter: int | None = None,
+    envelope="auto",
+    decompose_kwargs: dict | None = None,
+    **plan_kwargs,
+) -> HierarchicalTable:
+    """Host two-level planner: traffic → ``HierarchicalTable``.
+
+    ``traffic``: ``[n, n]`` (broadcast over ``n_layers``) or ``[L, n, n]``.
+    Per layer, ``hierarchical_decompose`` splits and decomposes both
+    levels (``decompose_kwargs`` — e.g. ``min_fill`` — forward to the
+    per-level decompositions); ``plan_schedule(**plan_kwargs)`` turns
+    each into an ``A2ASchedule``; the per-level
+    ``ScheduleTable.from_schedules`` stack carries its own envelope
+    (``"auto"`` derives it from the plans).
+    """
+    t = np.asarray(traffic, dtype=np.float64)
+    if t.ndim == 2:
+        t = np.broadcast_to(t, (n_layers or 1, *t.shape))
+    check_pod_size(t.shape[-1], pod_size)
+    intra_s, inter_s = [], []
+    for layer in t:
+        intra_d, inter_d = hierarchical_decompose(
+            layer, pod_size, strategy, **(decompose_kwargs or {})
+        )
+        intra_s.append(plan_schedule(intra_d, **plan_kwargs))
+        inter_s.append(plan_schedule(inter_d, **plan_kwargs))
+    return HierarchicalTable(
+        intra=ScheduleTable.from_schedules(
+            intra_s, k_max=k_max_intra, clip=True, envelope=envelope
+        ),
+        inter=ScheduleTable.from_schedules(
+            inter_s, k_max=k_max_inter, clip=True, envelope=envelope
+        ),
+        pod_size=int(pod_size),
+    )
+
+
+def hierarchical_plan_traced(
+    traffic: jax.Array,
+    pod_size: int,
+    *,
+    k_max_intra: int,
+    k_max_inter: int,
+    quantum: int = 8,
+    min_cap: int = 8,
+    slack: float = 1.0,
+    mask: jax.Array | None = None,
+    max_rounds: int = 20_000,
+) -> dict:
+    """In-graph two-level planner: ``greedy_phases_jax`` per level.
+
+    The intra level batches the per-pod block-diagonal solves through ONE
+    ``greedy_phases_jax`` call over ``[L * pods, p, p]`` blocks — the
+    traced twin of the host ``decompose_batch(blocks, ...)`` — then lifts
+    each pod's perms by its rank base and unions them into full-fabric
+    ``[L, K, n]`` leaves (identity + ``valid=False`` where a pod ran out
+    of phases; the union phase cap is the max pod cap, matching the host
+    scalar-cap semantics).  The inter level solves the off-block
+    remainder globally.
+
+    ``mask`` (``[n, n]`` bool, True = usable) zeroes dead-pair demand in
+    both levels; callers wanting displaced demand re-routed apply
+    ``apply_link_mask_traced`` first, like the flat controller.
+
+    Returns ``{"intra": leaves, "inter": leaves}`` — each a dict of
+    ``perms``/``caps``/``valid``/``n_phases`` shaped like the matching
+    ``ScheduleTable``.
+    """
+    a = jnp.asarray(traffic, jnp.float32)
+    L, n, _ = a.shape
+    check_pod_size(n, pod_size)
+    if mask is not None:
+        a = jnp.where(jnp.asarray(mask, bool)[None], a, 0.0)
+    intra, inter = split_traffic_traced(a, pod_size)
+    pods = n // pod_size
+
+    # ----- intra: one batched solve over the [L * pods] diagonal blocks
+    blocks = intra.reshape(L, pods, pod_size, pods, pod_size).transpose(
+        0, 1, 3, 2, 4
+    )[:, jnp.arange(pods), jnp.arange(pods)]
+    bplan = greedy_phases_jax(
+        blocks.reshape(L * pods, pod_size, pod_size),
+        k_max=k_max_intra,
+        quantum=quantum,
+        min_cap=min_cap,
+        slack=slack,
+        max_rounds=max_rounds,
+    )
+    bases = jnp.arange(pods, dtype=jnp.int32) * pod_size
+    perms_b = bplan["perms"].reshape(L, pods, k_max_intra, pod_size)
+    intra_leaves = {
+        "perms": (perms_b + bases[None, :, None, None])
+        .transpose(0, 2, 1, 3)
+        .reshape(L, k_max_intra, n),
+        "caps": bplan["caps"].reshape(L, pods, k_max_intra).max(axis=1),
+        "valid": bplan["valid"]
+        .reshape(L, pods, k_max_intra, pod_size)
+        .transpose(0, 2, 1, 3)
+        .reshape(L, k_max_intra, n),
+        "n_phases": bplan["n_phases"].reshape(L, pods).max(axis=1),
+    }
+
+    # ----- inter: the off-block remainder, solved globally
+    iplan = greedy_phases_jax(
+        inter,
+        k_max=k_max_inter,
+        quantum=quantum,
+        min_cap=min_cap,
+        slack=slack,
+        mask=mask,
+        max_rounds=max_rounds,
+    )
+    inter_leaves = {
+        k: iplan[k] for k in ("perms", "caps", "valid", "n_phases")
+    }
+    return {"intra": intra_leaves, "inter": inter_leaves}
+
+
+# --------------------------------------------------------------------------
+# Host controller: the inter level IS a ScheduleRuntime, carrying an
+# internal intra runtime
+# --------------------------------------------------------------------------
+class HierarchicalRuntime(ScheduleRuntime):
+    """Two-level drift controller.
+
+    *This* runtime is the inter (circuit) level — it inherits the health
+    FSM, fault handling, and fallback chain, which belong to the slow
+    reconfigurable fabric — and it carries an internal
+    ``ScheduleRuntime`` for the intra (electrical) level.  Every
+    observation is split once (``split_traffic``) and fed to both
+    levels, so each level's EMA, selector library, and re-plan decisions
+    see only its own traffic: **intra drift never forces an inter
+    re-plan** (and vice versa), and ``table()`` pairs whatever each
+    level currently holds.
+    """
+
+    def __init__(
+        self,
+        cfg,
+        n_moe_layers: int,
+        *,
+        pod_size: int,
+        intra_cfg=None,
+    ):
+        self.pod_size = check_pod_size(cfg.n_ranks, pod_size)
+        super().__init__(cfg, n_moe_layers)
+        if intra_cfg is None:
+            # the electrical level has no circuit to degrade: health FSM
+            # and fallback switching stay on the inter level only
+            intra_cfg = dataclasses.replace(cfg, fallback_chain=())
+        if intra_cfg.n_ranks != cfg.n_ranks:
+            raise ValueError(
+                f"intra level plans over the same {cfg.n_ranks}-rank "
+                f"fabric (block-diagonal traffic); got "
+                f"intra_cfg.n_ranks={intra_cfg.n_ranks}"
+            )
+        self.intra = ScheduleRuntime(intra_cfg, n_moe_layers)
+
+    # ------------------------------------------------------------ observe
+    def observe_traffic(
+        self,
+        mats: np.ndarray,
+        *,
+        dropped_total: float | None = None,
+        loss: float | None = None,
+    ) -> Decision:
+        intra_m, inter_m = split_traffic(mats, self.pod_size)
+        d_intra = self.intra.observe_traffic(intra_m)
+        d_inter = super().observe_traffic(
+            inter_m, dropped_total=dropped_total, loss=loss
+        )
+        return Decision(
+            changed=d_intra.changed or d_inter.changed,
+            replanned=d_intra.replanned or d_inter.replanned,
+            key=(d_intra.key, d_inter.key),
+            actions=d_inter.actions,
+        )
+
+    def prime(self, traffic: np.ndarray) -> Decision:
+        intra_m, inter_m = split_traffic(
+            np.asarray(traffic, dtype=np.float64), self.pod_size
+        )
+        self.intra.prime(intra_m)
+        return super().prime(inter_m)
+
+    # -------------------------------------------------------------- state
+    def inter_table(self) -> ScheduleTable:
+        """The circuit level's own flat table (the parent-class build)."""
+        return ScheduleRuntime.table(self)
+
+    def table(self) -> HierarchicalTable:
+        """Both levels' current plans as one ``HierarchicalTable``.  Each
+        child is cached per assignment by its own runtime, so an
+        intra-only swap reuses the inter arrays untouched."""
+        return HierarchicalTable(
+            self.intra.table(), self.inter_table(), self.pod_size
+        )
+
+    def set_link_mask(self, mask: np.ndarray | None) -> None:
+        """PR 6 link masks apply per level: a dead same-pod link degrades
+        only the intra plan, a dead cross-pod link only the inter plan
+        (pairs outside a level's region are marked up — that level never
+        routes them, so they are not faults *there*)."""
+        if mask is None:
+            self.intra.set_link_mask(None)
+            super().set_link_mask(None)
+            return
+        m = np.asarray(mask, dtype=bool)
+        same = same_pod_mask(self.cfg.n_ranks, self.pod_size)
+        m_intra = m | ~same
+        m_inter = m | same
+        self.intra.set_link_mask(None if m_intra.all() else m_intra)
+        super().set_link_mask(None if m_inter.all() else m_inter)
+
+    def metrics(self) -> dict:
+        out = super().metrics()
+        out["pod_size"] = self.pod_size
+        out["intra"] = self.intra.metrics()
+        return out
+
+
+# --------------------------------------------------------------------------
+# Device-resident twin: two controller states, one routing fold
+# --------------------------------------------------------------------------
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class HierarchicalControllerState:
+    """Both levels' ``DeviceControllerState`` as one carry pytree."""
+
+    intra: DeviceControllerState
+    inter: DeviceControllerState
+
+    def tree_flatten(self):
+        return (self.intra, self.inter), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+
+class _InterLevelView:
+    """Duck-typed runtime view handing ``DeviceController.from_runtime``
+    the inter level of a ``HierarchicalRuntime`` (whose own ``table()``
+    returns the pair)."""
+
+    def __init__(self, runtime: HierarchicalRuntime):
+        self._rt = runtime
+
+    @property
+    def cfg(self):
+        return self._rt.cfg
+
+    @property
+    def _plan_kwargs(self):
+        return self._rt._plan_kwargs
+
+    @property
+    def _smoothed(self):
+        return self._rt._smoothed
+
+    @property
+    def _link_mask(self):
+        return self._rt._link_mask
+
+    def table(self):
+        return self._rt.inter_table()
+
+
+class HierarchicalDeviceController:
+    """Two ``DeviceController``s stepped from one routing fold.
+
+    ``step`` folds the routing counts once, splits the traffic in-graph
+    (``split_traffic_traced``), and steps each level — each with its own
+    EMA, drift streak, and ``lax.cond`` re-plan, so intra drift fires
+    only the (cheap, batched-over-pods) intra solve and the inter plan
+    leaves pass through untouched.
+    """
+
+    def __init__(
+        self,
+        intra: DeviceController,
+        inter: DeviceController,
+        pod_size: int,
+    ):
+        if intra.cfg.n_ranks != inter.cfg.n_ranks:
+            raise ValueError(
+                f"levels disagree on fabric size: intra n={intra.cfg.n_ranks}"
+                f" vs inter n={inter.cfg.n_ranks}"
+            )
+        self.pod_size = check_pod_size(inter.cfg.n_ranks, pod_size)
+        self.intra = intra
+        self.inter = inter
+
+    @classmethod
+    def from_runtime(cls, runtime: HierarchicalRuntime, **overrides):
+        """Lift a host ``HierarchicalRuntime`` into (controller, state)."""
+        ictrl, istate = DeviceController.from_runtime(
+            runtime.intra, **overrides
+        )
+        ectrl, estate = DeviceController.from_runtime(
+            _InterLevelView(runtime), **overrides
+        )
+        ctrl = cls(ictrl, ectrl, runtime.pod_size)
+        return ctrl, HierarchicalControllerState(intra=istate, inter=estate)
+
+    # ---------------------------------------------------------- lifecycle
+    def init_state(
+        self,
+        table: HierarchicalTable,
+        traffic: np.ndarray | None = None,
+        link_mask: np.ndarray | None = None,
+    ) -> HierarchicalControllerState:
+        t_intra = t_inter = None
+        if traffic is not None:
+            t_intra, t_inter = split_traffic(traffic, self.pod_size)
+        m_intra = m_inter = None
+        if link_mask is not None:
+            same = same_pod_mask(self.inter.cfg.n_ranks, self.pod_size)
+            m = np.asarray(link_mask, dtype=bool)
+            m_intra, m_inter = m | ~same, m | same
+        return HierarchicalControllerState(
+            intra=self.intra.init_state(
+                table.intra, traffic=t_intra, link_mask=m_intra
+            ),
+            inter=self.inter.init_state(
+                table.inter, traffic=t_inter, link_mask=m_inter
+            ),
+        )
+
+    def table_of(self, state: HierarchicalControllerState) -> HierarchicalTable:
+        return HierarchicalTable(
+            self.intra.table_of(state.intra),
+            self.inter.table_of(state.inter),
+            self.pod_size,
+        )
+
+    # --------------------------------------------------------------- step
+    def step(
+        self,
+        state: HierarchicalControllerState,
+        routing: jax.Array,
+        dropped: jax.Array | None = None,
+    ) -> HierarchicalControllerState:
+        cfg = self.inter.cfg
+        traffic = routing_to_traffic_traced(
+            routing, n_ranks=cfg.n_ranks, n_experts=cfg.n_experts
+        )
+        t_intra, t_inter = split_traffic_traced(traffic, self.pod_size)
+        # admitted-but-dropped accounting is charged once, on the circuit
+        # level (whose FSM consumes the spike counters)
+        return HierarchicalControllerState(
+            intra=self.intra.step_traffic(state.intra, t_intra),
+            inter=self.inter.step_traffic(state.inter, t_inter, dropped),
+        )
+
+    # ----------------------------------------------------------- incident
+    def set_link_mask(
+        self, state: HierarchicalControllerState, link_mask
+    ) -> HierarchicalControllerState:
+        """Per-level masking, like ``HierarchicalRuntime.set_link_mask``."""
+        same = jnp.asarray(
+            same_pod_mask(self.inter.cfg.n_ranks, self.pod_size)
+        )
+        m = jnp.asarray(link_mask, bool)
+        return HierarchicalControllerState(
+            intra=self.intra.set_link_mask(state.intra, m | ~same),
+            inter=self.inter.set_link_mask(state.inter, m | same),
+        )
+
+    # ------------------------------------------------------------ metrics
+    def metrics(self, state: HierarchicalControllerState) -> dict:
+        m_intra = self.intra.metrics(state.intra)
+        m_inter = self.inter.metrics(state.inter)
+        return {
+            "steps": m_inter["steps"],
+            "device_replans": m_intra["device_replans"]
+            + m_inter["device_replans"],
+            # dropped tokens are charged once, on the circuit level
+            "drop_fraction": m_inter["drop_fraction"],
+            "drop_spikes": m_inter["drop_spikes"],
+            "admitted_dropped": m_inter["admitted_dropped"],
+            "intra": m_intra,
+            "inter": m_inter,
+        }
 
 
 def simulate_hierarchical(

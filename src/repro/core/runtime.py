@@ -691,6 +691,26 @@ class ScheduleRuntime:
         mats = routing_to_traffic(
             stats, n_ranks=self.cfg.n_ranks, n_experts=self.cfg.n_experts
         )
+        decision = self.observe_traffic(
+            mats, dropped_total=dropped_total, loss=loss
+        )
+        now = time.perf_counter()
+        self.score_s += now - t1
+        self.observe_s += now - t0
+        return decision
+
+    def observe_traffic(
+        self,
+        mats: np.ndarray,
+        *,
+        dropped_total: float | None = None,
+        loss: float | None = None,
+    ) -> Decision:
+        """Score one step's already-folded traffic ``[L, n, n]``.
+
+        The EMA / propose / apply / health core of ``observe``, split out
+        so composed controllers (``HierarchicalRuntime``) can fold once
+        and feed each level its own split of the traffic."""
         if mats.shape[0] != self.n_layers:
             raise ValueError(
                 f"stats cover {mats.shape[0]} layers, runtime has {self.n_layers}"
@@ -711,9 +731,6 @@ class ScheduleRuntime:
             dropped_total=dropped_total,
             routed_total=float(mats.sum()),
         )
-        now = time.perf_counter()
-        self.score_s += now - t1
-        self.observe_s += now - t0
         return decision
 
     def prime(self, traffic: np.ndarray) -> Decision:

@@ -99,6 +99,21 @@ def cache_pspecs(cfg, caches_sds, batch: int):
     return jax.tree_util.tree_unflatten(treedef, specs)
 
 
+def expected_traffic(cfg, n: int, tokens_per_rank: int) -> np.ndarray:
+    """The launchers' day-one traffic estimate: one skewed draw from the
+    arch's router profile (the controller replaces it with realized
+    traffic as soon as it observes)."""
+    router = RouterConfig(cfg.name, cfg.moe.n_experts, cfg.moe.top_k)
+    rng = np.random.default_rng(0)
+    return traffic_matrix(
+        rng,
+        router,
+        np.full(n, max(tokens_per_rank, 1)),
+        n_ranks=n,
+        skew_alpha=0.3,
+    )
+
+
 def build_schedule(
     cfg, n: int, tokens_per_rank: int, strategy: str = "maxweight", plan: str = "literal"
 ):
@@ -109,15 +124,7 @@ def build_schedule(
       generous slack).  plan='v2': §Perf iteration — min-fill deferral in
       the decomposition, p90 quantile caps, tighter slack.
     """
-    router = RouterConfig(cfg.name, cfg.moe.n_experts, cfg.moe.top_k)
-    rng = np.random.default_rng(0)
-    mat = traffic_matrix(
-        rng,
-        router,
-        np.full(n, max(tokens_per_rank, 1)),
-        n_ranks=n,
-        skew_alpha=0.3,
-    )
+    mat = expected_traffic(cfg, n, tokens_per_rank)
     if plan == "v2":
         d = decompose(mat, strategy, min_fill=0.1)
         return plan_schedule(d, slack=1.1, quantum=8, cap_quantile=0.9)
@@ -133,6 +140,47 @@ def build_schedule(
 
         return plan_schedule_bvn(decompose(mat, "bvn"), quantum=8)
     return plan_schedule(decompose(mat, strategy), slack=1.3, quantum=8)
+
+
+def build_hierarchical_table(
+    cfg,
+    n: int,
+    tokens_per_rank: int,
+    n_moe_layers: int,
+    strategy: str = "maxweight",
+    plan: str = "literal",
+):
+    """Two-level analogue of ``build_schedule`` for the ``hierarchical``
+    fabric: the SAME expected-traffic draw, split at ``cfg.moe.pod_size``
+    and planned per level with the plan preset's knobs.  Returns a
+    ``HierarchicalTable`` with one row per MoE layer."""
+    from repro.core import hierarchical_plan
+
+    mat = expected_traffic(cfg, n, tokens_per_rank)
+    presets = {
+        "literal": dict(slack=1.3, quantum=8),
+        "lossless": dict(
+            decompose_kwargs={"min_fill": 0.1}, slack=1.0, quantum=8
+        ),
+        "v2": dict(
+            decompose_kwargs={"min_fill": 0.1},
+            slack=1.1,
+            quantum=8,
+            cap_quantile=0.9,
+        ),
+    }
+    if plan not in presets:
+        raise ValueError(
+            f"hierarchical dispatch has no {plan!r} plan preset; "
+            f"pick one of {sorted(presets)}"
+        )
+    return hierarchical_plan(
+        mat,
+        cfg.moe.pod_size,
+        n_layers=n_moe_layers,
+        strategy=strategy,
+        **presets[plan],
+    )
 
 
 # --------------------------------------------------------------- cell runs
@@ -181,11 +229,20 @@ def lower_cell(
                 bs = ar.axis_size(tuple(a for a in ("pod",) if a in mesh.axis_names)) or 1
             # tokens per EP rank per CALL: account for the microbatch split
             t_block = (cell.global_batch // microbatches // max(bs, 1)) * cell.seq_len
-            planned = build_schedule(cfg, n_model, t_block // n_model, plan=plan)
-            # row-consuming fabrics take a traced per-layer table
-            schedule = as_fabric_schedule(
-                cfg.moe.dispatch, planned, Model(cfg).n_moe_layers
-            )
+            if cfg.moe.dispatch == "hierarchical":
+                # the composed fabric plans both levels from the traffic
+                # itself — a flat plan can't be adapted after the fact
+                schedule = build_hierarchical_table(
+                    cfg, n_model, t_block // n_model,
+                    Model(cfg).n_moe_layers, plan=plan,
+                )
+                planned = schedule.inter  # meta reads phases off the circuit level
+            else:
+                planned = build_schedule(cfg, n_model, t_block // n_model, plan=plan)
+                # row-consuming fabrics take a traced per-layer table
+                schedule = as_fabric_schedule(
+                    cfg.moe.dispatch, planned, Model(cfg).n_moe_layers
+                )
         model = Model(cfg, schedule)
 
         key_sds = jax.ShapeDtypeStruct((2,), jnp.uint32)
@@ -268,7 +325,13 @@ def lower_cell(
         "param_count": get_config(arch).param_count(),
         "active_param_count": get_config(arch).active_param_count(),
         "param_dtype": str(pd),
-        "schedule_phases": None if planned is None else planned.num_phases,
+        "schedule_phases": None
+        if planned is None
+        else (
+            planned.num_phases  # static A2ASchedule
+            if hasattr(planned, "num_phases")
+            else int(planned.k_max)  # hierarchical: the circuit level's table
+        ),
         "plan": plan if planned is not None else None,
     }
     return lowered, meta

@@ -61,6 +61,12 @@ def main(argv=None) -> None:
         help="wire codec for dispatch payloads (fp8/int8 quantize "
         "cross-rank slots with per-slot scales)",
     )
+    ap.add_argument(
+        "--pod-size", type=int, default=None,
+        help="ranks per pod for --dispatch=hierarchical (must divide the "
+        "model-axis size; pod-local traffic rides the electrical intra "
+        "fabric, the remainder the circuit-scheduled inter fabric)",
+    )
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--grad-compress", default=None, choices=[None, "ef8"])
     ap.add_argument("--ckpt", default="/tmp/repro_train_ckpt")
@@ -75,6 +81,10 @@ def main(argv=None) -> None:
         cfg = dataclasses.replace(
             cfg, moe=dataclasses.replace(cfg.moe, wire_dtype=args.wire_dtype)
         )
+    if cfg.moe is not None and args.pod_size:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, pod_size=args.pod_size)
+        )
     mesh = build_mesh()
     log.info("mesh %s, arch %s (%.1fM params)", dict(mesh.shape), cfg.name,
              cfg.param_count() / 1e6)
@@ -83,18 +93,32 @@ def main(argv=None) -> None:
 
     schedule = None
     if cfg.moe is not None and consumes_schedule(cfg.moe.dispatch):
-        from repro.launch.dryrun import build_schedule
+        from repro.launch.dryrun import build_hierarchical_table, build_schedule
 
         n_model = mesh.shape["model"]
         t_rank = max(args.batch // mesh.shape["data"] * args.seq // n_model, 1)
-        schedule = build_schedule(cfg, n_model, t_rank, plan="lossless")
-        log.info("planned %d-phase %s schedule", schedule.num_phases,
-                 cfg.moe.schedule_strategy)
-        # row-consuming fabrics (phase_pipelined / ragged_a2a) take a
-        # traced per-layer table instead of the static plan
-        schedule = as_fabric_schedule(
-            cfg.moe.dispatch, schedule, Model(cfg).n_moe_layers
-        )
+        if cfg.moe.dispatch == "hierarchical":
+            # two-level plan from the same expected traffic: the composed
+            # fabric takes a HierarchicalTable, not an adapted flat plan
+            schedule = build_hierarchical_table(
+                cfg, n_model, t_rank, Model(cfg).n_moe_layers,
+                plan="lossless",
+            )
+            log.info(
+                "planned hierarchical schedule (pod_size %d): "
+                "%d intra + %d inter phase slots",
+                cfg.moe.pod_size, int(schedule.intra.k_max),
+                int(schedule.inter.k_max),
+            )
+        else:
+            schedule = build_schedule(cfg, n_model, t_rank, plan="lossless")
+            log.info("planned %d-phase %s schedule", schedule.num_phases,
+                     cfg.moe.schedule_strategy)
+            # row-consuming fabrics (phase_pipelined / ragged_a2a) take a
+            # traced per-layer table instead of the static plan
+            schedule = as_fabric_schedule(
+                cfg.moe.dispatch, schedule, Model(cfg).n_moe_layers
+            )
 
     model = Model(cfg, schedule)
     data_cfg = DataConfig(

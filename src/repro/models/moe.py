@@ -37,6 +37,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core.hierarchical import HierarchicalTable
 from repro.core.schedule import ScheduleTable
 from repro.parallel import current_rules, shard_map_compat
 from repro.parallel.fabric import geometry as _geom
@@ -233,7 +234,7 @@ def _moe_ep_pipeline(params, cfg: ModelConfig, x, fabric, schedule, return_stats
     w_d_spec = (
         P(EP_AXIS, "data", None) if two_d else P(EP_AXIS, None, None)
     )
-    is_row = isinstance(schedule, ScheduleTable)
+    is_row = isinstance(schedule, (ScheduleTable, HierarchicalTable))
     if is_row:
         row_leaves, row_def = jax.tree_util.tree_flatten(schedule)
     else:
@@ -304,7 +305,7 @@ def _moe_dense(
     params,
     cfg: ModelConfig,
     x: jax.Array,
-    row: ScheduleTable | None = None,
+    row: ScheduleTable | HierarchicalTable | None = None,
     *,
     return_stats: bool = False,
 ):
@@ -368,7 +369,10 @@ def moe_apply(
     """
     m = cfg.moe
     mode = m.dispatch
-    if isinstance(schedule, ScheduleTable) and not schedule.is_row:
+    if (
+        isinstance(schedule, (ScheduleTable, HierarchicalTable))
+        and not schedule.is_row
+    ):
         raise ValueError(
             "moe_apply consumes per-layer rows — pass table.row(l) (the "
             "stack's scan slices rows automatically)"

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core.hierarchical import HierarchicalTable
 from repro.core.schedule import ScheduleTable
 from repro.models import attention as attn
 from repro.models import mamba as mb
@@ -207,7 +208,7 @@ def _schedule_rows(schedule, cfg: ModelConfig):
             "(core.ScheduleTable.from_schedules); static per-layer "
             "A2ASchedule sequences forced the stack to unroll"
         )
-    if not isinstance(schedule, ScheduleTable):
+    if not isinstance(schedule, (ScheduleTable, HierarchicalTable)):
         return schedule, None
     positions = moe_positions(cfg)
     expected = cfg.n_periods * len(positions)

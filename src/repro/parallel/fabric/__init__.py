@@ -18,6 +18,10 @@ Registered backends (import order registers them):
 ``ragged_a2a``     same geometry, ``jax.lax.ragged_all_to_all`` movement —
                    exactly the live envelope bytes per pair (emulation
                    fallback off-TPU)
+``hierarchical``   two composed children: intra-pod electrical phases
+                   (``phase_pipelined``) under inter-pod circuit phases
+                   (``ragged_a2a``), driven by a ``HierarchicalTable``
+                   pair; the wire codec sees only the inter seam
 =================  =========================================================
 
 Plus the ``scheduled`` alias (resolves by schedule type, kept for every
@@ -54,6 +58,7 @@ from repro.parallel.fabric.a2a import MonolithicA2AFabric
 from repro.parallel.fabric.ppermute import PPermuteFabric
 from repro.parallel.fabric.phase_pipelined import PhasePipelinedFabric
 from repro.parallel.fabric.ragged_a2a import RaggedA2AFabric, ragged_available
+from repro.parallel.fabric.hierarchical import HierarchicalFabric
 
 # the fault-injection wrapper registers per-scenario via wrap_faulty,
 # not at import time (it is stateful; the five real backends stay the
@@ -70,6 +75,7 @@ __all__ = [
     "PackedTokens",
     "WireCodec",
     "DenseFabric",
+    "HierarchicalFabric",
     "MonolithicA2AFabric",
     "PPermuteFabric",
     "PhasePipelinedFabric",

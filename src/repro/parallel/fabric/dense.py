@@ -25,6 +25,7 @@ import math
 
 import jax.numpy as jnp
 
+from repro.core.hierarchical import HierarchicalTable, check_pod_size
 from repro.core.schedule import A2ASchedule, ScheduleTable
 from repro.parallel.fabric import geometry as g
 from repro.parallel.fabric.base import (
@@ -48,6 +49,17 @@ class DenseFabric(Fabric):
         # flow to every layer, dense layers just don't execute them)
         if schedule is None or isinstance(schedule, A2ASchedule):
             return None
+        if isinstance(schedule, HierarchicalTable):
+            # the virtual fabric serves hierarchical rows too (the
+            # single-device parity oracle path): admission reads the
+            # pair's summed per-pair caps, the wire mask the pod seam
+            if not schedule.is_row:
+                raise ValueError(
+                    "dense: rejected a full HierarchicalTable — pass "
+                    "table.row(l)"
+                )
+            check_pod_size(schedule.n, schedule.pod_size)
+            return schedule
         return super().validate_schedule(schedule, n=n)
 
     def pack(self, ctx: FabricContext, x_loc, idx, gates) -> PackedTokens:
@@ -79,7 +91,15 @@ class DenseFabric(Fabric):
                 m.n_experts // row.n
             )
             src_v = (pos * row.n) // t
-            wire = live & (src_v != dst_v[:, None])
+            if isinstance(row, HierarchicalTable):
+                # two-level virtual fabric: only POD-crossing slots ride
+                # the inter wire (same-pod remote slots move on the
+                # electrical level the codec never touches)
+                wire = live & ~g.same_pod(
+                    src_v, dst_v[:, None], row.pod_size
+                )
+            else:
+                wire = live & (src_v != dst_v[:, None])
         if admitted is None:
             admitted = jnp.ones((t * m.top_k,), bool)
         return PackedTokens(buf, pos, gate, live, admitted, wire=wire)

@@ -28,6 +28,8 @@ __all__ = [
     "pack_slots",
     "ungroup",
     "rank_in_group",
+    "pod_of",
+    "same_pod",
     "wire_mask_buckets",
     "admission_mask",
     "phase_serving",
@@ -35,6 +37,23 @@ __all__ = [
     "routing_counts",
     "stats_tree",
 ]
+
+
+def pod_of(idx, pod_size: int):
+    """Group (pod) index of a rank — or virtual-rank — index array.
+
+    The two-level fabric's sub-axis split: ranks ``[p * pod_size,
+    (p + 1) * pod_size)`` form pod ``p``.  Works on python ints, numpy,
+    and traced arrays (``pod_size`` is static)."""
+    return idx // pod_size
+
+
+def same_pod(src, dst, pod_size: int):
+    """Elementwise (broadcasting) — do ``src`` and ``dst`` share a pod?
+    The hierarchical backends' seam test: crossings where this is False
+    ride the inter (circuit) level and its wire codec; everything else
+    stays on the fast intra links."""
+    return pod_of(src, pod_size) == pod_of(dst, pod_size)
 
 
 def round8(x):

@@ -1,0 +1,234 @@
+"""``hierarchical`` fabric: intra-pod electrical dispatch under an
+inter-pod circuit schedule — two registered fabrics composed into one
+backend.
+
+Real MoE deployments are two-level: fast intra-host electrical links
+(ICI/NVLink) beneath a slower reconfigurable inter-host circuit fabric
+(the MixNet/MFABRIC architecture).  This backend consumes a
+``core.HierarchicalTable`` — an (intra, inter) pair of ``ScheduleTable``
+rows produced by the two-level decomposition (``hierarchical_plan`` /
+``hierarchical_plan_traced``) — and executes both plans through the
+shared phase-pipelined geometry:
+
+* the pair is ``merged()`` into one flat row whose phase axis is
+  ``[intra slots | inter slots]``, so packing, admission, per-phase
+  grouped GEMMs and the combine scatter are the parent's, verbatim (the
+  cross-fabric parity contract);
+* *movement* is delegated per phase to the composed children through
+  the ``_transfer``/``_transfer_back`` seam: intra phases ride the
+  ``intra_backend`` child (electrical; dense-emulation here), inter
+  phases the ``inter_backend`` child (``ragged_a2a`` — exactly the live
+  envelope bytes per pair, the circuit fabric's number);
+* ``PackedTokens.wire`` marks ONLY the inter-phase slots, so the PR 8
+  wire codecs quantize inter-host bytes while intra-host traffic stays
+  at compute width (bf16) — matching how deployments provision the two
+  links.  ``dispatch_bytes`` prices the levels accordingly.
+
+``validate_schedule``, ``dispatch_tokens`` and ``dispatch_bytes``
+recurse into both children; pod-size misuse raises the same named
+``ValueError`` as ``core.check_pod_size``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core.cost_models import wire_bytes_per_token
+from repro.core.hierarchical import HierarchicalTable, check_pod_size
+from repro.parallel.fabric.base import (
+    FabricContext,
+    PackedTokens,
+    _chain_hint,
+    get_fabric,
+    register_fabric,
+)
+from repro.parallel.fabric.phase_pipelined import (
+    PhasePipelinedFabric,
+    _PhaseMeta,
+)
+
+
+@register_fabric
+class HierarchicalFabric(PhasePipelinedFabric):
+    name = "hierarchical"
+    schedule_kind = "row"
+    requires_envelope = True
+
+    # the composed children (registry names, resolved lazily so import
+    # order inside the package does not matter)
+    intra_backend = "phase_pipelined"
+    inter_backend = "ragged_a2a"
+
+    def _children(self):
+        return get_fabric(self.intra_backend), get_fabric(self.inter_backend)
+
+    # ------------------------------------------------------------- schedule
+    def validate_schedule(self, schedule, *, n: int):
+        hint = _chain_hint(self.name)
+        if not isinstance(schedule, HierarchicalTable):
+            raise ValueError(
+                f"{self.name}: needs a HierarchicalTable (an intra+inter "
+                "ScheduleTable pair — build one with "
+                "core.hierarchical_plan or a HierarchicalRuntime); got "
+                f"{type(schedule).__name__}" + hint
+            )
+        n_eff = schedule.n if not self.uses_mesh else n
+        try:
+            check_pod_size(n_eff, schedule.pod_size)
+        except ValueError as e:
+            raise ValueError(f"{self.name}: {e}" + hint) from None
+        # recurse: each level must satisfy the row contract of the child
+        # fabric that will move it
+        intra_f, inter_f = self._children()
+        for level, child, fab in (
+            ("intra", schedule.intra, intra_f),
+            ("inter", schedule.inter, inter_f),
+        ):
+            try:
+                fab.validate_schedule(child, n=n)
+            except ValueError as e:
+                raise ValueError(
+                    f"{self.name}: {level} level rejected by its "
+                    f"{fab.name!r} child — {e}"
+                ) from None
+        if schedule.intra.n != schedule.inter.n:
+            raise ValueError(
+                f"{self.name}: levels disagree on fabric size "
+                f"(intra n={schedule.intra.n}, inter n={schedule.inter.n})"
+                + hint
+            )
+        return schedule
+
+    # ------------------------------------------------------------- pipeline
+    @staticmethod
+    def _merged_ctx(ctx: FabricContext) -> FabricContext:
+        """The parent machinery runs on the flat merged row; under jit
+        the duplicate ``merged()`` concats across hooks CSE away."""
+        return dataclasses.replace(ctx, schedule=ctx.schedule.merged())
+
+    def pack(self, ctx: FabricContext, x_loc, idx, gates) -> PackedTokens:
+        hrow: HierarchicalTable = ctx.schedule
+        packed = super().pack(self._merged_ctx(ctx), x_loc, idx, gates)
+        meta: _PhaseMeta = packed.meta
+        # wire = the INTER seam only: slots in phase blocks k >= Ki.
+        # Intra-phase slots move, but on electrical links at compute
+        # width — the codec must not touch them (bit-exactness of the
+        # intra level under fp8/int8 is regression-tested).
+        ki = hrow.intra.k_max
+        intra_end = meta.bases[ki] if ki < len(meta.bases) else meta.s_remote
+        s = jnp.arange(packed.buf.shape[0])
+        wire = packed.live & (s >= intra_end) & (s < meta.s_remote)
+        return dataclasses.replace(packed, wire=wire)
+
+    def dispatch(self, ctx: FabricContext, packed: PackedTokens):
+        hrow: HierarchicalTable = ctx.schedule
+        mctx = self._merged_ctx(ctx)
+        row = mctx.schedule
+        meta: _PhaseMeta = packed.meta
+        e_local = ctx.e_local
+        d = packed.buf.shape[-1]
+        ki = hrow.intra.k_max
+        intra_f, inter_f = self._children()
+        blocks, records = [], []
+        for k in range(row.k_max):
+            ck = meta.env_slots[k]
+            if ck == 0:
+                continue  # dark phase slot: no bytes, no compute
+            lo, hi = meta.bases[k], meta.bases[k] + e_local * ck
+            region = packed.buf[lo:hi].reshape(e_local, ck, d)
+            vregion = packed.live[lo:hi].reshape(e_local, ck)
+            child = intra_f if k < ki else inter_f
+            blk, vblk = child._transfer(mctx, row, k, region, vregion, meta)
+            blocks.append((blk, vblk))
+            records.append((k, lo, hi, ck))
+        lbuf = packed.buf[meta.s_remote :].reshape(e_local, meta.c_local, d)
+        llive = packed.live[meta.s_remote :].reshape(e_local, meta.c_local)
+        blocks.append((lbuf, llive))
+        return blocks, records
+
+    def combine(self, ctx: FabricContext, packed: PackedTokens, state, ys):
+        hrow: HierarchicalTable = ctx.schedule
+        mctx = self._merged_ctx(ctx)
+        row = mctx.schedule
+        meta: _PhaseMeta = packed.meta
+        e_local = ctx.e_local
+        d = packed.buf.shape[-1]
+        ki = hrow.intra.k_max
+        intra_f, inter_f = self._children()
+        y_flat = jnp.zeros(packed.buf.shape, packed.buf.dtype)
+        for (k, lo, hi, ck), y_k in zip(state, ys):
+            child = intra_f if k < ki else inter_f
+            back = child._transfer_back(mctx, row, k, y_k, meta)
+            y_flat = y_flat.at[lo:hi].set(
+                jnp.where(meta.on_k[k], back, 0).reshape(e_local * ck, d)
+            )
+        y_local = ys[-1]
+        y_flat = y_flat.at[meta.s_remote :].set(
+            y_local.reshape(e_local * meta.c_local, d)
+        )
+        return y_flat
+
+    # ----------------------------------------------------------- accounting
+    def _level_args(self, schedule, envelope):
+        """Normalize the accounting inputs to per-level (plan, envelope)
+        pairs.  Accepts a ``HierarchicalTable`` row (envelopes ride the
+        children) or explicit ``(intra, inter)`` tuples of plan/envelope
+        as the other phase fabrics take them."""
+        if isinstance(schedule, HierarchicalTable):
+            return (
+                (schedule.intra, schedule.intra.envelope),
+                (schedule.inter, schedule.inter.envelope),
+            )
+        if schedule is None or envelope is None:
+            raise ValueError(
+                "hierarchical accounting needs a HierarchicalTable or "
+                "(intra, inter) pairs of plans and envelopes"
+            )
+        (si, se), (ei, ee) = schedule, envelope
+        return (si, ei), (se, ee)
+
+    def dispatch_tokens_split(
+        self, *, n: int, schedule=None, envelope=None
+    ) -> dict:
+        """Per-rank slot counts per level: ``{"intra", "inter"}`` — each
+        the composed child's own honest count (live envelope slots per
+        planned participation; see the children's docstrings)."""
+        (si, ei), (se, ee) = self._level_args(schedule, envelope)
+        intra_f, inter_f = self._children()
+        return {
+            "intra": intra_f.dispatch_tokens(n=n, schedule=si, envelope=ei),
+            "inter": inter_f.dispatch_tokens(n=n, schedule=se, envelope=ee),
+        }
+
+    def dispatch_tokens(
+        self, *, n: int, cap_uniform: int = 0, schedule=None, envelope=None
+    ):
+        parts = self.dispatch_tokens_split(
+            n=n, schedule=schedule, envelope=envelope
+        )
+        return parts["intra"] + parts["inter"]
+
+    def dispatch_bytes(
+        self,
+        *,
+        d_model: int,
+        wire_dtype: str = "bf16",
+        compute_bytes: int = 2,
+        n: int,
+        cap_uniform: int = 0,
+        schedule=None,
+        envelope=None,
+    ):
+        """Two-level pricing: intra slots always ride the electrical
+        links at compute width (bf16 — the codec never touches them),
+        inter slots at ``wire_dtype``'s codec width + sidecar."""
+        parts = self.dispatch_tokens_split(
+            n=n, schedule=schedule, envelope=envelope
+        )
+        return parts["intra"] * wire_bytes_per_token(
+            d_model, "bf16", compute_bytes
+        ) + parts["inter"] * wire_bytes_per_token(
+            d_model, wire_dtype, compute_bytes
+        )

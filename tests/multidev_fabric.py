@@ -25,7 +25,14 @@ import repro.models.layers as layers
 layers.COMPUTE_DTYPE = jnp.float32  # exact equivalence, not bf16 rounding
 
 from repro.configs.base import ModelConfig, MoECfg
-from repro.core import ScheduleTable, decompose, plan_schedule
+from repro.core import (
+    HierarchicalTable,
+    ScheduleTable,
+    decompose,
+    hierarchical_decompose,
+    hierarchical_plan,
+    plan_schedule,
+)
 from repro.models import moe
 from repro.parallel import axis_rules
 from repro.parallel.fabric import fabric_names
@@ -33,7 +40,7 @@ from repro.parallel.fabric import fabric_names
 N_EP = 4
 
 
-def make_cfg(dispatch: str) -> ModelConfig:
+def make_cfg(dispatch: str, pod_size: int = 2, wire_dtype: str = "bf16") -> ModelConfig:
     return ModelConfig(
         name=f"fabric-{dispatch}",
         family="moe",
@@ -49,6 +56,8 @@ def make_cfg(dispatch: str) -> ModelConfig:
             d_ff_expert=48,
             capacity_factor=8.0,  # generous: no drops -> exact equivalence
             dispatch=dispatch,
+            pod_size=pod_size,
+            wire_dtype=wire_dtype,
         ),
     )
 
@@ -78,19 +87,21 @@ def main() -> None:
     x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, cfg0.d_model), jnp.float32)
 
     with axis_rules(mesh):
+        traffic = traffic_from_routing(params, cfg0, x, N_EP)
         sched = plan_schedule(
-            decompose(traffic_from_routing(params, cfg0, x, N_EP), "maxweight"),
-            slack=1.5, quantum=8,
+            decompose(traffic, "maxweight"), slack=1.5, quantum=8,
         )
         table = ScheduleTable.from_schedules(
             [sched], k_max=N_EP, clip=True, envelope="auto"
         )
+        htab = hierarchical_plan(traffic, 2, n_layers=1, slack=1.5, quantum=8)
         schedule_for = {
             "dense": None,
             "a2a": None,
             "ppermute": sched,
             "phase_pipelined": table.row(0),
             "ragged_a2a": table.row(0),
+            "hierarchical": htab.row(0),
         }
         missing = set(fabric_names()) - set(schedule_for)
         assert not missing, f"parity matrix must cover new fabrics: {missing}"
@@ -198,6 +209,66 @@ def main() -> None:
             ra._RAGGED = old_ragged
             os.environ.pop("REPRO_FORCE_RAGGED", None)
         print("OK ragged_a2a (stubbed ragged_all_to_all) == dense")
+
+        # --- hierarchical, pod_size=4: one pod == all traffic intra (the
+        # inter level is dark) — parity must still hold
+        htab4 = hierarchical_plan(traffic, 4, n_layers=1, slack=1.5, quantum=8)
+        cfg_h4 = make_cfg("hierarchical", pod_size=4)
+        y4, st4 = jax.jit(
+            lambda p, x, r: moe.moe_apply(
+                p, cfg_h4, x, schedule=r, return_stats=True
+            )
+        )(params, x, htab4.row(0))
+        np.testing.assert_allclose(np.asarray(y4), y_ref, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(
+            np.asarray(st4["routing"]).sum(axis=0), ref_routing,
+            rtol=1e-6, atol=1e-6,
+        )
+        assert float(np.asarray(st4["dropped"]).sum()) == 0.0
+        print("OK hierarchical pod_size=4 (degenerate inter) == dense")
+
+        # --- hierarchical dual-table swaps: an intra-only re-plan and a
+        # both-level re-plan must each reuse the executable (per-level
+        # envelopes are the static aux; updates keep them)
+        cfg_h = make_cfg("hierarchical")
+        fh = jax.jit(
+            lambda p, x, r: moe.moe_apply(p, cfg_h, x, schedule=r)
+        )
+        fh(params, x, htab.row(0))
+        i_d, e_d = hierarchical_decompose(traffic * 0.7, 2)
+        alt_intra = htab.update(
+            intra=htab.intra.update([plan_schedule(i_d, slack=1.5, quantum=8)])
+        )
+        fh(params, x, alt_intra.row(0))
+        assert fh._cache_size() == 1, "intra-only table swap recompiled"
+        alt_both = alt_intra.update(
+            inter=htab.inter.update([plan_schedule(e_d, slack=1.5, quantum=8)])
+        )
+        fh(params, x, alt_both.row(0))
+        assert fh._cache_size() == 1, "dual-table swap recompiled"
+        print("OK hierarchical: intra-only + dual-table swaps reused the executable")
+
+        # --- wire dtype crosses only the inter seam: with one pod (all
+        # traffic intra-host) the fp8 codec must be a bit-exact no-op,
+        # while with two pods the quantized inter slots shift the output
+        # only within fp8 tolerance
+        cfg_f4 = make_cfg("hierarchical", pod_size=4, wire_dtype="fp8")
+        y4_f = jax.jit(
+            lambda p, x, r: moe.moe_apply(p, cfg_f4, x, schedule=r)
+        )(params, x, htab4.row(0))
+        np.testing.assert_array_equal(np.asarray(y4_f), np.asarray(y4))
+        cfg_f2 = make_cfg("hierarchical", pod_size=2, wire_dtype="fp8")
+        y2_f, st2_f = jax.jit(
+            lambda p, x, r: moe.moe_apply(
+                p, cfg_f2, x, schedule=r, return_stats=True
+            )
+        )(params, x, htab.row(0))
+        np.testing.assert_allclose(np.asarray(y2_f), y_ref, atol=0.25)
+        np.testing.assert_allclose(
+            np.asarray(st2_f["routing"]).sum(axis=0), ref_routing,
+            rtol=1e-6, atol=1e-6,
+        )
+        print("OK hierarchical wire: intra bit-exact under fp8, inter within tolerance")
 
     print("ALL FABRIC MATRIX CHECKS PASSED")
 

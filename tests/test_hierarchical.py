@@ -1,0 +1,345 @@
+"""Two-level (pod-aware) decomposition: split, tables, planners, and the
+composed drift controller (PR 9).
+
+The fabric-facing side (parity matrix, wire seam, dispatch bytes) lives
+in ``tests/test_fabric.py`` / ``tests/multidev_fabric.py``; this module
+pins the core contracts those build on: the traffic partition, the
+diagonal-exclusion invariant of the intra union decomposition, the
+``HierarchicalTable`` pytree/merge algebra, the traced two-level
+planner, and per-level re-plan independence.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ControllerConfig,
+    HierarchicalRuntime,
+    HierarchicalTable,
+    check_pod_size,
+    hierarchical_decompose,
+    hierarchical_plan,
+    hierarchical_plan_traced,
+    same_pod_mask,
+    simulate_hierarchical,
+    split_traffic,
+    split_traffic_traced,
+)
+from repro.core.cost_models import CommModel, ComputeModel
+
+N = 4
+
+
+def _traffic(seed: int = 0, n: int = N, scale: float = 300.0):
+    rng = np.random.default_rng(seed)
+    m = rng.random((n, n)) * scale
+    np.fill_diagonal(m, 0)
+    return m
+
+
+def _leaves_equal(a, b) -> bool:
+    return all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b))
+    )
+
+
+class TestPodSizeValidation:
+    """Satellite 1: pod-size misuse raises a ValueError naming ``n``,
+    the offending ``pod_size``, and the valid divisors."""
+
+    def test_error_names_n_pod_size_and_divisors(self):
+        with pytest.raises(ValueError) as e:
+            check_pod_size(8, 3)
+        msg = str(e.value)
+        assert "pod_size=3" in msg and "n=8" in msg, msg
+        for d in (1, 2, 4, 8):
+            assert str(d) in msg, (d, msg)
+
+    def test_valid_pod_size_returns_it(self):
+        assert check_pod_size(8, 4) == 4
+        assert check_pod_size(8, 1) == 1
+        assert check_pod_size(8, 8) == 8
+
+    @pytest.mark.parametrize("bad", (0, -2))
+    def test_nonpositive_pod_size_rejected(self, bad):
+        with pytest.raises(ValueError, match=f"pod_size={bad}"):
+            check_pod_size(8, bad)
+
+    def test_split_traffic_propagates(self):
+        with pytest.raises(ValueError, match="pod_size=3"):
+            split_traffic(np.zeros((8, 8)), 3)
+
+    def test_fabric_validate_propagates(self):
+        """The fabric's ``validate_schedule`` rejects a mis-sized table
+        with the same divisor-naming error, prefixed by the backend."""
+        from repro.parallel.fabric import get_fabric
+
+        row = hierarchical_plan(_traffic(), 2, n_layers=1).row(0)
+        bad = dataclasses.replace(row, pod_size=3)
+        with pytest.raises(ValueError, match="hierarchical.*pod_size=3"):
+            get_fabric("hierarchical").validate_schedule(bad, n=N)
+        with pytest.raises(ValueError, match="pod_size=3"):
+            get_fabric("dense").validate_schedule(bad, n=N)
+
+
+class TestSplitTraffic:
+    def test_partition_is_exact(self):
+        m = _traffic()
+        intra, inter = split_traffic(m, 2)
+        np.testing.assert_array_equal(intra + inter, m)
+        same = same_pod_mask(N, 2)
+        assert (intra[~same] == 0).all()
+        assert (inter[same] == 0).all()
+
+    def test_batched_leading_dims(self):
+        m = np.stack([_traffic(s) for s in range(6)]).reshape(2, 3, N, N)
+        intra, inter = split_traffic(m, 2)
+        assert intra.shape == inter.shape == (2, 3, N, N)
+        np.testing.assert_array_equal(intra + inter, m)
+
+    def test_traced_twin_matches_host(self):
+        m = _traffic(3)
+        intra, inter = split_traffic(m, 2)
+        ti, te = jax.jit(lambda a: split_traffic_traced(a, 2))(
+            jnp.asarray(m)
+        )
+        np.testing.assert_allclose(np.asarray(ti), intra, rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(te), inter, rtol=1e-6)
+
+
+class TestDiagonalExclusionInvariant:
+    """Satellite 2: the union intra decomposition excludes local
+    (diagonal) tokens — ``simulate_decomposition(local_tokens=...)``
+    must never count them twice (the ``_union_pod_phases`` docstring
+    points here)."""
+
+    def setup_method(self):
+        self.m = _traffic(1)
+        # nonzero diagonal: local tokens the phases must NOT carry
+        np.fill_diagonal(self.m, 50.0)
+        self.intra_d, self.inter_d = hierarchical_decompose(self.m, 2)
+
+    def test_union_matrix_has_zero_diagonal(self):
+        np.testing.assert_array_equal(np.diag(self.intra_d.matrix), 0.0)
+        np.testing.assert_array_equal(np.diag(self.inter_d.matrix), 0.0)
+
+    def test_partition_conserves_demand(self):
+        np.testing.assert_allclose(
+            self.intra_d.matrix
+            + self.inter_d.matrix
+            + np.diag(np.diag(self.m)),
+            self.m,
+        )
+
+    def test_no_phase_carries_local_tokens(self):
+        for d, within_pod in ((self.intra_d, True), (self.inter_d, False)):
+            st = d.stacked()
+            src = np.arange(N)
+            active = st.sent > 0
+            assert not (active & (st.perms == src)).any(), d.strategy
+            crosses = (src // 2)[None, :] != (st.perms // 2)
+            if within_pod:  # intra circuits never leave the pod
+                assert not (active & crosses).any()
+            else:  # inter circuits always do
+                assert (crosses | ~active).all()
+
+    def test_phase_tokens_equal_offdiagonal_intra_mass(self):
+        """Total phase traffic == intra off-diagonal demand, so feeding
+        the diagonal back via ``local_tokens`` adds it exactly once."""
+        intra, _ = split_traffic(self.m, 2)
+        off = intra.copy()
+        np.fill_diagonal(off, 0.0)
+        st = self.intra_d.stacked()
+        assert st.sent.sum() == pytest.approx(off.sum())
+
+    def test_simulate_hierarchical_smoke(self):
+        out = simulate_hierarchical(
+            self.m, 2, ComputeModel(5.0, 0.01),
+            CommModel(100.0, reconf_us=0.05),
+            CommModel(25.0, reconf_us=15.0),
+        )
+        assert out["hier_us"] > 0 and out["flat_us"] > 0
+        assert np.isfinite(out["speedup"])
+        assert out["intra_phases"] > 0 and out["inter_phases"] > 0
+
+
+class TestHierarchicalTable:
+    def setup_method(self):
+        self.m = np.stack([_traffic(s) for s in (0, 7)])
+        self.tab = hierarchical_plan(self.m, 2)
+
+    def test_shapes_and_layers(self):
+        assert not self.tab.is_row
+        assert self.tab.num_layers == 2
+        assert self.tab.n == N
+        assert self.tab.k_max == self.tab.intra.k_max + self.tab.inter.k_max
+        row = self.tab.row(1)
+        assert row.is_row and row.pod_size == 2
+
+    def test_merged_folds_served_prefixes(self):
+        row = self.tab.row(0)
+        mr = row.merged()
+        ki, ke = row.intra.k_max, row.inter.k_max
+        assert mr.k_max == ki + ke
+        assert int(mr.n_phases) == ki + ke  # constant: no live-slot gating
+        caps = np.asarray(mr.caps)
+        # slots past each child's served prefix fold to dead (cap 0)
+        assert (caps[int(row.intra.n_phases):ki] == 0).all()
+        assert (caps[ki + int(row.inter.n_phases):] == 0).all()
+        # live slots keep the child caps
+        np.testing.assert_array_equal(
+            caps[: int(row.intra.n_phases)],
+            np.asarray(row.intra.caps)[: int(row.intra.n_phases)],
+        )
+
+    def test_pair_caps_additive_over_levels(self):
+        row = self.tab.row(0)
+        total = np.asarray(row.pair_caps(2))
+        np.testing.assert_array_equal(
+            total,
+            np.asarray(row.intra.pair_caps(2))
+            + np.asarray(row.inter.pair_caps(2)),
+        )
+        np.testing.assert_array_equal(
+            total, np.asarray(row.merged().pair_caps(2))
+        )
+        # each pair is served by exactly one level
+        same = same_pod_mask(N, 2)
+        assert (np.asarray(row.intra.pair_caps(2))[~same] == 0).all()
+        assert (np.asarray(row.inter.pair_caps(2))[same] == 0).all()
+
+    def test_update_swaps_one_level_in_place(self):
+        from repro.core import decompose, plan_schedule
+
+        i_d, _ = hierarchical_decompose(self.m[0] * 0.5, 2)
+        alt = self.tab.update(
+            intra=self.tab.intra.update([plan_schedule(i_d)] * 2)
+        )
+        assert alt.inter is self.tab.inter  # untouched object, not a copy
+        assert alt.pod_size == self.tab.pod_size
+        assert alt.intra.k_max == self.tab.intra.k_max
+
+    def test_pytree_round_trip_keeps_static_aux(self):
+        leaves, treedef = jax.tree_util.tree_flatten(self.tab)
+        back = jax.tree_util.tree_unflatten(treedef, leaves)
+        assert isinstance(back, HierarchicalTable)
+        assert back.pod_size == self.tab.pod_size
+        assert _leaves_equal(back, self.tab)
+
+
+class TestTracedPlanner:
+    def test_union_perms_are_pod_local_permutations(self):
+        m = jnp.asarray(_traffic(5)[None])
+        out = jax.jit(
+            lambda a: hierarchical_plan_traced(
+                a, 2, k_max_intra=2, k_max_inter=N
+            )
+        )(m)
+        pod = np.arange(N) // 2
+        src = np.arange(N)
+        for level, kmax in (("intra", 2), ("inter", N)):
+            perms = np.asarray(out[level]["perms"])[0]
+            assert perms.shape == (kmax, N)
+            for k, p in enumerate(perms):
+                np.testing.assert_array_equal(
+                    np.sort(p), src, err_msg=f"{level} phase {k}"
+                )
+            assert int(np.asarray(out[level]["n_phases"])[0]) <= kmax
+        # the intra union never crosses pods, and no valid slot is local
+        ip = np.asarray(out["intra"]["perms"])[0]
+        iv = np.asarray(out["intra"]["valid"])[0]
+        assert (pod[ip] == pod[None, :]).all()
+        assert not (iv & (ip == src[None, :])).any()
+        # every valid inter slot crosses the pod seam
+        ep = np.asarray(out["inter"]["perms"])[0]
+        ev = np.asarray(out["inter"]["valid"])[0]
+        assert ((pod[ep] != pod[None, :]) | ~ev).all()
+
+    def test_enough_phases_serve_the_whole_split(self):
+        """With ``k_max`` = level width the greedy clears each level's
+        split entirely: summed slot caps cover every demanded pair."""
+        m = _traffic(9)
+        out = hierarchical_plan_traced(
+            jnp.asarray(m[None]), 2, k_max_intra=2, k_max_inter=N,
+            quantum=1, min_cap=1,
+        )
+        intra, inter = split_traffic(m, 2)
+        src = np.arange(N)
+        for level, demand in (("intra", intra), ("inter", inter)):
+            perms = np.asarray(out[level]["perms"])[0]
+            valid = np.asarray(out[level]["valid"])[0]
+            caps = np.asarray(out[level]["caps"])[0].astype(float)
+            served = np.zeros((N, N))
+            for k in range(perms.shape[0]):
+                on = valid[k]
+                served[src[on], perms[k][on]] += caps[k]
+            assert (served + 1e-6 >= demand).all(), level
+
+
+class TestRuntimeIndependence:
+    """Intra drift must never force an inter re-plan (and vice versa);
+    PR 6 link masks apply to exactly one level per dead pair."""
+
+    def setup_method(self):
+        self.m = _traffic(0)
+        self.rt = HierarchicalRuntime(
+            ControllerConfig(n_ranks=N, n_experts=8), 1, pod_size=2
+        )
+        self.rt.prime(self.m)
+
+    def test_pod_size_validated_at_init(self):
+        with pytest.raises(ValueError, match="pod_size=3"):
+            HierarchicalRuntime(
+                ControllerConfig(n_ranks=N, n_experts=8), 1, pod_size=3
+            )
+
+    def test_table_pairs_both_levels(self):
+        tab = self.rt.table()
+        assert isinstance(tab, HierarchicalTable)
+        assert tab.pod_size == 2 and tab.num_layers == 1
+
+    def test_intra_drift_leaves_inter_plan_untouched(self):
+        inter0 = self.rt.inter_table()
+        intra0 = self.rt.intra.table()
+        inter_replans0 = self.rt.metrics()["replan_events"]
+        intra, inter = split_traffic(self.m, 2)
+        drift = np.where(
+            same_pod_mask(N, 2), intra[::-1, ::-1].T * 4.0, inter
+        )
+        np.fill_diagonal(drift, 0)
+        replanned = False
+        for _ in range(8):
+            replanned |= self.rt.observe_traffic(drift[None]).replanned
+        assert replanned  # the drift was big enough to trip the intra EMA
+        met = self.rt.metrics()
+        assert met["replan_events"] == inter_replans0  # inter: no re-plan
+        assert met["intra"]["replan_events"] > 1  # prime + drift
+        assert _leaves_equal(self.rt.inter_table(), inter0)
+        assert not _leaves_equal(self.rt.intra.table(), intra0)
+
+    def test_link_masks_apply_per_level(self):
+        # a dead SAME-pod link degrades only the electrical level
+        mask = np.ones((N, N), bool)
+        mask[0, 1] = mask[1, 0] = False
+        self.rt.set_link_mask(mask)
+        met = self.rt.metrics()
+        assert met["intra"]["masked_replans"] == 1
+        assert met["masked_replans"] == 0
+        self.rt.set_link_mask(None)
+        # a dead CROSS-pod link degrades only the circuit level
+        mask = np.ones((N, N), bool)
+        mask[0, 2] = mask[2, 0] = False
+        self.rt.set_link_mask(mask)
+        met = self.rt.metrics()
+        assert met["intra"]["masked_replans"] == 1  # unchanged
+        assert met["masked_replans"] == 1
+
+    def test_metrics_nest_the_intra_level(self):
+        met = self.rt.metrics()
+        assert met["pod_size"] == 2
+        assert "replan_events" in met["intra"]
