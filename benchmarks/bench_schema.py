@@ -1,12 +1,14 @@
-"""Schema validation for ``BENCH_scheduler.json`` — the PR-over-PR
-benchmark trajectory must stay machine-readable.
+"""Schema validation for ``BENCH_scheduler.json`` and
+``BENCH_serve.json`` — the PR-over-PR benchmark trajectories must stay
+machine-readable.
 
-The history list is append-only and consumed by trend tooling, so a
+The history lists are append-only and consumed by trend tooling, so a
 malformed append (missing section, wrong type, NaN) should fail CI at
 the bench that produced it, not corrupt the trajectory silently.
-``bench_scheduler`` validates every entry *before* writing; CI
-additionally runs this module as a standalone check over the committed
-file (``python -m benchmarks.bench_schema [path]``, exit 1 on errors).
+``bench_scheduler`` / ``bench_serve`` validate every entry *before*
+writing; CI additionally runs this module as a standalone check over
+the committed files (``python -m benchmarks.bench_schema [path]``,
+exit 1 on errors; the document family is detected from its contents).
 
 Plain-Python validator on purpose: no jsonschema dependency in the
 container, and the spec is small enough to read.
@@ -34,10 +36,15 @@ import sys
 # fabric): ``bytes_moved.fabrics`` (and each ``wire`` codec table)
 # gains a ``hierarchical`` row split into ``intra``/``inter`` MB/rank —
 # the two composed levels are priced separately because only the inter
-# seam rides the circuit fabric (and the wire codec).  Old history
-# entries (lower or no version field) validate against their own
-# version.
-SCHEMA_VERSION = 5
+# seam rides the circuit fabric (and the wire codec).  v6 (PR 10,
+# serving engine): introduces the *serve* document family
+# (``BENCH_serve.json``: a ``serving`` section with >=2 offered-load
+# points, each carrying continuous vs fixed-round percentiles and a
+# ``batching_gain_tokens_per_step`` that must clear
+# ``_V6_SERVE_MIN_GAIN``); scheduler entries are unchanged beyond the
+# declared version.  Old history entries (lower or no version field)
+# validate against their own version.
+SCHEMA_VERSION = 6
 
 # per-fabric bytes rows every v2 entry must carry (the registry's five
 # backends; listed literally so a malformed bench can't weaken the check
@@ -66,6 +73,25 @@ _V4_WIRE_RATIO = 0.55
 # v5: the hierarchical fabric's bytes split into its two levels (keys of
 # the ``hierarchical`` row object, in ``fabrics`` and every wire table)
 _V5_HIER_LEVELS = ("intra", "inter")
+
+# v6: the serve document family.  Every load point reports both serving
+# modes with these numbers, and continuous batching must beat the
+# fixed-round baseline on tokens/step by the documented margin — the
+# gate lives here so CI re-asserts it from the committed history even
+# if the bench that wrote it is edited.
+_V6_SERVE_MODES = ("continuous", "fixed_round")
+_V6_SERVE_MODE_NUMBERS = (
+    "p50_tok_s",
+    "p99_tok_s",
+    "queue_wait_p50_steps",
+    "queue_wait_p99_steps",
+    "tokens_per_step",
+    "decode_steps",
+    "occupancy",
+    "completed",
+)
+_V6_SERVE_MIN_GAIN = 1.05
+_V6_SERVE_MIN_LOAD_POINTS = 2
 
 # (key, required, allowed types).  Sections added later (bytes_moved in
 # PR 4, schema_version in PR 5) are optional so pre-existing history
@@ -301,8 +327,89 @@ def validate_entry(
     return errs
 
 
-def validate_document(doc) -> list[str]:
-    """Errors for the whole ``BENCH_scheduler.json`` document."""
+def validate_serve_entry(
+    entry, where: str = "entry", *, require_current: bool = False
+) -> list[str]:
+    """Errors for one serve-bench history entry ([] = valid).
+
+    The serve family starts at v6, so every entry must declare a
+    version and carry the full v6 layout; ``require_current``
+    additionally pins the declared version to ``SCHEMA_VERSION``."""
+    errs: list[str] = []
+    if not isinstance(entry, dict):
+        return [f"{where}: not an object"]
+    if not isinstance(entry.get("timestamp"), str):
+        errs.append(f"{where}: missing/invalid 'timestamp' (str)")
+    version = entry.get("schema_version")
+    if not isinstance(version, int) or version < 6:
+        errs.append(
+            f"{where}: serve entries must declare schema_version >= 6 "
+            f"(got {version!r})"
+        )
+    elif require_current and version != SCHEMA_VERSION:
+        errs.append(
+            f"{where}: new entries must declare schema_version "
+            f"{SCHEMA_VERSION} (got {version!r})"
+        )
+    if "git_sha" in entry and not isinstance(
+        entry["git_sha"], (str, type(None))
+    ):
+        errs.append(f"{where}.git_sha: expected str/None")
+    srv = entry.get("serving")
+    if not isinstance(srv, dict):
+        errs.append(f"{where}: missing required 'serving' object")
+        return errs
+    for f in ("decode_slots", "n_requests"):
+        if not _is_number(srv.get(f)):
+            errs.append(
+                f"{where}.serving.{f}: not a finite number "
+                f"({srv.get(f)!r})"
+            )
+    pts = srv.get("load_points")
+    if not isinstance(pts, list) or len(pts) < _V6_SERVE_MIN_LOAD_POINTS:
+        errs.append(
+            f"{where}.serving.load_points: need a list of >= "
+            f"{_V6_SERVE_MIN_LOAD_POINTS} offered-load points"
+        )
+        return errs
+    for i, pt in enumerate(pts):
+        lp = f"{where}.serving.load_points[{i}]"
+        if not isinstance(pt, dict):
+            errs.append(f"{lp}: not an object")
+            continue
+        if not _is_number(pt.get("offered_load_req_per_step")):
+            errs.append(
+                f"{lp}.offered_load_req_per_step: not a finite number "
+                f"({pt.get('offered_load_req_per_step')!r})"
+            )
+        for mode in _V6_SERVE_MODES:
+            rows = pt.get(mode)
+            if not isinstance(rows, dict):
+                errs.append(f"{lp}: missing {mode!r} mode object")
+                continue
+            for f in _V6_SERVE_MODE_NUMBERS:
+                if f not in rows:
+                    errs.append(f"{lp}.{mode}: missing {f!r}")
+                elif not _is_number(rows[f]):
+                    errs.append(
+                        f"{lp}.{mode}.{f}: not a finite number "
+                        f"({rows[f]!r})"
+                    )
+        gain = pt.get("batching_gain_tokens_per_step")
+        if not _is_number(gain):
+            errs.append(
+                f"{lp}.batching_gain_tokens_per_step: not a finite "
+                f"number ({gain!r})"
+            )
+        elif gain < _V6_SERVE_MIN_GAIN:
+            errs.append(
+                f"{lp}.batching_gain_tokens_per_step: {gain} below the "
+                f"{_V6_SERVE_MIN_GAIN} continuous-vs-fixed-round gate"
+            )
+    return errs
+
+
+def _validate_history(doc, entry_validator) -> list[str]:
     errs: list[str] = []
     if not isinstance(doc, dict):
         return ["document: not an object"]
@@ -310,7 +417,7 @@ def validate_document(doc) -> list[str]:
     if not isinstance(hist, list) or not hist:
         return ["document: history must be a non-empty list"]
     for i, entry in enumerate(hist):
-        errs.extend(validate_entry(entry, where=f"history[{i}]"))
+        errs.extend(entry_validator(entry, where=f"history[{i}]"))
     # timestamps must be monotone non-decreasing (append-only trajectory)
     stamps = [
         e.get("timestamp") for e in hist if isinstance(e, dict)
@@ -319,6 +426,32 @@ def validate_document(doc) -> list[str]:
         if any(a > b for a, b in zip(stamps, stamps[1:])):
             errs.append("history: timestamps are not non-decreasing")
     return errs
+
+
+def validate_document(doc) -> list[str]:
+    """Errors for the whole ``BENCH_scheduler.json`` document."""
+    return _validate_history(doc, validate_entry)
+
+
+def validate_serve_document(doc) -> list[str]:
+    """Errors for the whole ``BENCH_serve.json`` document."""
+    return _validate_history(doc, validate_serve_entry)
+
+
+def _looks_like_serve(doc) -> bool:
+    """Serve documents carry a top-level ``serving`` section (and their
+    history entries do too); scheduler documents never do."""
+    if not isinstance(doc, dict):
+        return False
+    if "serving" in doc:
+        return True
+    hist = doc.get("history")
+    return (
+        isinstance(hist, list)
+        and bool(hist)
+        and isinstance(hist[0], dict)
+        and "serving" in hist[0]
+    )
 
 
 def main(argv: list[str]) -> int:
@@ -332,14 +465,19 @@ def main(argv: list[str]) -> int:
     except (OSError, json.JSONDecodeError) as e:
         print(f"FAIL: cannot parse {path}: {e}")
         return 1
-    errs = validate_document(doc)
+    family = "serve" if _looks_like_serve(doc) else "scheduler"
+    errs = (
+        validate_serve_document(doc)
+        if family == "serve"
+        else validate_document(doc)
+    )
     if errs:
         print(f"FAIL: {path} has {len(errs)} schema violation(s):")
         for e in errs:
             print(f"  - {e}")
         return 1
     n = len(doc.get("history", []))
-    print(f"OK: {path} valid ({n} history entries)")
+    print(f"OK: {path} valid ({family} family, {n} history entries)")
     return 0
 
 

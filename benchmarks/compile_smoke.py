@@ -39,6 +39,12 @@ recompiled.  This smoke guards the properties per fabric:
    device-controller step an intra-only drift must fire only the intra
    ``lax.cond`` — the inter phase-plan leaves pass through untouched
    (no inter re-plan, no retrace).
+9. **Serving engine executables** (PR 10): ``repro.serve.ServeEngine``
+   compiles ONE decode executable for its slot batch and keeps it
+   across continuous-batching admissions, slot recycling, drift-fired
+   in-graph re-plans, AND schedule-regime warm swaps from the device
+   state's regime library (prefill and admit stay at one executable
+   per shape too).
 
 Exit code != 0 on regression, so CI fails fast.
 
@@ -497,6 +503,84 @@ def main() -> int:
         )
         return 1
 
+    # 9. serving engine (PR 10): the continuous-batching decode loop is
+    # ONE executable end to end — across ragged admissions, slot
+    # recycling, drift-fired cold re-plans, and regime warm swaps
+    from repro.configs.base import ModelConfig, MoECfg
+    from repro.serve import Request, ServeEngine
+
+    cfg_s = ModelConfig(
+        name="serve-smoke", family="moe", n_layers=2, d_model=32,
+        n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=128,
+        moe=MoECfg(
+            n_experts=8, top_k=2, d_ff_expert=32, dispatch="scheduled"
+        ),
+        remat="none",
+    )
+    eng = ServeEngine(
+        cfg_s, decode_slots=16, max_len=32, buckets=(8,), n_ranks=4,
+        regime_slots=2, regime_threshold=0.3, drop_tolerance=0.01,
+        hysteresis_steps=1, cooldown=2, ema=0.8, host_observe_every=10,
+        # smoke-scale decode traffic needs finer solver caps than the
+        # training-scale defaults for drift pressure to register
+        plan_overrides=dict(quantum=1, min_cap=1, slack=1.0), seed=0,
+    )
+    state0 = eng._state
+    rng_s = np.random.default_rng(0)
+    pool = rng_s.integers(0, cfg_s.vocab_size, 8)
+
+    def _phase(n=32):
+        return [
+            Request(
+                prompt=rng_s.choice(pool, 6), max_new_tokens=8, arrival=0.0
+            )
+            for _ in range(n)
+        ]
+
+    eng.run(_phase())
+    m1 = eng.metrics()
+    if m1["controller"]["device_replans"] < 1:
+        print(
+            "FAIL: serving the concentrated mix against the "
+            "uniform-primed plan must fire an in-graph re-plan"
+        )
+        return 1
+    eng.capture_regime()
+    # rewind the device plan to the uniform-primed initial state with
+    # the library kept: re-serving the same mix must overflow the stale
+    # plan and the fire must warm-swap the captured regime table
+    eng._state = eng._ctrl.load_regimes(
+        state0, eng._bank_tables, eng._bank_refs
+    )
+    eng.run(_phase())
+    m2 = eng.metrics()
+    warm = m2["controller"]["regime_warm_swaps"]
+    comp = m2["compile"]
+    print(
+        f"serve engine: {m1['controller']['device_replans']} cold "
+        f"re-plans, then {warm} regime warm swap(s); executables "
+        f"decode={comp['decode_executables']} "
+        f"prefill={comp['prefill_executables']} "
+        f"admit={comp['admit_executables']}"
+    )
+    if warm < 1:
+        print(
+            "FAIL: the regime return must warm-swap the captured table "
+            "(the library nearest-match never fired)"
+        )
+        return 1
+    if (
+        comp["decode_executables"] != 1
+        or comp["prefill_executables"] != 1
+        or comp["admit_executables"] != 1
+    ):
+        print(
+            "FAIL: the serving engine must keep ONE executable per step "
+            "function across admissions, slot recycling, and regime "
+            "warm swaps"
+        )
+        return 1
+
     print(
         "OK: depth-L scan traces one layer body for every fabric "
         f"({', '.join(fabric_names())}; single-device lowering — mesh "
@@ -507,7 +591,9 @@ def main() -> int:
         "executable with in-graph re-plans at zero recompiles; fp8-wire "
         "phase_pipelined/ragged steps swap tables at zero recompiles; "
         "hierarchical dual tables swap both levels at zero recompiles "
-        "with intra drift never retracing the inter plan)"
+        "with intra drift never retracing the inter plan; the serving "
+        "engine's decode/prefill/admit executables survive continuous "
+        "batching, slot recycling, and regime warm swaps)"
     )
     return 0
 

@@ -30,40 +30,18 @@ from repro.models import Model
 
 
 def make_controller(cfg, args):
-    """(runtime, scenario) as in repro.launch.serve: round-granularity
-    re-planning over demand estimates."""
-    if cfg.moe is None or cfg.moe.n_experts % args.virtual_ranks:
-        print("controller disabled: arch has no EP-compatible MoE")
-        return None, None
-    from repro.core import (
-        ControllerConfig,
-        DriftScenario,
-        HierarchicalRuntime,
-        ScheduleRuntime,
-    )
+    """(runtime, scenario) via the shared ``core.runtime`` factory:
+    round-granularity re-planning over demand estimates."""
+    from repro.core import make_serving_controller
 
-    ctrl_cfg = ControllerConfig(
+    runtime, scenario = make_serving_controller(
+        cfg,
         n_ranks=args.virtual_ranks,
-        n_experts=cfg.moe.n_experts,
-        ema=0.6,
-        cooldown=1,
-        group_by="model",
+        drift=args.drift,
+        rounds=args.rounds,
     )
-    if cfg.moe.dispatch == "hierarchical":
-        # two-level controller: each level re-plans on its own traffic
-        # split, so intra drift never forces a circuit re-plan
-        runtime = HierarchicalRuntime(
-            ctrl_cfg, Model(cfg).n_moe_layers, pod_size=cfg.moe.pod_size
-        )
-    else:
-        runtime = ScheduleRuntime(ctrl_cfg, Model(cfg).n_moe_layers)
-    scenario = DriftScenario(
-        args.drift,
-        cfg.moe.n_experts,
-        shift_step=max(args.rounds // 2, 1),
-        window=max(args.rounds // 2, 1),
-        seed=0,
-    )
+    if runtime is None:
+        print("controller disabled: arch has no EP-compatible MoE")
     return runtime, scenario
 
 

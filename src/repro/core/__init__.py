@@ -72,6 +72,7 @@ from repro.core.runtime import (
     ControllerConfig,
     Decision,
     ScheduleRuntime,
+    make_serving_controller,
     routing_to_traffic,
 )
 from repro.core.schedule import (
@@ -148,6 +149,7 @@ __all__ = [
     "is_doubly_stochastic",
     "knee_model",
     "linear_model",
+    "make_serving_controller",
     "matching_weight",
     "maxweight_decompose",
     "maxweight_decompose_batch",

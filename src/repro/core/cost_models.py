@@ -139,6 +139,12 @@ class CommModel:
     tokens_per_us: float
     reconf_us: float = 0.01
     bytes_per_token: float = 8192.0  # d_model=4096 bf16 default
+    # Dark window of a whole-schedule swap (µs): the fabric blackout
+    # while the OCS tears down one circuit set and establishes the next
+    # ("to reconfigure or not").  Distinct from the per-phase
+    # ``reconf_us`` the simulator charges inside a running schedule.
+    # 0.0 = legacy behavior: re-plans are free to adopt.
+    replan_dark_us: float = 0.0
 
     @staticmethod
     def from_hardware(
@@ -148,6 +154,7 @@ class CommModel:
         dtype_bytes: int = 2,
         reconf_us: float = 0.01,
         wire_dtype: str = "bf16",
+        replan_dark_us: float = 0.0,
     ) -> "CommModel":
         """``wire_dtype`` selects the dispatch codec's bytes-per-token
         term (see ``wire_bytes_per_token``), so the simulator and the
@@ -160,6 +167,7 @@ class CommModel:
             tokens_per_us=bytes_per_us / bytes_per_token,
             reconf_us=reconf_us,
             bytes_per_token=bytes_per_token,
+            replan_dark_us=replan_dark_us,
         )
 
     def comm_us(self, tokens) -> np.ndarray | float:
@@ -167,6 +175,19 @@ class CommModel:
         t = np.asarray(tokens, dtype=np.float64)
         out = t / self.tokens_per_us
         return float(out) if out.ndim == 0 else out
+
+    def replan_penalty(self, step_tokens: float) -> float:
+        """Drop-fraction-equivalent cost of one schedule swap.
+
+        Tokens the dark window blacks out (``replan_dark_us *
+        tokens_per_us``) expressed as a fraction of one observation
+        window's tokens — the unit the selector and device controller
+        score drops in, so hysteresis can weigh "drop saved by the new
+        plan" directly against "tokens lost going dark to adopt it".
+        """
+        if step_tokens <= 0:
+            return 0.0
+        return float(self.replan_dark_us * self.tokens_per_us / step_tokens)
 
 
 # --------------------------------------------------- dispatch byte accounting

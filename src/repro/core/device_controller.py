@@ -44,6 +44,27 @@ scores and plans on the rerouted demand (``apply_link_mask_traced``, the
 traced twin of ``core.faults.apply_link_mask``) and never marks a dark
 pair valid — PR 6's masked re-plans keep working in-graph, at zero
 recompiles (the mask is data, not structure).
+
+**Schedule regime library (PR 10).**  PCCL-style pre-established
+circuits: when ``DeviceControllerConfig.regime_slots > 0`` the state
+carries a bank of pre-planned table pytrees (``lib_*`` leaves) plus one
+normalized ``[n, n]`` reference traffic shape per entry.  When the drift
+signal fires, the controller first nearest-matches the EMA'd traffic
+shape against the library (relative-L1, the traced twin of
+``ScheduleEntry.mismatch``); a match under ``regime_threshold``
+**warm-swaps** the stored plan in by a dynamic gather — no LAP solve,
+no recompile, and (the regime's circuits being pre-established) no
+re-plan dark window — while a miss falls back to the cold
+``greedy_phases_jax`` solve.  Regimes are loaded host-side via
+``DeviceController.load_regimes`` (e.g. plans for the traffic regimes
+the host selector library already knows); a degraded link mask disables
+warm matching, since stored plans were routed for the healthy fabric.
+
+``replan_penalty`` is the traced form of the reconfiguration-delay bar
+(``CommModel.replan_dark_us``): a *cold* re-plan's best-case saving is
+the whole current drop fraction, so the controller declines to fire one
+when ``drop < replan_penalty`` — the dark window would outweigh the
+saving.  Warm swaps are exempt (their circuits are pre-established).
 """
 
 from __future__ import annotations
@@ -79,6 +100,14 @@ class DeviceControllerConfig:
     ``hysteresis_steps`` is the traced form of the host hysteresis (see
     module docstring); ``cooldown``/``drop_tolerance``/``ema`` match
     ``ControllerConfig`` field for field.
+
+    ``regime_slots`` sizes the schedule regime library carried in the
+    state (0 = no library, the pre-PR-10 behavior); ``regime_threshold``
+    is the relative-L1 traffic-shape distance under which a library
+    entry counts as a warm match.  ``replan_penalty`` is the
+    drop-fraction-equivalent cost of a *cold* re-plan's reconfiguration
+    dark window (``CommModel.replan_penalty``); 0 keeps the legacy
+    always-worth-it rule.
     """
 
     n_ranks: int
@@ -94,6 +123,9 @@ class DeviceControllerConfig:
     envelope: tuple[int, ...] | None = None
     drop_spike_frac: float = 0.25
     max_rounds: int = 20_000
+    regime_slots: int = 0
+    regime_threshold: float = 0.15
+    replan_penalty: float = 0.0
 
     def __post_init__(self):
         if self.n_experts % self.n_ranks:
@@ -105,6 +137,10 @@ class DeviceControllerConfig:
             raise ValueError("k_max must be >= 1")
         if self.hysteresis_steps < 1:
             raise ValueError("hysteresis_steps must be >= 1")
+        if self.regime_slots < 0:
+            raise ValueError("regime_slots must be >= 0")
+        if self.replan_penalty < 0.0:
+            raise ValueError("replan_penalty must be >= 0")
         if self.envelope is not None and not isinstance(
             self.envelope, tuple
         ):
@@ -122,6 +158,12 @@ class DeviceControllerState:
     the ``ScheduleTable`` layout — ``DeviceController.table_of`` wraps
     them without copying.  Counters are int32 scalars; ``drop`` is the
     last scored planned-drop fraction (telemetry + FSM input).
+
+    The ``lib_*`` leaves are the schedule regime library: ``R =
+    config.regime_slots`` stacked plan pytrees plus one normalized
+    ``[n, n]`` reference traffic shape per slot.  With ``R == 0`` they
+    are zero-size arrays — same treedef, no memory, and the warm-match
+    arithmetic is skipped at trace time.
     """
 
     smoothed: jax.Array  # [L, n, n] f32 EMA'd rank traffic
@@ -140,6 +182,13 @@ class DeviceControllerState:
     drop: jax.Array  # f32 — last planned-drop fraction
     drop_spikes: jax.Array  # i32 — FSM anomaly input (spike steps)
     admitted_dropped: jax.Array  # f32 — cumulative cut-token count
+    lib_ref: jax.Array  # [R, n, n] f32 normalized reference traffic
+    lib_perms: jax.Array  # [R, L, K, n] i32 stored plans
+    lib_caps: jax.Array  # [R, L, K] i32
+    lib_valid: jax.Array  # [R, L, K, n] bool
+    lib_n_phases: jax.Array  # [R, L] i32
+    lib_size: jax.Array  # i32 — filled slots (<= R)
+    warm_swaps: jax.Array  # i32 — re-plans served from the library
 
     def tree_flatten(self):
         return (
@@ -158,6 +207,13 @@ class DeviceControllerState:
                 self.drop,
                 self.drop_spikes,
                 self.admitted_dropped,
+                self.lib_ref,
+                self.lib_perms,
+                self.lib_caps,
+                self.lib_valid,
+                self.lib_n_phases,
+                self.lib_size,
+                self.warm_swaps,
             ),
             None,
         )
@@ -295,6 +351,7 @@ class DeviceController:
         caps = jnp.asarray(table.caps, jnp.int32)
         valid = jnp.asarray(table.valid, bool)
         n_phases = jnp.asarray(table.n_phases, jnp.int32)
+        R = cfg.regime_slots
         return DeviceControllerState(
             smoothed=smoothed,
             perms=perms,
@@ -310,6 +367,13 @@ class DeviceController:
             drop=jnp.float32(0.0),
             drop_spikes=jnp.int32(0),
             admitted_dropped=jnp.float32(0.0),
+            lib_ref=jnp.zeros((R, n, n), jnp.float32),
+            lib_perms=jnp.zeros((R, L, cfg.k_max, n), jnp.int32),
+            lib_caps=jnp.zeros((R, L, cfg.k_max), jnp.int32),
+            lib_valid=jnp.zeros((R, L, cfg.k_max, n), bool),
+            lib_n_phases=jnp.zeros((R, L), jnp.int32),
+            lib_size=jnp.int32(0),
+            warm_swaps=jnp.int32(0),
         )
 
     @classmethod
@@ -344,6 +408,83 @@ class DeviceController:
             link_mask=runtime._link_mask,
         )
         return ctrl, state
+
+    def load_regimes(
+        self,
+        state: DeviceControllerState,
+        tables: list[ScheduleTable],
+        references,
+    ) -> DeviceControllerState:
+        """Fill the regime library from host pre-planned tables.
+
+        ``tables``: one ``ScheduleTable`` per regime, planned at the
+        config's ``k_max``/envelope (so a warm swap is shape-neutral).
+        ``references``: matching ``[n, n]`` traffic matrices the plans
+        were made for (e.g. ``DriftScenario.traffic`` draws, or the host
+        selector library's ``ScheduleEntry.reference``) — stored
+        normalized, diagonal zeroed, for the traced nearest-match.
+        Host-called at load time; the returned state swaps into a
+        running step with zero recompiles (same leaves, same shapes).
+        """
+        cfg = self.cfg
+        R = cfg.regime_slots
+        if R == 0:
+            raise ValueError(
+                "config.regime_slots == 0: size the library before "
+                "loading regimes"
+            )
+        if len(tables) != len(references):
+            raise ValueError(
+                f"{len(tables)} tables vs {len(references)} references"
+            )
+        if len(tables) > R:
+            raise ValueError(
+                f"{len(tables)} regimes exceed regime_slots={R}"
+            )
+        n = cfg.n_ranks
+        L, K = state.perms.shape[0], cfg.k_max
+        lib_ref = np.zeros((R, n, n), np.float32)
+        lib_perms = np.zeros((R, L, K, n), np.int32)
+        lib_caps = np.zeros((R, L, K), np.int32)
+        lib_valid = np.zeros((R, L, K, n), bool)
+        lib_n_phases = np.zeros((R, L), np.int32)
+        for r, (tab, ref) in enumerate(zip(tables, references)):
+            if (tab.num_layers, tab.k_max, tab.n) != (L, K, n):
+                raise ValueError(
+                    f"regime {r} table is [{tab.num_layers}, {tab.k_max}, "
+                    f"{tab.n}], library wants [{L}, {K}, {n}]"
+                )
+            if (
+                tab.envelope is not None
+                and cfg.envelope is not None
+                and tuple(tab.envelope) != tuple(cfg.envelope)
+            ):
+                raise ValueError(
+                    f"regime {r} envelope {tab.envelope} != config "
+                    f"envelope {cfg.envelope}: a warm swap would not be "
+                    f"shape-neutral"
+                )
+            a = np.asarray(ref, np.float64)
+            if a.shape != (n, n):
+                raise ValueError(
+                    f"regime {r} reference shape {a.shape} != {(n, n)}"
+                )
+            a = a.copy()
+            np.fill_diagonal(a, 0.0)
+            lib_ref[r] = (a / max(a.sum(), 1e-9)).astype(np.float32)
+            lib_perms[r] = np.asarray(tab.perms, np.int32)
+            lib_caps[r] = np.asarray(tab.caps, np.int32)
+            lib_valid[r] = np.asarray(tab.valid, bool)
+            lib_n_phases[r] = np.asarray(tab.n_phases, np.int32)
+        return dataclasses.replace(
+            state,
+            lib_ref=jnp.asarray(lib_ref),
+            lib_perms=jnp.asarray(lib_perms),
+            lib_caps=jnp.asarray(lib_caps),
+            lib_valid=jnp.asarray(lib_valid),
+            lib_n_phases=jnp.asarray(lib_n_phases),
+            lib_size=jnp.int32(len(tables)),
+        )
 
     # -------------------------------------------------------------- views
     def table_of(self, state: DeviceControllerState) -> ScheduleTable:
@@ -410,28 +551,71 @@ class DeviceController:
         over = drop > cfg.drop_tolerance
         streak = jnp.where(over, state.drift_streak + 1, 0)
         cooldown = jnp.maximum(state.cooldown - 1, 0)
-        fire = over & (streak >= cfg.hysteresis_steps) & (cooldown == 0)
+
+        # Regime library nearest-match (traced ScheduleEntry.mismatch):
+        # compare the EMA'd traffic *shape* (mean over layers, normalized)
+        # against each stored reference.  A degraded link mask disables
+        # warm matching — stored plans were routed for the healthy fabric.
+        if cfg.regime_slots > 0:
+            obs = routable.mean(axis=0)
+            obs = obs / jnp.maximum(obs.sum(), 1e-30)
+            dist = 0.5 * jnp.abs(obs[None] - state.lib_ref).sum(axis=(-2, -1))
+            filled = jnp.arange(cfg.regime_slots) < state.lib_size
+            dist = jnp.where(filled, dist, jnp.inf)
+            best = jnp.argmin(dist)
+            warm = (
+                (state.lib_size > 0)
+                & (dist[best] <= cfg.regime_threshold)
+                & state.link_mask.all()
+            )
+        else:
+            best = jnp.int32(0)
+            warm = jnp.bool_(False)
+
+        # Reconfiguration-aware bar: a cold re-plan's best-case saving is
+        # the whole current drop; decline when the swap's dark window
+        # (replan_penalty, drop-fraction units) costs more.  Warm swaps
+        # ride pre-established circuits — no dark window, always worth it.
+        worth = warm | (drop >= cfg.replan_penalty)
+        fire = (
+            over & (streak >= cfg.hysteresis_steps) & (cooldown == 0) & worth
+        )
 
         def replan(_):
-            plan = greedy_phases_jax(
-                routable,
-                k_max=cfg.k_max,
-                quantum=cfg.quantum,
-                min_cap=cfg.min_cap,
-                slack=cfg.slack,
-                mask=state.link_mask,
-                max_rounds=cfg.max_rounds,
-            )
-            return (
-                plan["perms"],
-                plan["caps"],
-                plan["valid"],
-                plan["n_phases"],
-                _cap_matrix(
-                    plan["perms"], plan["caps"], plan["valid"],
+            def warm_take(_):
+                perms = state.lib_perms[best]
+                caps = state.lib_caps[best]
+                valid = state.lib_valid[best]
+                n_phases = state.lib_n_phases[best]
+                return (
+                    perms, caps, valid, n_phases,
+                    _cap_matrix(perms, caps, valid, n_phases),
+                )
+
+            def cold(_):
+                plan = greedy_phases_jax(
+                    routable,
+                    k_max=cfg.k_max,
+                    quantum=cfg.quantum,
+                    min_cap=cfg.min_cap,
+                    slack=cfg.slack,
+                    mask=state.link_mask,
+                    max_rounds=cfg.max_rounds,
+                )
+                return (
+                    plan["perms"],
+                    plan["caps"],
+                    plan["valid"],
                     plan["n_phases"],
-                ),
-            )
+                    _cap_matrix(
+                        plan["perms"], plan["caps"], plan["valid"],
+                        plan["n_phases"],
+                    ),
+                )
+
+            if cfg.regime_slots > 0:
+                return jax.lax.cond(warm, warm_take, cold, None)
+            return cold(None)
 
         def keep(_):
             return (
@@ -464,6 +648,13 @@ class DeviceController:
             drop=drop,
             drop_spikes=state.drop_spikes + spike.astype(jnp.int32),
             admitted_dropped=state.admitted_dropped + dropped_total,
+            lib_ref=state.lib_ref,
+            lib_perms=state.lib_perms,
+            lib_caps=state.lib_caps,
+            lib_valid=state.lib_valid,
+            lib_n_phases=state.lib_n_phases,
+            lib_size=state.lib_size,
+            warm_swaps=state.warm_swaps + (fire & warm).astype(jnp.int32),
         )
 
     # ----------------------------------------------------------- incident
@@ -517,4 +708,6 @@ class DeviceController:
             "drop_spikes": int(state.drop_spikes),
             "admitted_dropped": float(state.admitted_dropped),
             "link_masked": bool((~np.asarray(state.link_mask)).any()),
+            "regime_library_size": int(state.lib_size),
+            "regime_warm_swaps": int(state.warm_swaps),
         }

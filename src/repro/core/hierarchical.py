@@ -683,6 +683,8 @@ class HierarchicalDeviceController:
             "drop_fraction": m_inter["drop_fraction"],
             "drop_spikes": m_inter["drop_spikes"],
             "admitted_dropped": m_inter["admitted_dropped"],
+            "regime_warm_swaps": m_intra["regime_warm_swaps"]
+            + m_inter["regime_warm_swaps"],
             "intra": m_intra,
             "inter": m_inter,
         }

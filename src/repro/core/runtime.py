@@ -49,7 +49,13 @@ from repro.core.selector import (
     ScheduleSelector,
 )
 
-__all__ = ["ControllerConfig", "Decision", "ScheduleRuntime", "routing_to_traffic"]
+__all__ = [
+    "ControllerConfig",
+    "Decision",
+    "ScheduleRuntime",
+    "make_serving_controller",
+    "routing_to_traffic",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,6 +78,11 @@ class ControllerConfig:
       cooldown: observations after a re-plan during which further misses
         are suppressed (the EMA needs a few steps to settle after a
         regime change; each miss costs a fresh plan).
+      replan_penalty: drop-fraction-equivalent cost of a schedule swap's
+        reconfiguration dark window, forwarded to every group selector
+        (see ``ScheduleSelector`` / ``CommModel.replan_penalty``): the
+        controller itself declines swaps whose dark window outweighs the
+        drop saving.  0 = legacy behavior (swaps free to adopt).
       group_by: "layer" (one schedule per MoE layer; per-layer table rows
         ride the stack's scan) or "model" (one shared schedule).
       min_fill: decomposition min_fill (defer near-empty pairs).
@@ -129,6 +140,7 @@ class ControllerConfig:
     ema: float = 0.3
     hysteresis: float = 0.1
     cooldown: int = 5
+    replan_penalty: float = 0.0
     group_by: str = "layer"
     min_fill: float = 0.1
     plan_kwargs: dict | None = None
@@ -151,6 +163,8 @@ class ControllerConfig:
             )
         if self.group_by not in ("layer", "model"):
             raise ValueError(f"unknown group_by {self.group_by!r}")
+        if self.replan_penalty < 0.0:
+            raise ValueError("replan_penalty must be >= 0")
         if not 0.0 <= self.envelope_decay < 1.0:
             raise ValueError(
                 f"envelope_decay must be in [0, 1) (got "
@@ -233,6 +247,77 @@ def routing_to_traffic(
     raise ValueError(f"cannot map {n_src} source shards onto {n_ranks} ranks")
 
 
+def make_serving_controller(
+    model_cfg,
+    *,
+    n_ranks: int,
+    drift: str = "shift",
+    rounds: int = 1,
+    ema: float = 0.6,
+    cooldown: int = 1,
+    group_by: str = "model",
+    replan_penalty: float = 0.0,
+    plan_kwargs: dict | None = None,
+    drift_seed: int = 0,
+):
+    """Shared serving-controller factory: ``(runtime, scenario)``.
+
+    One construction path for every serving entry point
+    (``repro.launch.serve``, ``examples/serve_decode.py``,
+    ``repro.serve.engine``): builds the round-granularity
+    ``ControllerConfig`` (fast EMA, short cooldown, one shared plan —
+    round demand estimates are global), picks ``HierarchicalRuntime``
+    when the arch's MoE dispatch is the composed two-level fabric, and
+    pairs it with the ``DriftScenario`` used to synthesize/inject the
+    request mix.  Returns ``(None, None)`` when the arch has no MoE or
+    its expert count does not tile ``n_ranks`` — callers decide whether
+    that is fatal.
+
+    ``model_cfg`` is a ``repro.configs.ModelConfig``; the MoE layer
+    count is derived from it directly (``ffn_kind``), so the factory
+    never constructs a ``Model``.
+    """
+    cfg = model_cfg
+    if cfg.moe is None or cfg.moe.n_experts % n_ranks:
+        return None, None
+    # local imports: hierarchical imports this module (runtime) at top
+    # level, and drift is a sibling — both resolve lazily to keep
+    # core.runtime import-light
+    from repro.core.drift import DriftScenario
+    from repro.core.hierarchical import HierarchicalRuntime
+
+    n_moe_layers = sum(
+        cfg.ffn_kind(l) == "moe" for l in range(cfg.n_layers)
+    )
+    ctrl_cfg = ControllerConfig(
+        n_ranks=n_ranks,
+        n_experts=cfg.moe.n_experts,
+        ema=ema,  # round-level demand estimates: react fast
+        cooldown=cooldown,
+        replan_penalty=replan_penalty,
+        plan_kwargs=plan_kwargs,
+        # per-layer plans ride the prefill/decode scans as table rows;
+        # round-level demand estimates are global, so share one plan
+        group_by=group_by,
+    )
+    if cfg.moe.dispatch == "hierarchical":
+        # two-level controller: each level re-plans on its own traffic
+        # split, so intra drift never forces a circuit re-plan
+        runtime = HierarchicalRuntime(
+            ctrl_cfg, n_moe_layers, pod_size=cfg.moe.pod_size
+        )
+    else:
+        runtime = ScheduleRuntime(ctrl_cfg, n_moe_layers)
+    scenario = DriftScenario(
+        drift,
+        cfg.moe.n_experts,
+        shift_step=max(rounds // 2, 1),
+        window=max(rounds // 2, 1),
+        seed=drift_seed,
+    )
+    return runtime, scenario
+
+
 class ScheduleRuntime:
     """Owns the controller loop end to end for ``n_moe_layers`` MoE layers."""
 
@@ -253,6 +338,7 @@ class ScheduleRuntime:
                 ema=1.0,  # the runtime smooths per layer; don't smooth twice
                 hysteresis=cfg.hysteresis,
                 cooldown=cfg.cooldown,
+                replan_penalty=cfg.replan_penalty,
                 plan_kwargs=cfg.plan_kwargs,
                 max_library=cfg.max_library,
                 on_evict=self._on_evict,

@@ -132,6 +132,12 @@ class ScheduleSelector:
         never returns a miss (it degrades to switch/keep) — re-plan
         storms while the EMA settles after a drift event would otherwise
         each pay a fresh plan.  0 = legacy behavior.
+      replan_penalty: drop-fraction-equivalent cost of a schedule swap's
+        reconfiguration dark window (``CommModel.replan_penalty``): a
+        switch must save at least this much planned drop over the
+        current entry, and a miss (fresh plan) is declined outright when
+        even a perfect plan (drop → 0) could not repay it.  0 = legacy
+        behavior: swaps are free to adopt.
       max_library: LRU bound on the schedule library (host memory: each
         entry holds its reference traffic and [n, n] cap matrix; evicts
         the least-recently-used entry).  Floored at 2 — the current entry
@@ -153,6 +159,7 @@ class ScheduleSelector:
         ema: float = 0.3,
         hysteresis: float = 0.0,
         cooldown: int = 0,
+        replan_penalty: float = 0.0,
         plan_kwargs: dict | None = None,
         max_library: int = 16,
         on_evict=None,
@@ -163,6 +170,9 @@ class ScheduleSelector:
         self.ema = ema
         self.hysteresis = hysteresis
         self.cooldown = cooldown
+        if replan_penalty < 0.0:
+            raise ValueError("replan_penalty must be >= 0")
+        self.replan_penalty = replan_penalty
         self._cooldown_left = 0
         self.plan_kwargs = dict(DEFAULT_PLAN_KWARGS)
         if plan_kwargs:
@@ -293,11 +303,16 @@ class ScheduleSelector:
             k = int(np.argmin(drops))
             best, best_drop = self.library[k], float(drops[k])
         # Switching away from current requires a relative improvement of
-        # at least `hysteresis` (flap damping); a fresh plan additionally
-        # requires the cooldown window to have elapsed.
+        # at least `hysteresis` (flap damping) AND a drop saving that
+        # repays the swap's reconfiguration dark window (replan_penalty,
+        # "to reconfigure or not"); a fresh plan additionally requires
+        # the cooldown window to have elapsed.
         improves = best is not None and best is not self.current and (
             cur_drop == float("inf")
-            or best_drop <= cur_drop * (1.0 - self.hysteresis)
+            or (
+                best_drop <= cur_drop * (1.0 - self.hysteresis)
+                and cur_drop - best_drop >= self.replan_penalty
+            )
         )
         if improves and best_drop <= self.drop_tolerance:
             return Proposal("switch", best, best_drop)
@@ -312,6 +327,15 @@ class ScheduleSelector:
             if self.current is not None:
                 self._touch(self.current)
                 return Proposal("keep", self.current, cur_drop)
+        if (
+            self.replan_penalty > 0.0
+            and self.current is not None
+            and cur_drop < self.replan_penalty
+        ):
+            # even a perfect fresh plan (drop -> 0) saves less than the
+            # dark window costs to adopt it: ride the current plan
+            self._touch(self.current)
+            return Proposal("keep", self.current, cur_drop)
         return Proposal("miss", best, best_drop)
 
     def observe(self, traffic: np.ndarray) -> tuple[ScheduleEntry, bool]:

@@ -37,36 +37,21 @@ log = logging.getLogger("repro.launch.serve")
 
 
 def _make_controller(cfg, args, n_ranks: int):
-    """(runtime, scenario) for MoE archs, (None, None) otherwise."""
-    if cfg.moe is None or cfg.moe.n_experts % n_ranks:
-        if args.controller:
-            log.info(
-                "controller disabled: arch %s has no EP-compatible MoE",
-                cfg.name,
-            )
-        return None, None
-    from repro.core import ControllerConfig, DriftScenario, ScheduleRuntime
+    """(runtime, scenario) for MoE archs via the shared ``core.runtime``
+    factory, (None, None) otherwise."""
+    from repro.core import make_serving_controller
 
-    model = Model(cfg)
-    runtime = ScheduleRuntime(
-        ControllerConfig(
-            n_ranks=n_ranks,
-            n_experts=cfg.moe.n_experts,
-            ema=0.6,  # round-level demand estimates: react fast
-            cooldown=1,
-            # per-layer plans ride the prefill/decode scans as table rows;
-            # round-level demand estimates are global, so share one plan
-            group_by="model",
-        ),
-        model.n_moe_layers,
+    runtime, scenario = make_serving_controller(
+        cfg,
+        n_ranks=n_ranks,
+        drift=args.drift,
+        rounds=args.rounds,
     )
-    scenario = DriftScenario(
-        args.drift,
-        cfg.moe.n_experts,
-        shift_step=max(args.rounds // 2, 1),
-        window=max(args.rounds // 2, 1),
-        seed=0,
-    )
+    if runtime is None and args.controller:
+        log.info(
+            "controller disabled: arch %s has no EP-compatible MoE",
+            cfg.name,
+        )
     return runtime, scenario
 
 

@@ -260,30 +260,51 @@ def attn_prefill(params, cfg: ModelConfig, x: jax.Array, cache: dict):
 
 
 def attn_decode(params, cfg: ModelConfig, x: jax.Array, cache: dict, step: jax.Array):
-    """One-token decode against the cache.  x: [B, 1, d]; step: scalar
-    absolute position of the new token."""
+    """One-token decode against the cache.  x: [B, 1, d].
+
+    ``step`` is the new token's absolute position: a scalar (every row at
+    the same depth — the fixed-round serving loop) or a ``[B]`` int32
+    vector (continuous batching: each batch slot decodes at its own
+    depth, so cache writes scatter per row and the causal/window mask is
+    taken against per-row query positions).  The branch is static (array
+    rank), so each form compiles once and the scalar lowering is
+    unchanged."""
     b = x.shape[0]
-    positions = jnp.full((1, 1), step, jnp.int32)
+    step = jnp.asarray(step, jnp.int32)
+    per_slot = step.ndim == 1
+    positions = step[:, None] if per_slot else jnp.full((1, 1), step, jnp.int32)
     q, k_new, v_new = _qkv(params, cfg, x, positions)
     slots = cache["k"].shape[1]
-    slot = (step % slots).astype(jnp.int32) if cfg.sliding_window else step.astype(jnp.int32)
     axes = _cache_seq_axes(b, cfg.n_kv_heads)
-    k_cache = jax.lax.dynamic_update_slice(
-        cache["k"], k_new.astype(cache["k"].dtype), (0, slot, 0, 0)
-    )
-    v_cache = jax.lax.dynamic_update_slice(
-        cache["v"], v_new.astype(cache["v"].dtype), (0, slot, 0, 0)
-    )
-    pos = jax.lax.dynamic_update_slice(
-        cache["pos"], jnp.full((b, 1), step, jnp.int32), (0, slot)
-    )
+    if per_slot:
+        slot = step % slots if cfg.sliding_window else step  # [B]
+        rows = jnp.arange(b)
+        k_cache = cache["k"].at[rows, slot].set(
+            k_new[:, 0].astype(cache["k"].dtype)
+        )
+        v_cache = cache["v"].at[rows, slot].set(
+            v_new[:, 0].astype(cache["v"].dtype)
+        )
+        pos = cache["pos"].at[rows, slot].set(step)
+    else:
+        slot = (step % slots).astype(jnp.int32) if cfg.sliding_window else step.astype(jnp.int32)
+        k_cache = jax.lax.dynamic_update_slice(
+            cache["k"], k_new.astype(cache["k"].dtype), (0, slot, 0, 0)
+        )
+        v_cache = jax.lax.dynamic_update_slice(
+            cache["v"], v_new.astype(cache["v"].dtype), (0, slot, 0, 0)
+        )
+        pos = jax.lax.dynamic_update_slice(
+            cache["pos"], jnp.full((b, 1), step, jnp.int32), (0, slot)
+        )
     k_cache = shard(k_cache, *axes)
     v_cache = shard(v_cache, *axes)
 
     logits = _grouped_logits(q, k_cache)  # [B,K,G,1,T]
-    valid = pos >= 0
+    qpos = step[:, None] if per_slot else step  # [B,1] or scalar
+    valid = (pos >= 0) & (pos <= qpos)
     if cfg.sliding_window:
-        valid &= (step - pos) < cfg.sliding_window
+        valid &= (qpos - pos) < cfg.sliding_window
     logits = jnp.where(valid[:, None, None, None, :], logits, -1e30)
     w = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bkgst,btkd->bkgsd", w.astype(v_cache.dtype), v_cache)

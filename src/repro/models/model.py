@@ -187,15 +187,42 @@ class Model:
         logits = self._logits(params, x[:, -1:, :])
         return logits[:, 0], caches
 
-    def decode_step(self, params, token, caches, step, *, schedule=None):
-        """One decode step.  token: [B] int32; step: scalar position."""
+    def decode_step(
+        self, params, token, caches, step, *,
+        schedule=None, collect_stats=False, live=None,
+    ):
+        """One decode step.  token: [B] int32; step: scalar position or a
+        ``[B]`` per-slot position vector (continuous batching — each
+        batch slot decodes at its own depth; see ``attn.attn_decode``).
+
+        With ``collect_stats`` additionally returns the per-layer MoE
+        stats pytree (``routing`` ``[n_moe_layers, n_src, E]`` realized
+        counts / ``dropped``; None for MoE-free configs) — the serving
+        controller's observation signal.  ``live`` ([B] bool, optional)
+        masks vacated batch slots out of the counts so garbage tokens in
+        a static-shape decode batch never register as expert demand."""
         cfg = self.cfg
+        step = jnp.asarray(step, jnp.int32)
         x = embed_apply(params["embed"], token[:, None])
         if cfg.pos_embedding == "sinusoidal":
-            x = x + sinusoidal_pos(1, cfg.d_model, offset=step)[None]
+            if step.ndim == 1:
+                pe = jax.vmap(
+                    lambda o: sinusoidal_pos(1, cfg.d_model, offset=o)
+                )(step)  # [B, 1, d]
+                x = x + pe
+            else:
+                x = x + sinusoidal_pos(1, cfg.d_model, offset=step)[None]
         x = shard(x, "batch", None, "embed")
-        x, caches = stack.stack_decode(
-            params["stack"], cfg, x, caches, step, self._sched(schedule)
+        token_weight = (
+            None if live is None else live.astype(jnp.float32)[:, None]
         )
+        out = stack.stack_decode(
+            params["stack"], cfg, x, caches, step, self._sched(schedule),
+            collect_stats=collect_stats, token_weight=token_weight,
+        )
+        if collect_stats:
+            x, caches, stats = out
+            return self._logits(params, x)[:, 0], caches, stats
+        x, caches = out
         logits = self._logits(params, x)
         return logits[:, 0], caches

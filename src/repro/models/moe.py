@@ -155,14 +155,18 @@ def _expert_block(ctx: FabricContext, wg, wu, wd, blk, live):
 
 # --------------------------------------------------------------- pipeline
 def _pipeline_body(
-    fabric, ctx: FabricContext, x_loc, wr, wg, wu, wd, *, return_stats, ep
+    fabric, ctx: FabricContext, x_loc, wr, wg, wu, wd, *, return_stats, ep,
+    token_weight=None,
 ):
     """THE MoE pipeline — one body for every fabric.
 
     route -> pack (fabric geometry + admission) -> fabric.dispatch ->
     grouped expert GEMM per block -> fabric.combine -> weighted scatter
     back to the residual stream.  ``ep`` only selects the stats leading
-    dims (EP stats carry a (batch-shard, source-rank) prefix)."""
+    dims (EP stats carry a (batch-shard, source-rank) prefix).
+    ``token_weight`` ([t] f32, stats-only) scales each token's routing
+    count — the serving engine's slot-liveness mask, so vacated decode
+    slots never count as demand."""
     m = ctx.cfg.moe
     t = x_loc.shape[0]
     idx, gates = _router({"router": {"w": wr}}, ctx.cfg, x_loc)
@@ -177,12 +181,15 @@ def _pipeline_body(
     y_loc = _ungroup(y_slots, packed.pos, packed.gate, t)  # [t, d] f32
     if not return_stats:
         return y_loc
-    counts = _routing_counts(idx, m.n_experts)
+    counts = _routing_counts(idx, m.n_experts, weight=token_weight)
     counts = counts[None, None, :] if ep else counts[None, :]
     return y_loc, _stats(counts, packed.admitted, packed.live)
 
 
-def _moe_virtual(params, cfg: ModelConfig, x, fabric, schedule, return_stats):
+def _moe_virtual(
+    params, cfg: ModelConfig, x, fabric, schedule, return_stats,
+    token_weight=None,
+):
     """Run the pipeline without a mesh (the dense/virtual fabric)."""
     b, s, d = x.shape
     t = b * s
@@ -194,6 +201,9 @@ def _moe_virtual(params, cfg: ModelConfig, x, fabric, schedule, return_stats):
         fabric, ctx, x.reshape(t, d),
         params["router"]["w"], params["w_gate"], params["w_up"],
         params["w_down"], return_stats=return_stats, ep=False,
+        token_weight=(
+            None if token_weight is None else token_weight.reshape(t)
+        ),
     )
     if not return_stats:
         return res.astype(x.dtype).reshape(b, s, d)
@@ -201,7 +211,10 @@ def _moe_virtual(params, cfg: ModelConfig, x, fabric, schedule, return_stats):
     return y.astype(x.dtype).reshape(b, s, d), stats
 
 
-def _moe_ep_pipeline(params, cfg: ModelConfig, x, fabric, schedule, return_stats):
+def _moe_ep_pipeline(
+    params, cfg: ModelConfig, x, fabric, schedule, return_stats,
+    token_weight=None,
+):
     """Run the pipeline token-sharded under shard_map over the EP axis.
 
     One wrapper for every mesh fabric: a static ``A2ASchedule`` rides the
@@ -240,6 +253,7 @@ def _moe_ep_pipeline(params, cfg: ModelConfig, x, fabric, schedule, return_stats
     else:
         row_leaves, row_def = (), None
     rep = P()  # schedule row leaves: replicated everywhere
+    has_w = token_weight is not None
     in_specs = (
         P(batch_axes, EP_AXIS, None),  # x sequence-sharded over the EP axis
         P(None, None),  # router w
@@ -247,6 +261,8 @@ def _moe_ep_pipeline(params, cfg: ModelConfig, x, fabric, schedule, return_stats
         w_f_spec,  # w_up
         w_d_spec,  # w_down [E, f, d]
         *([rep] * len(row_leaves)),
+        # stats-only liveness weight [B, S]: sharded like x's token dims
+        *([P(batch_axes, EP_AXIS)] if has_w else []),
     )
     out_specs = P(batch_axes, EP_AXIS, None)
     if return_stats:
@@ -262,7 +278,11 @@ def _moe_ep_pipeline(params, cfg: ModelConfig, x, fabric, schedule, return_stats
             },
         )
 
-    def body(xb, wr, wg, wu, wd, *leaves):
+    def body(xb, wr, wg, wu, wd, *rest):
+        if has_w:
+            leaves, wtok = rest[:-1], rest[-1]
+        else:
+            leaves, wtok = rest, None
         sched = (
             jax.tree_util.tree_unflatten(row_def, leaves)
             if is_row
@@ -277,6 +297,7 @@ def _moe_ep_pipeline(params, cfg: ModelConfig, x, fabric, schedule, return_stats
         res = _pipeline_body(
             fabric, ctx, xb.reshape(bl * s_loc, d), wr, wg, wu, wd,
             return_stats=return_stats, ep=True,
+            token_weight=None if wtok is None else wtok.reshape(bl * s_loc),
         )
         if not return_stats:
             return res.astype(xb.dtype).reshape(bl, s_loc, d)
@@ -293,6 +314,7 @@ def _moe_ep_pipeline(params, cfg: ModelConfig, x, fabric, schedule, return_stats
         params["w_up"],
         params["w_down"],
         *row_leaves,
+        *([token_weight] if has_w else []),
     )
     if not return_stats:
         return res
@@ -348,6 +370,7 @@ def moe_apply(
     *,
     schedule=None,
     return_stats: bool = False,
+    token_weight: jax.Array | None = None,
 ):
     """Apply the MoE FFN through the fabric named by ``cfg.moe.dispatch``.
 
@@ -366,6 +389,11 @@ def moe_apply(
     path — and ``dropped`` ``[n_src]``, the count of plan-admitted
     tokens cut at packing (zero by construction on the envelope fabrics
     apart from local capacity-factor overflow).
+
+    ``token_weight`` ([B, S] f32, optional, stats-only) scales each
+    token's contribution to ``routing`` — the serving engine passes its
+    decode-slot liveness mask so vacated slots in a static-shape batch
+    never register as expert demand.  The forward values are untouched.
     """
     m = cfg.moe
     mode = m.dispatch
@@ -384,10 +412,16 @@ def moe_apply(
         fabric = get_fabric("dense")
         return _moe_virtual(
             params, cfg, x, fabric, fabric.validate_schedule(schedule, n=1),
-            return_stats,
+            return_stats, token_weight=token_weight,
         )
     fabric = resolve_fabric(mode, schedule)
     sched = fabric.validate_schedule(schedule, n=n)
     if not fabric.uses_mesh:
-        return _moe_virtual(params, cfg, x, fabric, sched, return_stats)
-    return _moe_ep_pipeline(params, cfg, x, fabric, sched, return_stats)
+        return _moe_virtual(
+            params, cfg, x, fabric, sched, return_stats,
+            token_weight=token_weight,
+        )
+    return _moe_ep_pipeline(
+        params, cfg, x, fabric, sched, return_stats,
+        token_weight=token_weight,
+    )

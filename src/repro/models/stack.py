@@ -67,11 +67,13 @@ def moe_positions(cfg: ModelConfig) -> list[int]:
     return [j for j in range(cfg.period) if cfg.ffn_kind(j) == "moe"]
 
 
-def _ffn_apply(p, cfg, j, x, schedule, collect_stats=False):
-    """Returns (y, routing-stats-or-None)."""
+def _ffn_apply(p, cfg, j, x, schedule, collect_stats=False, token_weight=None):
+    """Returns (y, routing-stats-or-None).  ``token_weight`` ([B, S] f32)
+    is the stats-only liveness weight forwarded to ``moe_apply``."""
     if cfg.ffn_kind(j) == "moe":
         out = moe_apply(
-            p["ffn"], cfg, x, schedule=schedule, return_stats=collect_stats
+            p["ffn"], cfg, x, schedule=schedule, return_stats=collect_stats,
+            token_weight=token_weight,
         )
         return out if collect_stats else (out, None)
     if cfg.ffn_gelu:
@@ -145,7 +147,15 @@ def block_prefill(p, cfg, j, x, cache, schedule):
     return x, cache
 
 
-def block_decode(p, cfg, j, x, cache, step, schedule):
+def block_decode(
+    p, cfg, j, x, cache, step, schedule, *,
+    collect_stats=False, token_weight=None,
+):
+    """One decode layer.  Returns ``(x, cache)`` by default; with
+    ``collect_stats`` returns ``(x, cache, stats)`` where stats is the
+    MoE layer's realized routing counts (None for dense FFNs / rwkv
+    channel-mix) — the serving engine's observation signal, weighted by
+    the slot-liveness mask ``token_weight``."""
     kind = cfg.layer_kind(j)
     h = rmsnorm_apply(p["ln1"], x, eps=cfg.norm_eps)
     if kind == "attn":
@@ -165,10 +175,14 @@ def block_decode(p, cfg, j, x, cache, step, schedule):
             p["mixer"], h2, state=x_cm.astype(h2.dtype)
         )
         x = x + y2
-        return x, (x_tm2.astype(x_tm.dtype), s2, x_cm2.astype(x_cm.dtype))
+        cache = (x_tm2.astype(x_tm.dtype), s2, x_cm2.astype(x_cm.dtype))
+        return (x, cache, None) if collect_stats else (x, cache)
     h = rmsnorm_apply(p["ln2"], x, eps=cfg.norm_eps)
-    x = x + _ffn_apply(p, cfg, j, h, schedule)[0]
-    return x, cache
+    y, stats = _ffn_apply(
+        p, cfg, j, h, schedule, collect_stats, token_weight
+    )
+    x = x + y
+    return (x, cache, stats) if collect_stats else (x, cache)
 
 
 # ------------------------------------------------------------------ stack
@@ -331,20 +345,53 @@ def stack_prefill(params, cfg: ModelConfig, x, caches, schedule):
     return x, caches
 
 
-def stack_decode(params, cfg: ModelConfig, x, caches, step, schedule):
+def stack_decode(
+    params, cfg: ModelConfig, x, caches, step, schedule, *,
+    collect_stats: bool = False, token_weight=None,
+):
+    """One decode step through the stack.
+
+    ``step`` is a scalar or a ``[B]`` per-slot position vector (see
+    ``attn.attn_decode``).  With ``collect_stats`` returns
+    ``(x, caches, stats)`` — the same per-layer MoE stats pytree as
+    ``stack_train`` (``routing`` ``[n_moe_layers, n_src, E]`` /
+    ``dropped`` ``[n_moe_layers, n_src]``), riding the period scan as ys
+    exactly like the train path; ``token_weight`` ([B, 1] f32) masks
+    vacated serving slots out of the counts.  Stats is None for MoE-free
+    configs."""
     shared, rows = _schedule_rows(schedule, cfg)
     positions = moe_positions(cfg)
 
     def scan_fn(carry, inp):
         pparams, pcache, prow = inp
         new = {}
+        stats = []
         for j in range(cfg.period):
-            carry, c = block_decode(
+            out = block_decode(
                 pparams[f"pos{j}"], cfg, j, carry, pcache[f"pos{j}"], step,
                 _position_schedule(prow, shared, positions, j),
+                collect_stats=collect_stats, token_weight=token_weight,
             )
+            if collect_stats:
+                carry, c, st = out
+                if st is not None:
+                    stats.append(st)
+            else:
+                carry, c = out
             new[f"pos{j}"] = c
-        return carry, new
+        return carry, (new, tuple(stats))
 
-    x, caches = jax.lax.scan(scan_fn, x, (params, caches, rows))
-    return x, caches
+    x, (caches, stats) = jax.lax.scan(scan_fn, x, (params, caches, rows))
+    if not collect_stats:
+        return x, caches
+    # stats: tuple (per MoE period position) of stat pytrees with leading
+    # [n_periods, ...] leaves; flatten to [n_moe_layers, ...] layer order
+    # (same contract as stack_train).
+    flat = [
+        jax.tree.map(lambda a, p=p: a[p], st)
+        for p in range(cfg.n_periods)
+        for st in stats
+    ]
+    if not flat:
+        return x, caches, None
+    return x, caches, jax.tree.map(lambda *ls: jnp.stack(ls), *flat)

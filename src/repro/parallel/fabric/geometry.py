@@ -297,15 +297,27 @@ def phase_slot_assign(
     return slot, admitted, tuple(bases), env_slots, n_slots, on_k, dst_k
 
 
-def routing_counts(idx: jax.Array, n_experts: int) -> jax.Array:
+def routing_counts(
+    idx: jax.Array, n_experts: int, weight: jax.Array | None = None
+) -> jax.Array:
     """Realized per-expert routing demand from [T, k] expert ids.
 
     Counts are pre-capacity-drop (the controller plans for demand, not for
     what the current schedule happened to admit) and carry no gradient —
-    top-k indices are already non-differentiable."""
-    return (
-        jnp.zeros((n_experts,), jnp.float32).at[idx.reshape(-1)].add(1.0)
-    )
+    top-k indices are already non-differentiable.
+
+    ``weight`` ([T] f32, optional) scales each token's contribution —
+    the serving engine passes its slot-liveness mask here so vacated
+    decode slots (whose garbage tokens still traverse the static-shape
+    batch) never pollute the controller's demand signal."""
+    if weight is None:
+        return (
+            jnp.zeros((n_experts,), jnp.float32).at[idx.reshape(-1)].add(1.0)
+        )
+    w = jnp.broadcast_to(
+        weight.astype(jnp.float32)[:, None], idx.shape
+    ).reshape(-1)
+    return jnp.zeros((n_experts,), jnp.float32).at[idx.reshape(-1)].add(w)
 
 
 def stats_tree(counts: jax.Array, admitted, live) -> dict:

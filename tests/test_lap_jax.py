@@ -512,6 +512,7 @@ class TestDeviceController:
         assert set(m) == {
             "steps", "device_replans", "drop_fraction", "drift_streak",
             "cooldown_left", "drop_spikes", "admitted_dropped", "link_masked",
+            "regime_library_size", "regime_warm_swaps",
         }
         assert isinstance(m["steps"], int)
         assert isinstance(m["drop_fraction"], float)
@@ -587,3 +588,118 @@ class TestDeviceTrainLoop:
             )
         with pytest.raises(ValueError, match="initial state"):
             train_loop(model, data, loop, device_controller=ctrl)
+
+
+# ------------------------------------------------------ schedule regime bank
+def _regime_ctrl(**cfg_kw):
+    """Flat-primed controller with an (empty) 2-slot regime library."""
+    rt = _runtime()
+    rt.prime(_flat_traffic()[0])
+    kw = dict(hysteresis_steps=1, cooldown=0, regime_slots=2,
+              regime_threshold=0.25)
+    kw.update(cfg_kw)
+    return DeviceController.from_runtime(rt, **kw)
+
+
+def _hot_regime_entry(ctrl, state):
+    """Cold-solve the hotspot regime once and snapshot (table, reference)
+    — the capture pattern the serving engine uses."""
+    hot = _stats_of(_hot_traffic())
+    s = state
+    for _ in range(3):
+        s = ctrl.step(s, hot)
+    assert ctrl.metrics(s)["device_replans"] >= 1
+    tab = jax.tree.map(np.asarray, ctrl.table_of(s))
+    ref = np.asarray(s.smoothed).mean(axis=0)
+    return tab, ref, hot
+
+
+class TestRegimeLibrary:
+    def test_load_regimes_validation(self):
+        rt = _runtime()
+        rt.prime(_flat_traffic()[0])
+        ctrl0, state0 = DeviceController.from_runtime(rt)
+        tab = jax.tree.map(np.asarray, ctrl0.table_of(state0))
+        ref = _flat_traffic()[0]
+        with pytest.raises(ValueError, match="regime_slots"):
+            ctrl0.load_regimes(state0, [tab], [ref])
+        ctrl, state = _regime_ctrl()
+        with pytest.raises(ValueError, match="tables vs"):
+            ctrl.load_regimes(state, [tab], [ref, ref])
+        with pytest.raises(ValueError, match="exceed regime_slots"):
+            ctrl.load_regimes(state, [tab] * 3, [ref] * 3)
+        with pytest.raises(ValueError, match="reference shape"):
+            ctrl.load_regimes(state, [tab], [np.ones((N + 1, N + 1))])
+        loaded = ctrl.load_regimes(state, [tab], [ref])
+        assert ctrl.metrics(loaded)["regime_library_size"] == 1
+
+    def test_warm_swap_replays_stored_plan_bit_identical(self):
+        ctrl, state = _regime_ctrl()
+        tab, ref, hot = _hot_regime_entry(ctrl, state)
+        state = ctrl.load_regimes(state, [tab], [ref])
+        for _ in range(3):
+            state = ctrl.step(state, hot)
+        m = ctrl.metrics(state)
+        assert m["regime_warm_swaps"] >= 1
+        np.testing.assert_array_equal(np.asarray(state.perms), tab.perms)
+        np.testing.assert_array_equal(np.asarray(state.caps), tab.caps)
+        np.testing.assert_array_equal(np.asarray(state.valid), tab.valid)
+        np.testing.assert_array_equal(
+            np.asarray(state.n_phases), tab.n_phases
+        )
+        # the warm plan absorbs the regime it was planned for
+        assert m["drop_fraction"] <= ctrl.cfg.drop_tolerance
+
+    def test_unrecognized_regime_cold_solves(self):
+        # library holds only the FLAT regime; hotspot traffic is far from
+        # it in shape, so the fire must take the cold branch
+        ctrl, state = _regime_ctrl(regime_threshold=0.05)
+        flat_tab = jax.tree.map(np.asarray, ctrl.table_of(state))
+        state = ctrl.load_regimes(
+            state, [flat_tab], [_flat_traffic()[0]]
+        )
+        hot = _stats_of(_hot_traffic())
+        for _ in range(3):
+            state = ctrl.step(state, hot)
+        m = ctrl.metrics(state)
+        assert m["device_replans"] >= 1
+        assert m["regime_warm_swaps"] == 0
+        # and the cold solve absorbed the hotspot anyway
+        assert m["drop_fraction"] <= ctrl.cfg.drop_tolerance
+
+    def test_degraded_link_mask_disables_warm_matching(self):
+        # stored plans were routed for the healthy fabric: with a dark
+        # link the fire must re-solve under the mask, not warm-swap
+        ctrl, state = _regime_ctrl()
+        tab, ref, hot = _hot_regime_entry(ctrl, state)
+        state = ctrl.load_regimes(state, [tab], [ref])
+        mask = np.ones((N, N), bool)
+        mask[0, 1] = mask[1, 0] = False
+        state = ctrl.set_link_mask(state, mask)
+        replans0 = ctrl.metrics(state)["device_replans"]
+        for _ in range(3):
+            state = ctrl.step(state, hot)
+        m = ctrl.metrics(state)
+        assert m["device_replans"] > replans0
+        assert m["regime_warm_swaps"] == 0
+
+    def test_replan_penalty_blocks_cold_but_not_warm(self):
+        hot = _stats_of(_hot_traffic())
+        # penalty above any achievable drop saving: cold fires are never
+        # worth the dark window, so the controller rides the stale plan
+        ctrl, state = _regime_ctrl(replan_penalty=0.99)
+        for _ in range(4):
+            state = ctrl.step(state, hot)
+        m = ctrl.metrics(state)
+        assert m["device_replans"] == 0
+        assert m["drop_fraction"] > ctrl.cfg.drop_tolerance  # pressure real
+        # a warm swap rides pre-established circuits (no dark window):
+        # the same penalty does not block it
+        ctrl2, state2 = _regime_ctrl(replan_penalty=0.99)
+        tab, ref, _ = _hot_regime_entry(_regime_ctrl()[0], _regime_ctrl()[1])
+        state2 = ctrl2.load_regimes(state2, [tab], [ref])
+        for _ in range(4):
+            state2 = ctrl2.step(state2, hot)
+        m2 = ctrl2.metrics(state2)
+        assert m2["regime_warm_swaps"] >= 1
+        assert m2["device_replans"] >= 1

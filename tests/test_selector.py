@@ -114,3 +114,66 @@ class TestCooldown:
         np.fill_diagonal(traffic, 0.0)
         p = sel.propose(traffic)
         assert p.action == "switch" and p.entry is b
+
+
+class TestReplanPenalty:
+    """'To reconfigure, or not': a swap's dark window must pay for itself."""
+
+    def test_comm_model_penalty_units(self):
+        import pytest
+
+        from repro.core import CommModel
+
+        m = CommModel(
+            tokens_per_us=100.0, reconf_us=0.01, replan_dark_us=10.0
+        )
+        # 10 us dark x 100 tok/us = 1000 tokens blacked out; over a
+        # 4000-token observation window that is a 0.25 drop-equivalent
+        assert m.replan_penalty(4000.0) == pytest.approx(0.25)
+        assert m.replan_penalty(0.0) == 0.0  # degenerate window
+        legacy = CommModel(tokens_per_us=100.0, reconf_us=0.01)
+        assert legacy.replan_penalty(4000.0) == 0.0  # dark window off
+        hw = CommModel.from_hardware(replan_dark_us=7.0)
+        assert hw.replan_dark_us == 7.0
+
+    def _pressured(self, penalty, n=4):
+        """Current plan 10% over a 2% tolerance: drop pressure is real,
+        but a fresh plan can save at most that 0.10."""
+        sel = ScheduleSelector(
+            n, ema=1.0, drop_tolerance=0.02, replan_penalty=penalty
+        )
+        a = _uniform_entry("a", n, cap=90)  # drop 0.10 on 100/pair
+        sel.library = [a]
+        sel.current = a
+        traffic = np.full((n, n), 100.0)
+        np.fill_diagonal(traffic, 0.0)
+        return sel, a, traffic
+
+    def test_penalty_declines_fresh_plan_for_small_drop(self):
+        sel, a, traffic = self._pressured(penalty=0.25)
+        p = sel.propose(traffic)  # saving 0.10 < dark window 0.25
+        assert p.action == "keep" and p.entry is a
+
+    def test_zero_penalty_keeps_legacy_miss(self):
+        sel, _, traffic = self._pressured(penalty=0.0)
+        assert sel.propose(traffic).action == "miss"
+
+    def test_library_switch_requires_saving_above_penalty(self):
+        n = 4
+        traffic = np.full((n, n), 100.0)
+        np.fill_diagonal(traffic, 0.0)
+        for penalty, action in [(0.05, "keep"), (0.03, "switch")]:
+            sel = ScheduleSelector(
+                n, ema=1.0, drop_tolerance=0.06, replan_penalty=penalty
+            )
+            a = _uniform_entry("a", n, cap=90)  # drop 0.10
+            b = _uniform_entry("b", n, cap=94)  # drop 0.06: saves 0.04
+            sel.library = [a, b]
+            sel.current = a
+            assert sel.propose(traffic).action == action
+
+    def test_negative_penalty_rejected(self):
+        import pytest
+
+        with pytest.raises(ValueError, match="replan_penalty"):
+            ScheduleSelector(4, replan_penalty=-0.1)
